@@ -1,0 +1,102 @@
+"""Shared benchmark machinery: the paper's RE% metric, method sweeps,
+ground-truth pools, timing."""
+
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.cameo import Cameo, Dataset
+from repro.core.baselines import make_baseline
+from repro.core.query import parse_query
+
+FULL = os.environ.get("REPRO_BENCH_FULL", "") == "1"
+
+METHODS = ["smac", "cello", "restune-w/o-ml", "unicorn", "restune", "cameo"]
+
+
+def ground_truth(env, n: int = 2000, seed: int = 99) -> float:
+    """The paper's Y_opt: best measured value over a 2000-sample pool."""
+    n = n if FULL else 600
+    rng = np.random.default_rng(seed)
+    best = np.inf
+    for cfg in env.space.sample(rng, n):
+        _, y = env.intervene(cfg)
+        if np.isfinite(y) and y < best:
+            best = y
+    return float(best)
+
+
+def relative_error(y: float, y_opt: float) -> float:
+    if not np.isfinite(y):
+        return 1000.0
+    return abs(y - y_opt) / abs(y_opt) * 100.0
+
+
+def run_method(method: str, source_env, target_env, *, budget: int,
+               n_source: int, objective: str = "step_time", seed: int = 0,
+               l_alpha: float = 0.1, n_target_init: int = 5
+               ) -> Tuple[float, List[float], Dict]:
+    """Returns (best_y, best-so-far trace, extras)."""
+    d_s = source_env.dataset(n_source, seed=seed + 1)
+    if method == "cameo":
+        q = parse_query(f"minimize {objective} within {budget} samples")
+        cam = Cameo(source_env.space, q, d_s,
+                    counter_names=source_env.counter_names, seed=seed,
+                    l_alpha=l_alpha)
+        cam.seed_target(target_env.dataset(n_target_init, seed=seed + 2))
+        t0 = time.perf_counter()
+        _, y = cam.run(target_env, budget)
+        wall = time.perf_counter() - t0
+        return y, list(cam.trace.best_y), {
+            "model_update_s": float(np.mean(cam.trace.model_update_s or [0])),
+            "recommend_s": float(np.mean(cam.trace.recommend_s or [0])),
+            "wall_s": wall, "k": cam.k}
+    tuner = make_baseline(method, target_env.space, d_s,
+                          counter_names=source_env.counter_names, seed=seed)
+    t0 = time.perf_counter()
+    _, y = tuner.run(target_env, budget)
+    wall = time.perf_counter() - t0
+    return y, list(tuner.trace.best_y), {"wall_s": wall}
+
+
+def sweep(methods: Sequence[str], source_env, target_env, *, budget: int,
+          n_source: int, seeds: Sequence[int], objective: str = "step_time",
+          y_opt: Optional[float] = None) -> Dict[str, Dict]:
+    """Fairness contract: every (method, seed) run gets a FRESH copy of both
+    environments with an identical measurement-noise stream — the analytic
+    env's noise RNG is stateful, so sharing one instance across methods
+    makes results depend on run order."""
+    import copy
+
+    if y_opt is None:
+        y_opt = ground_truth(copy.deepcopy(target_env))
+    out = {}
+    for m in methods:
+        res, walls = [], []
+        for s in seeds:
+            src = copy.deepcopy(source_env)
+            tgt = copy.deepcopy(target_env)
+            for env, off in ((src, 0), (tgt, 1)):
+                env._rng = np.random.default_rng(7919 * s + off)
+                env._pool_rng = np.random.default_rng(104729 * s + off)
+                env._pool = []
+            y, _, extras = run_method(m, src, tgt,
+                                      budget=budget, n_source=n_source,
+                                      objective=objective, seed=s)
+            res.append(relative_error(y, y_opt))
+            walls.append(extras["wall_s"])
+        out[m] = {"re_mean": float(np.mean(res)),
+                  "re_std": float(np.std(res)),
+                  "wall_s": float(np.mean(walls))}
+    return out
+
+
+def print_table(title: str, rows: Dict[str, Dict], key: str = "re_mean"):
+    print(f"\n== {title} ==")
+    for m, r in sorted(rows.items(), key=lambda kv: kv[1][key]):
+        print(f"  {m:16s} RE%={r['re_mean']:7.2f} ± {r['re_std']:5.2f}  "
+              f"({r['wall_s']:.1f}s)")

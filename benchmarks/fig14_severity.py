@@ -1,0 +1,60 @@
+"""Fig 14: effectiveness under increasing severity of environmental change
+(low = hardware only, medium = hardware+topology, high = everything),
+CAMEO vs ResTune (the strongest baseline)."""
+
+from __future__ import annotations
+
+import time
+from dataclasses import replace
+
+import numpy as np
+
+from benchmarks.common import ground_truth, print_table, sweep
+from repro.envs.analytic import AnalyticTPUEnv, PaddedAnalyticEnv, TPUEnvSpec
+
+
+def _pair(severity: str, seed=0):
+    base = TPUEnvSpec()
+    if severity == "low":       # hardware only
+        tgt = replace(base, hardware="tpu_v4_like")
+    elif severity == "medium":  # hardware + topology
+        tgt = replace(base, hardware="tpu_v4_like", chips=512, cross_pod=True)
+    else:                       # high: hardware + topology + workload + arch
+        tgt = replace(base, arch="command-r-35b", hardware="tpu_v4_like",
+                      seq_len=32768, global_batch=64, chips=512,
+                      cross_pod=True)
+    return (PaddedAnalyticEnv(base, 16, seed=seed),
+            PaddedAnalyticEnv(tgt, 16, seed=seed + 1))
+
+
+def _dataset_kl(src, tgt, n=300):
+    ys = np.asarray([y for y in src.dataset(n, seed=5).ys if np.isfinite(y)])
+    yt = np.asarray([y for y in tgt.dataset(n, seed=6).ys if np.isfinite(y)])
+    lo, hi = min(ys.min(), yt.min()), max(ys.max(), yt.max())
+    p, _ = np.histogram(ys, bins=20, range=(lo, hi))
+    q, _ = np.histogram(yt, bins=20, range=(lo, hi))
+    p = (p + 1e-6) / p.sum()
+    q = (q + 1e-6) / q.sum()
+    return float(np.sum(p * np.log(p / q)))
+
+
+def main(fast: bool = True):
+    t0 = time.perf_counter()
+    budget = 20 if fast else 60
+    seeds = [0, 1, 2]
+    gains = {}
+    for severity in ["low", "medium", "high"]:
+        src, tgt = _pair(severity)
+        kl = _dataset_kl(src, tgt)
+        rows = sweep(["restune", "cameo"], src, tgt, budget=budget,
+                     n_source=300 if fast else 500, seeds=seeds)
+        print_table(f"Fig 14: severity={severity} (KL={kl:.1f})", rows)
+        gains[severity] = (rows["restune"]["re_mean"] /
+                           max(rows["cameo"]["re_mean"], 1e-9))
+    us = (time.perf_counter() - t0) * 1e6
+    return [("fig14_severity", us,
+             ",".join(f"{k}={v:.2f}x" for k, v in gains.items()))]
+
+
+if __name__ == "__main__":
+    main(fast=False)

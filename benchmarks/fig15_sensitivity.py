@@ -1,0 +1,49 @@
+"""Fig 15: sensitivity of CAMEO to (i) the number of source samples and
+(ii) the acquisition threshold l_alpha."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import ground_truth, relative_error, run_method
+from repro.envs.analytic import environment_pair
+
+
+def main(fast: bool = True):
+    t0 = time.perf_counter()
+    budget = 25 if fast else 50
+    src, tgt = environment_pair("hardware", seed=0)
+    y_opt = ground_truth(tgt)
+
+    print("\n== Fig 15 (left): sensitivity to n_source ==")
+    ns = [30, 100, 300] if fast else [30, 100, 300, 1000, 3000]
+    n_res = {}
+    for n in ns:
+        res = []
+        for m in ["cameo", "restune"]:
+            y, _, _ = run_method(m, src, tgt, budget=budget, n_source=n,
+                                 seed=0)
+            res.append((m, relative_error(y, y_opt)))
+        n_res[n] = dict(res)
+        print(f"  n_source={n:5d}  " +
+              "  ".join(f"{m}={v:6.2f}%" for m, v in res))
+
+    print("\n== Fig 15 (right): sensitivity to l_alpha ==")
+    las = [0.02, 0.1, 0.4] if fast else [0.01, 0.05, 0.1, 0.2, 0.4, 0.8]
+    la_res = {}
+    for la in las:
+        y, _, _ = run_method("cameo", src, tgt, budget=budget, n_source=300,
+                             seed=0, l_alpha=la)
+        la_res[la] = relative_error(y, y_opt)
+        print(f"  l_alpha={la:4.2f}  cameo RE%={la_res[la]:6.2f}")
+
+    best_la = min(la_res, key=la_res.get)
+    us = (time.perf_counter() - t0) * 1e6
+    return [("fig15_sensitivity", us,
+             f"best_l_alpha={best_la},re={la_res[best_la]:.2f}%")]
+
+
+if __name__ == "__main__":
+    main(fast=False)

@@ -1,0 +1,105 @@
+"""Per-kernel microbenchmarks: oracle wall time on CPU (ref path, jitted)
+plus the modeled TPU kernel time from the analytic VMEM-roofline of each
+BlockSpec tiling.  One row per (kernel x shape) cell.
+
+This is the kernels/ companion to the system-level roofline: it sanity-
+checks that the chosen block shapes keep each kernel's working set inside
+VMEM (<= ~128 MiB per core) and reports the compute/memory balance of the
+tile the Pallas kernel executes.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from repro.utils.hardware import TPU_V5E
+
+VMEM = TPU_V5E.vmem_bytes
+
+
+def _time(fn, *args, iters=3) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def _attn_row(b, s, hq, hkv, d, q_block, kv_block):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(b, s, hq, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, s, hkv, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, s, hkv, d)).astype(np.float32))
+    fn = jax.jit(lambda q, k, v: ops.flash_attention(
+        q, k, v, causal=True, q_block=q_block, kv_block=kv_block))
+    us = _time(fn, q, k, v)
+    # per-tile VMEM: q block + kv block + acc + stats (f32)
+    tile = (q_block * d + 2 * kv_block * d + q_block * d + 2 * q_block * 128) * 4
+    flops = 4.0 * b * hq * s * s * d / 2  # causal half
+    t_tpu = max(flops / TPU_V5E.peak_flops_bf16,
+                (q.nbytes + k.nbytes + v.nbytes) * (s // q_block)
+                / TPU_V5E.hbm_bandwidth)
+    return (f"flash_attention/s{s}_qb{q_block}_kb{kv_block}", us,
+            f"tile_vmem={tile/2**20:.1f}MiB<=128,fits={tile<=VMEM},"
+            f"tpu_model_us={t_tpu*1e6:.0f}")
+
+
+def _scan_row(b, l, c, n, chunk):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(b, l, c)).astype(np.float32))
+    dt = jnp.abs(x) * 0.05
+    A = -jnp.abs(jnp.asarray(rng.normal(size=(c, n)).astype(np.float32)))
+    B = jnp.asarray(rng.normal(size=(b, l, n)).astype(np.float32))
+    C = jnp.asarray(rng.normal(size=(b, l, n)).astype(np.float32))
+    D = jnp.ones((c,), jnp.float32)
+    fn = jax.jit(lambda *a: ops.selective_scan(*a, chunk=chunk))
+    us = _time(fn, x, dt, A, B, C, D)
+    tile = (chunk * 512 * 2 + 512 * n + 2 * chunk * n) * 4
+    return (f"selective_scan/l{l}_chunk{chunk}", us,
+            f"tile_vmem={tile/2**20:.2f}MiB,fits={tile<=VMEM}")
+
+
+def _ssd_row(b, l, h, p, n, chunk):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(b, l, h, p)).astype(np.float32))
+    dt = jnp.abs(jnp.asarray(rng.normal(size=(b, l, h)).astype(np.float32))) * 0.05
+    A = -jnp.abs(jnp.asarray(rng.normal(size=(h,)).astype(np.float32)))
+    B = jnp.asarray(rng.normal(size=(b, l, 1, n)).astype(np.float32))
+    C = jnp.asarray(rng.normal(size=(b, l, 1, n)).astype(np.float32))
+    D = jnp.ones((h,), jnp.float32)
+    fn = jax.jit(lambda *a: ops.ssd(*a, chunk=chunk))
+    us = _time(fn, x, dt, A, B, C, D)
+    tile = (chunk * p + 2 * chunk * n + chunk * chunk + n * p) * 4
+    return (f"ssd/l{l}_chunk{chunk}", us,
+            f"tile_vmem={tile/2**20:.2f}MiB,fits={tile<=VMEM}")
+
+
+def main(fast: bool = True) -> List[Tuple[str, float, str]]:
+    rows = []
+    attn_shapes = [(1, 256, 8, 2, 64, 128, 128), (1, 512, 8, 2, 64, 256, 256)]
+    if not fast:
+        attn_shapes.append((1, 2048, 16, 4, 64, 512, 1024))
+    for shp in attn_shapes:
+        rows.append(_attn_row(*shp))
+    for shp in ([(1, 512, 64, 16, 128)] if fast
+                else [(1, 512, 64, 16, 128), (2, 2048, 256, 16, 256)]):
+        rows.append(_scan_row(*shp))
+    for shp in ([(1, 256, 4, 32, 32, 64)] if fast
+                else [(1, 256, 4, 32, 32, 64), (2, 1024, 8, 64, 64, 128)]):
+        rows.append(_ssd_row(*shp))
+    print("\n== kernel microbenchmarks (CPU oracle time + TPU tile model) ==")
+    for name, us, derived in rows:
+        print(f"  {name:42s} {us:9.0f} us  {derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    main(fast=False)

@@ -1,0 +1,32 @@
+"""§Roofline deliverable: the per-(arch x shape) three-term roofline table
+from the dry-run artifacts (single-pod mesh, per the task spec)."""
+
+from __future__ import annotations
+
+import time
+
+from repro.launch.roofline import format_table, load_records, roofline_from_record
+
+
+def main(fast: bool = True):
+    t0 = time.perf_counter()
+    recs = load_records("*__pod.json")
+    if not recs:
+        print("  (no dry-run artifacts; run `python -m repro.launch.dryrun "
+              "--all` first)")
+        return [("roofline", 0.0, "no-artifacts")]
+    rows = [roofline_from_record(r) for r in recs]
+    rows.sort(key=lambda r: (r.arch, r.shape))
+    print("\n== Roofline (single-pod 16x16, per-chip terms, TPU v5e) ==")
+    print(format_table(rows))
+    dominant = {}
+    for r in rows:
+        dominant[r.dominant] = dominant.get(r.dominant, 0) + 1
+    us = (time.perf_counter() - t0) * 1e6
+    return [("roofline", us,
+             "cells=" + str(len(rows)) + ","
+             + ",".join(f"{k}-bound={v}" for k, v in sorted(dominant.items())))]
+
+
+if __name__ == "__main__":
+    main(fast=False)

@@ -1,0 +1,52 @@
+"""Benchmark orchestrator: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV at the end (plus the human-readable
+tables as it goes).  ``REPRO_BENCH_FULL=1`` runs paper-scale budgets/seeds.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import traceback
+
+FAST = os.environ.get("REPRO_BENCH_FULL", "") != "1"
+
+MODULES = [
+    "benchmarks.table2_generalization",
+    "benchmarks.table3_effectiveness",
+    "benchmarks.table4_config_recovery",
+    "benchmarks.fig5_mb_pruning",
+    "benchmarks.fig14_severity",
+    "benchmarks.fig15_sensitivity",
+    "benchmarks.fig16_scalability",
+    "benchmarks.table16_constrained",
+    "benchmarks.kernels_bench",
+    "benchmarks.roofline",
+]
+
+
+def main() -> int:
+    import importlib
+
+    rows = []
+    failures = []
+    for name in MODULES:
+        print(f"\n######## {name} ########")
+        try:
+            mod = importlib.import_module(name)
+            rows.extend(mod.main(fast=FAST))
+        except Exception as e:
+            failures.append((name, repr(e)))
+            traceback.print_exc()
+    print("\nname,us_per_call,derived")
+    for r in rows:
+        print(f"{r[0]},{r[1]:.0f},{r[2]}")
+    if failures:
+        print("\nFAILURES:", failures, file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

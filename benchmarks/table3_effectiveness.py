@@ -1,0 +1,50 @@
+"""Table 3 + Figs 8-11: effectiveness of CAMEO vs the five baselines across
+the four environmental-change axes (hardware / workload / software /
+deployment topology), for the latency-like (step_time) and energy
+objectives — RE% against the 2000-sample ground-truth pool."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import (FULL, METHODS, ground_truth, print_table,
+                               sweep)
+from repro.envs.analytic import environment_pair
+
+CHANGES = ["hardware", "workload", "software", "topology"]
+
+
+def main(fast: bool = True):
+    t0 = time.perf_counter()
+    budget = 20 if fast else 60
+    n_source = 300 if fast else 500
+    seeds = [0, 1, 2, 3, 4]
+    summary = {m: [] for m in METHODS}
+
+    for objective in (["step_time"] if fast else ["step_time", "energy"]):
+        for change in CHANGES:
+            src, tgt = environment_pair(change, seed=0)
+            src.objective = tgt.objective = objective
+            rows = sweep(METHODS, src, tgt, budget=budget,
+                         n_source=n_source, seeds=seeds, objective=objective)
+            print_table(f"Table 3 [{objective}] {change} change", rows)
+            for m in METHODS:
+                summary[m].append(rows[m]["re_mean"])
+
+    print("\n== Table 3 summary (mean RE% over environmental changes) ==")
+    order = sorted(METHODS, key=lambda m: np.mean(summary[m]))
+    for m in order:
+        print(f"  {m:16s} {np.mean(summary[m]):7.2f}%")
+    cameo_re = float(np.mean(summary["cameo"]))
+    best_baseline = min(float(np.mean(summary[m])) for m in METHODS
+                        if m != "cameo")
+    us = (time.perf_counter() - t0) * 1e6
+    return [("table3_effectiveness", us,
+             f"cameo={cameo_re:.1f}%,best_baseline={best_baseline:.1f}%,"
+             f"gain={best_baseline / max(cameo_re, 1e-9):.2f}x")]
+
+
+if __name__ == "__main__":
+    main(fast=False)

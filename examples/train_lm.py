@@ -1,0 +1,78 @@
+"""End-to-end training driver: a ~100M-parameter llama-style model trained
+for a few hundred steps on the synthetic Markov stream through the full
+production stack — data pipeline, fault-tolerant driver, async atomic
+checkpointing, restart-and-resume.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+    PYTHONPATH=src python examples/train_lm.py --steps 300 --inject-fault 120
+
+The second form kills the step at 120 and demonstrates that the driver
+restores from the latest checkpoint and continues to an identical loss
+trajectory.
+"""
+
+import argparse
+import shutil
+
+import jax
+
+from repro import ModelConfig, RunConfig, TrainConfig, build_model
+from repro.checkpoint import CheckpointManager
+from repro.data import make_data
+from repro.runtime import FaultInjector, TrainDriver
+from repro.train.optimizer import make_optimizer
+from repro.train.train_step import init_train_state, make_train_step
+from repro.utils.config import MeshConfig, ShapeConfig
+from repro.utils.logging import MetricsLogger
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--inject-fault", type=int, default=0,
+                    help="inject a crash at this step to demo restart")
+    ap.add_argument("--fresh", action="store_true")
+    args = ap.parse_args()
+    if args.fresh:
+        shutil.rmtree(args.ckpt_dir, ignore_errors=True)
+
+    cfg = ModelConfig(
+        name="llama-110m", family="dense", num_layers=8, d_model=512,
+        num_heads=8, num_kv_heads=4, d_ff=2048, vocab_size=8192,
+        rope_theta=10000.0, dtype="float32")
+    run = RunConfig(
+        model=cfg,
+        shape=ShapeConfig("train", seq_len=args.seq, global_batch=args.batch,
+                          kind="train"),
+        mesh=MeshConfig(shape=(1,), axes=("data",)),
+        train=TrainConfig(lr=6e-4, warmup_steps=50, total_steps=args.steps),
+        checkpoint_dir=args.ckpt_dir, checkpoint_every=50, log_every=10,
+    )
+    print(f"model: {cfg.name} ({cfg.param_count()/1e6:.0f}M params), "
+          f"{args.steps} steps @ batch {args.batch} x seq {args.seq}")
+
+    model = build_model(cfg, run.parallel)
+    optimizer = make_optimizer(run.train)
+    train_step = jax.jit(make_train_step(model, run, optimizer))
+
+    def init_state():
+        return init_train_state(model, run, optimizer, jax.random.PRNGKey(0))
+
+    driver = TrainDriver(
+        run, train_step, init_state,
+        make_data(cfg, run.shape, seed=0),
+        CheckpointManager(args.ckpt_dir, keep=run.keep_checkpoints),
+        logger=MetricsLogger(path=f"{args.ckpt_dir}/metrics.jsonl",
+                             name="train_lm"),
+        fault_injector=(FaultInjector([args.inject_fault])
+                        if args.inject_fault else None),
+    )
+    state = driver.run_steps(args.steps)
+    print(f"done at step {int(state.step)}; restarts: {driver.restarts}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""CAMEO tuning the framework itself — the paper's technique as a
+first-class feature.
+
+Source environment: the cheap analytic TPU model (staging).
+Target environment: either another analytic environment (default; runs in
+seconds) or the real compiled dry-run backend (--compiled; each intervention
+lowers + compiles the actual step for the production mesh, ~10-60 s each).
+
+    PYTHONPATH=src python examples/transfer_tuning.py
+    PYTHONPATH=src python examples/transfer_tuning.py --change topology
+    PYTHONPATH=src python examples/transfer_tuning.py \
+        --compiled --arch llama3.2-1b --shape train_4k --budget 8
+"""
+
+import argparse
+
+import numpy as np
+
+from repro.envs.analytic import environment_pair
+from repro.tuner.runner import transfer_tune
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--change", default="hardware",
+                    choices=["hardware", "workload", "software", "topology",
+                             "severe"])
+    ap.add_argument("--budget", type=int, default=40)
+    ap.add_argument("--methods", default="cameo,restune,smac")
+    ap.add_argument("--compiled", action="store_true",
+                    help="tune the real compiled dry-run backend")
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--shape", default="train_4k")
+    args = ap.parse_args()
+
+    if args.compiled:
+        from repro.tuner.compiled_env import CompiledPerfEnv, make_aligned_source
+
+        src = make_aligned_source(args.arch, seed=0)
+        tgt = CompiledPerfEnv(args.arch, args.shape)
+        print(f"target: compiled {args.arch} x {args.shape} "
+              f"(each intervention = one XLA compile)")
+    else:
+        src, tgt = environment_pair(args.change, seed=0)
+        print(f"environment change: {args.change}")
+
+    for method in args.methods.split(","):
+        res = transfer_tune(method, src, tgt, budget=args.budget,
+                            n_source=300, seed=0)
+        print(f"\n[{method}] best objective: {res.best_y:.5g} "
+              f"({res.wall_s:.1f}s)")
+        print(f"  config: {res.best_config}")
+        if res.extras:
+            print(f"  reduced space: {res.extras.get('reduced_space')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""repro — a production-grade JAX training/serving framework with CAMEO
+(causal transfer-learning performance optimization) as a first-class
+feature."""
+
+from repro.models.model import build_model, count_params_analytic  # noqa: F401
+from repro.train.optimizer import Optimizer, make_optimizer  # noqa: F401
+from repro.train.train_step import (  # noqa: F401
+    TrainState, init_train_state, make_train_step)
+from repro.train.serve_step import (  # noqa: F401
+    ServeState, generate, make_decode_step, make_prefill_step)
+from repro.utils.config import (  # noqa: F401
+    MeshConfig, ModelConfig, ParallelConfig, RunConfig, ShapeConfig,
+    TrainConfig)
+from repro.utils.hardware import TPU_V4_LIKE, TPU_V5E, HardwareSpec  # noqa: F401

@@ -1,0 +1,179 @@
+"""Atomic, async, keep-k checkpoint manager with cross-mesh restore.
+
+Production properties this implements:
+
+- **Atomicity** — a checkpoint is written into ``step_N.tmp.<pid>`` and
+  renamed to ``step_N`` only after every array and the metadata manifest are
+  flushed; a crash mid-save can never leave a readable-but-corrupt latest
+  checkpoint (the restart scans only completed directories).
+- **Async save** — ``save()`` snapshots device arrays to host (blocking only
+  for the device->host copy) and hands serialization to a background thread,
+  overlapping checkpoint I/O with the next training steps. ``wait()`` joins.
+- **Keep-k GC** — old checkpoints are deleted only after a newer one is
+  durable.
+- **Cross-mesh restore (elastic scaling)** — ``restore(..., shardings=)``
+  device_puts every leaf with the *target* sharding, so a checkpoint written
+  on a 512-chip mesh restores onto a 256-chip mesh (or any other reshape)
+  without a resharding job.
+- **Integrity** — each leaf records shape/dtype in the manifest; mismatches
+  fail loudly at restore instead of silently reinterpreting bytes.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.utils.trees import flatten_with_paths
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # -- save --------------------------------------------------------------
+
+    def save(self, step: int, tree: Any, extra: Optional[Dict] = None,
+             blocking: bool = False) -> None:
+        """Snapshot `tree` (pytree of arrays) at `step` and persist it."""
+        self.wait()  # one outstanding save at a time
+        flat = flatten_with_paths(tree)
+        host = {k: np.asarray(v) for k, v in flat.items()}  # device -> host
+        meta = {
+            "step": int(step),
+            "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                       for k, v in host.items()},
+            "extra": extra or {},
+        }
+
+        def _write():
+            tmp = os.path.join(self.directory, f"step_{step}.tmp.{os.getpid()}")
+            final = os.path.join(self.directory, f"step_{step}")
+            os.makedirs(tmp, exist_ok=True)
+            try:
+                for k, v in host.items():
+                    fn = os.path.join(tmp, _leaf_file(k))
+                    with open(fn, "wb") as f:
+                        # numpy can't serialize ml_dtypes (bf16/fp8): store
+                        # the raw bits; the manifest dtype restores the view
+                        if v.dtype.kind == "V" or "bfloat16" in str(v.dtype) \
+                                or "float8" in str(v.dtype):
+                            np.save(f, v.view(
+                                f"u{v.dtype.itemsize}" if v.dtype.itemsize in (1, 2)
+                                else "u2"))
+                        else:
+                            np.save(f, v)
+                        f.flush()
+                        os.fsync(f.fileno())
+                with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                    json.dump(meta, f)
+                    f.flush()
+                    os.fsync(f.fileno())
+                if os.path.exists(final):
+                    shutil.rmtree(final)
+                os.rename(tmp, final)  # the atomic commit point
+                self._gc()
+            except BaseException as e:  # surfaced on next wait()/save()
+                self._error = e
+                shutil.rmtree(tmp, ignore_errors=True)
+
+        if blocking:
+            _write()
+            self._raise_pending()
+        else:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        self._raise_pending()
+
+    def _raise_pending(self):
+        if self._error is not None:
+            e, self._error = self._error, None
+            raise e
+
+    # -- restore -----------------------------------------------------------
+
+    def all_steps(self) -> List[int]:
+        steps = []
+        for name in os.listdir(self.directory):
+            m = _STEP_RE.match(name)
+            if m and os.path.exists(os.path.join(self.directory, name, "manifest.json")):
+                steps.append(int(m.group(1)))
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, target: Any, shardings: Any = None) -> Any:
+        """Restore into the structure of `target` (pytree of arrays or
+        ShapeDtypeStructs). `shardings`: matching pytree of Shardings (or
+        None) — this is where elastic re-meshing happens."""
+        self.wait()
+        d = os.path.join(self.directory, f"step_{step}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            meta = json.load(f)
+
+        flat_target = flatten_with_paths(target)
+        flat_shardings = (flatten_with_paths(shardings)
+                          if shardings is not None else {})
+        out: Dict[str, Any] = {}
+        for k, spec in flat_target.items():
+            if k not in meta["leaves"]:
+                raise KeyError(f"checkpoint {step} missing leaf {k}")
+            rec = meta["leaves"][k]
+            arr = np.load(os.path.join(d, _leaf_file(k)))
+            if str(arr.dtype) != rec["dtype"]:
+                # bit-stored ml_dtypes leaf: reinterpret via the manifest
+                import ml_dtypes  # noqa: F401  (registers the dtypes)
+                arr = arr.view(np.dtype(rec["dtype"]))
+            if list(arr.shape) != rec["shape"] or str(arr.dtype) != rec["dtype"]:
+                raise ValueError(f"leaf {k}: manifest/file mismatch")
+            if tuple(arr.shape) != tuple(spec.shape):
+                raise ValueError(
+                    f"leaf {k}: checkpoint shape {arr.shape} != target {spec.shape}")
+            sh = flat_shardings.get(k)
+            out[k] = jax.device_put(arr, sh) if sh is not None else jax.device_put(arr)
+
+        leaves_in_order = []
+        paths = jax.tree_util.tree_flatten_with_path(target)[0]
+        treedef = jax.tree_util.tree_structure(target)
+        from repro.utils.trees import _path_str
+        for path, _ in paths:
+            key = "/".join(_path_str(p) for p in path)
+            leaves_in_order.append(out[key])
+        return jax.tree_util.tree_unflatten(treedef, leaves_in_order)
+
+    def restore_extra(self, step: int) -> Dict:
+        d = os.path.join(self.directory, f"step_{step}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            return json.load(f)["extra"]
+
+    # -- gc ------------------------------------------------------------------
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep > 0 else []:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s}"),
+                          ignore_errors=True)
+
+
+def _leaf_file(key: str) -> str:
+    return key.replace("/", "__") + ".npy"

@@ -1,0 +1,13 @@
+from repro.configs.registry import (  # noqa: F401
+    all_cells,
+    arch_shapes,
+    default_parallel,
+    default_train_config,
+    get_model_config,
+    get_smoke_config,
+    input_specs,
+    list_archs,
+    make_run,
+    runnable_cells,
+)
+from repro.configs.shapes import SHAPES, SMOKE_SHAPES  # noqa: F401

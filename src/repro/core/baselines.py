@@ -1,0 +1,288 @@
+"""Baseline tuners: SMAC, CELLO, Unicorn, ResTune, ResTune-w/o-ML (+ random
+search).
+
+Faithful algorithmic re-implementations at the level the paper compares on
+(surrogate + acquisition + transfer mechanism), sharing one ``run(env,
+budget)`` interface with CAMEO:
+
+- SMAC            — sequential model-based optimization: random-forest
+                    surrogate + EI, interleaved random configs.
+- ResTune-w/o-ML  — GP-BO learned from scratch in the target.
+- ResTune         — meta-learning ensemble: source GP + target GP combined
+                    with ranking-accuracy weights on target observations.
+- CELLO           — GP-BO with predictive early termination (censored
+                    observations at reduced budget cost).
+- Unicorn         — transfers the source causal model *directly* (no
+                    Markov-blanket pruning) and fits its surrogate on pooled
+                    source+target data, updating actively; the source bias
+                    must be unlearned, which is the contrast CAMEO's
+                    two-model design removes.
+
+All baselines treat infeasible measurements as +inf (constraint handling is
+shared through the environment/query, as in the paper).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.acquisition import expected_improvement
+from repro.core.cameo import Dataset
+from repro.core.cgp import CausalGP
+from repro.core.discovery import fci_lite
+from repro.core.forest import RandomForest
+from repro.core.gp import fit_gp, gp_predict
+from repro.core.markov_blanket import top_k_blanket
+from repro.core.ace import rank_by_ace
+from repro.core.spaces import ConfigSpace
+
+
+@dataclass
+class Trace:
+    best_y: List[float] = field(default_factory=list)
+    spent: List[float] = field(default_factory=list)
+
+
+def _finite_best(ys: np.ndarray) -> float:
+    f = ys[np.isfinite(ys)]
+    return float(f.min()) if len(f) else math.inf
+
+
+def _clean(ys: np.ndarray) -> np.ndarray:
+    """Replace inf (infeasible) with a pessimistic finite value for fitting."""
+    f = ys[np.isfinite(ys)]
+    worst = float(f.max()) if len(f) else 1.0
+    return np.where(np.isfinite(ys), ys, worst + abs(worst) + 1.0)
+
+
+class BaseTuner:
+    name = "base"
+
+    def __init__(self, space: ConfigSpace, seed: int = 0,
+                 candidates: int = 256, init_random: int = 5):
+        self.space = space
+        self.rng = np.random.default_rng(seed)
+        self.cand_n = candidates
+        self.init_random = init_random
+        self.xs: List[Dict] = []
+        self.ys: List[float] = []
+        self.trace = Trace()
+
+    # -- subclass hooks ---------------------------------------------------
+
+    def _fit(self, x: np.ndarray, y: np.ndarray) -> None:
+        raise NotImplementedError
+
+    def _score(self, xq: np.ndarray, best: float) -> np.ndarray:
+        raise NotImplementedError
+
+    # -- shared loop --------------------------------------------------------
+
+    def propose(self) -> Dict:
+        if len(self.ys) < self.init_random:
+            return self.space.sample(self.rng, 1)[0]
+        x = np.stack([self.space.encode(c) for c in self.xs])
+        y = _clean(np.asarray(self.ys))
+        self._fit(x, y)
+        cands = self.space.sample(self.rng, self.cand_n)
+        if np.isfinite(_finite_best(np.asarray(self.ys))):
+            i = int(np.argmin(_clean(np.asarray(self.ys))))
+            cands.extend(self.space.neighbors(self.xs[i], self.rng, 16))
+        xq = np.stack([self.space.encode(c) for c in cands])
+        scores = self._score(xq, _finite_best(np.asarray(self.ys)))
+        return cands[int(np.argmax(scores))]
+
+    def update(self, config: Dict, counters: Dict, y: float) -> None:
+        self.xs.append(dict(config))
+        self.ys.append(float(y))
+
+    def run(self, env, budget: float) -> Tuple[Dict, float]:
+        spent = 0.0
+        while spent < budget:
+            cfg = self.propose()
+            counters, y = env.intervene(cfg)
+            self.update(cfg, counters, y)
+            spent += 1.0
+            self.trace.best_y.append(_finite_best(np.asarray(self.ys)))
+            self.trace.spent.append(spent)
+        return self.best
+
+    @property
+    def best(self) -> Tuple[Optional[Dict], float]:
+        ys = np.asarray(self.ys)
+        if not len(ys) or not np.isfinite(ys).any():
+            return None, math.inf
+        i = int(np.argmin(_clean(ys)))
+        return self.xs[i], float(ys[i])
+
+
+class RandomSearch(BaseTuner):
+    name = "random"
+
+    def propose(self) -> Dict:
+        return self.space.sample(self.rng, 1)[0]
+
+
+class SMAC(BaseTuner):
+    """Random-forest surrogate + EI (Hutter et al. 2011)."""
+    name = "smac"
+
+    def _fit(self, x, y):
+        self._rf = RandomForest(seed=int(self.rng.integers(1 << 31))).fit(x, y)
+
+    def _score(self, xq, best):
+        mu, sd = self._rf.predict(xq)
+        return expected_improvement(mu, sd, best)
+
+
+class ResTuneWoML(BaseTuner):
+    """GP-BO from scratch in the target (ResTune without meta-learning)."""
+    name = "restune-w/o-ml"
+
+    def _fit(self, x, y):
+        self._gp = fit_gp(x, y)
+
+    def _score(self, xq, best):
+        mu, sd = gp_predict(self._gp, xq)
+        return expected_improvement(np.asarray(mu), np.asarray(sd), best)
+
+
+class ResTune(ResTuneWoML):
+    """Meta-learning ensemble (Zhang et al. 2021): source GP + target GP,
+    weighted by ranking accuracy on the target observations."""
+    name = "restune"
+
+    def __init__(self, space: ConfigSpace, source_data: Dataset,
+                 seed: int = 0, **kw):
+        super().__init__(space, seed=seed, **kw)
+        xs = np.stack([space.encode(c) for c in source_data.configs])
+        ys = _clean(np.asarray(source_data.ys, np.float64))
+        self._src_gp = fit_gp(xs, ys)
+
+    def _rank_weight(self, x, y) -> float:
+        """Fraction of correctly-ordered pairs by the source model."""
+        mu, _ = gp_predict(self._src_gp, x)
+        mu = np.asarray(mu)
+        n = len(y)
+        if n < 2:
+            return 0.5
+        correct = total = 0
+        for i in range(n):
+            for j in range(i + 1, n):
+                if abs(y[i] - y[j]) < 1e-12:
+                    continue
+                total += 1
+                if (mu[i] < mu[j]) == (y[i] < y[j]):
+                    correct += 1
+        return correct / total if total else 0.5
+
+    def _fit(self, x, y):
+        super()._fit(x, y)
+        self._w_src = max(0.0, 2.0 * self._rank_weight(x, y) - 1.0)
+
+    def _score(self, xq, best):
+        mu_t, sd_t = gp_predict(self._gp, xq)
+        mu_s, sd_s = gp_predict(self._src_gp, xq)
+        w = self._w_src
+        mu = (1 - w) * np.asarray(mu_t) + w * np.asarray(mu_s)
+        sd = np.sqrt((1 - w) * np.asarray(sd_t) ** 2 + w * np.asarray(sd_s) ** 2)
+        return expected_improvement(mu, sd, best)
+
+
+class Cello(ResTuneWoML):
+    """GP-BO with predictive early termination (Ding et al. 2022): when the
+    surrogate is confident a running measurement is worse than the
+    incumbent, terminate it early — a censored observation at reduced
+    budget cost."""
+    name = "cello"
+
+    def __init__(self, space: ConfigSpace, seed: int = 0,
+                 terminate_z: float = 1.0, partial_cost: float = 0.5, **kw):
+        super().__init__(space, seed=seed, **kw)
+        self.terminate_z = terminate_z
+        self.partial_cost = partial_cost
+
+    def run(self, env, budget: float) -> Tuple[Dict, float]:
+        spent = 0.0
+        while spent < budget:
+            cfg = self.propose()
+            cost = 1.0
+            if len(self.ys) >= self.init_random:
+                x = np.stack([self.space.encode(c) for c in self.xs])
+                y = _clean(np.asarray(self.ys))
+                self._fit(x, y)
+                mu, sd = gp_predict(self._gp,
+                                    self.space.encode(cfg)[None, :])
+                best = _finite_best(np.asarray(self.ys))
+                if float(mu[0]) - self.terminate_z * float(sd[0]) > best:
+                    # early-terminate: censored lower-bound observation
+                    counters, yy = env.intervene(cfg)
+                    censored = max(yy if np.isfinite(yy) else best * 2,
+                                   best * 1.02)
+                    self.update(cfg, counters, censored)
+                    spent += self.partial_cost
+                    self.trace.best_y.append(_finite_best(np.asarray(self.ys)))
+                    self.trace.spent.append(spent)
+                    continue
+            counters, yy = env.intervene(cfg)
+            self.update(cfg, counters, yy)
+            spent += cost
+            self.trace.best_y.append(_finite_best(np.asarray(self.ys)))
+            self.trace.spent.append(spent)
+        return self.best
+
+
+class Unicorn(BaseTuner):
+    """Causal-model transfer without blanket pruning (Iqbal et al. 2022):
+    the source graph is reused wholesale; the surrogate is a CausalGP over
+    the source graph's full objective-blanket, fit on pooled source+target
+    data (the bias CAMEO's warm/cold split avoids)."""
+    name = "unicorn"
+
+    def __init__(self, space: ConfigSpace, source_data: Dataset,
+                 counter_names: Sequence[str] = (), seed: int = 0, **kw):
+        super().__init__(space, seed=seed, **kw)
+        self.src = source_data
+        data_s, names_s = source_data.matrix(space, list(counter_names))
+        self.g_s = fci_lite(data_s, names_s)
+        mb = self.g_s.markov_blanket("__objective__")
+        ranked = rank_by_ace(data_s, names_s, "__objective__", self.g_s)
+        feats = [n for n in space.names if n in mb]
+        if not feats:
+            feats = [n for n, _ in ranked if n in space.by_name][:4]
+        self.features = feats
+
+    def _fit(self, x, y):
+        # pooled source+target (source bias included by design)
+        xs = np.stack([self.space.encode(c) for c in self.src.configs])
+        ys = _clean(np.asarray(self.src.ys, np.float64))
+        cfgs = self.src.configs + self.xs
+        yall = np.concatenate([ys, y])
+        self._cgp = CausalGP(self.space, self.features).fit(cfgs, yall)
+
+    def _score(self, xq, best):
+        cands = [self.space.decode(row) for row in xq]
+        mu, sd = self._cgp.predict(cands)
+        return expected_improvement(mu, sd, best)
+
+
+def make_baseline(name: str, space: ConfigSpace, source_data: Dataset,
+                  counter_names: Sequence[str] = (), seed: int = 0):
+    if name == "smac":
+        return SMAC(space, seed=seed)
+    if name == "cello":
+        return Cello(space, seed=seed)
+    if name == "restune-w/o-ml":
+        return ResTuneWoML(space, seed=seed)
+    if name == "restune":
+        return ResTune(space, source_data, seed=seed)
+    if name == "unicorn":
+        return Unicorn(space, source_data, counter_names=counter_names,
+                       seed=seed)
+    if name == "random":
+        return RandomSearch(space, seed=seed)
+    raise ValueError(name)

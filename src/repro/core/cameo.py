@@ -1,0 +1,297 @@
+"""CAMEO — Algorithm 1 of the paper.
+
+Knowledge extraction (offline):
+  1. learn causal performance models G_s (from the source dataset D_s) and
+     G_t (from m initial target samples);
+  2. rank nodes by ACE on the objective in G_s; pick k at the ACE elbow;
+  3. transfer the union Markov blanket of the top-k nodes -> the reduced
+     space the warm CGP operates on.
+
+Knowledge update (online active loop):
+  4. CGP_warm on the reduced space (source data), CGP_cold on the full
+     space (target data);
+  5. each round: ε-greedy observation-vs-intervention (eq. 8); for
+     interventions pick argmax of the λ-combined EI (eqs. 5-7), measure,
+     apply constraint handling (infeasible -> ∞), update D_t, periodically
+     refresh G_t and the CGPs.
+
+The environment contract is ``repro.envs.base.PerfEnv``.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from repro.core.ace import choose_k, rank_by_ace
+from repro.core.acquisition import combined_acquisition, expected_improvement
+from repro.core.cgp import CausalGP
+from repro.core.discovery import CausalGraph, fci_lite
+from repro.core.epsilon import observation_epsilon
+from repro.core.markov_blanket import top_k_blanket
+from repro.core.query import Query
+from repro.core.spaces import ConfigSpace
+
+
+@dataclass
+class Dataset:
+    """Aligned configs / system-event counters / objective values."""
+    configs: List[Dict[str, Any]] = field(default_factory=list)
+    counters: List[Dict[str, float]] = field(default_factory=list)
+    ys: List[float] = field(default_factory=list)
+
+    def add(self, config, counters, y):
+        self.configs.append(dict(config))
+        self.counters.append(dict(counters or {}))
+        self.ys.append(float(y))
+
+    def __len__(self):
+        return len(self.ys)
+
+    def matrix(self, space: ConfigSpace, counter_names: Sequence[str]
+               ) -> Tuple[np.ndarray, List[str]]:
+        """[options..., counters..., objective] matrix + column names.
+
+        Infeasible measurements (±inf from constraint handling / invalid
+        configurations) are clamped to a pessimistic finite value so the CI
+        tests and regressions stay well-posed.
+        """
+        rows = []
+        for cfg, cnt, y in zip(self.configs, self.counters, self.ys):
+            x = space.encode(cfg)
+            c = [float(cnt.get(n, 0.0)) for n in counter_names]
+            rows.append(np.concatenate([x, c, [y]]))
+        names = list(space.names) + list(counter_names) + ["__objective__"]
+        m = np.asarray(rows, np.float64)
+        for col in range(m.shape[1]):
+            v = m[:, col]
+            bad = ~np.isfinite(v)
+            if bad.any():
+                good = v[~bad]
+                worst = (good.max() + 2.0 * (good.max() - good.min() + 1.0)
+                         if len(good) else 0.0)
+                m[bad, col] = worst
+        return m, names
+
+
+@dataclass
+class CameoTrace:
+    best_y: List[float] = field(default_factory=list)
+    action: List[str] = field(default_factory=list)
+    lam_fraction: List[float] = field(default_factory=list)
+    model_update_s: List[float] = field(default_factory=list)
+    recommend_s: List[float] = field(default_factory=list)
+    g_t_edges: List[int] = field(default_factory=list)
+
+
+class Cameo:
+    """Causal multi-environment optimizer (Algorithm 1)."""
+
+    def __init__(
+        self,
+        space: ConfigSpace,
+        query: Query,
+        source_data: Dataset,
+        *,
+        counter_names: Sequence[str] = (),
+        l_alpha: float = 0.1,
+        k: Optional[int] = None,
+        n_max_obs: int = 50,
+        candidates_per_round: int = 256,
+        rediscover_every: int = 10,
+        ci_alpha: float = 0.05,
+        seed: int = 0,
+    ):
+        self.space = space
+        self.query = query
+        self.counter_names = list(counter_names)
+        self.l_alpha = l_alpha
+        self.n_max_obs = n_max_obs
+        self.cand_n = candidates_per_round
+        self.rediscover_every = rediscover_every
+        self.ci_alpha = ci_alpha
+        self.rng = np.random.default_rng(seed)
+        self.trace = CameoTrace()
+
+        self.d_s = source_data
+        self.d_t = Dataset()
+        self._sign = -1.0 if query.maximize else 1.0  # internal: minimize
+
+        # -- knowledge extraction phase (offline, lines 1-3) ---------------
+        t0 = time.perf_counter()
+        data_s, names_s = self.d_s.matrix(space, self.counter_names)
+        self.g_s = fci_lite(data_s, names_s, alpha=ci_alpha)
+        ranked = rank_by_ace(data_s, names_s, "__objective__", self.g_s)
+        # only configuration options can be intervened on
+        ranked_opts = [(n, v) for n, v in ranked if n in space.by_name]
+        self.k = k if k is not None else choose_k(ranked_opts)
+        self.ranked = ranked_opts
+        mb = top_k_blanket(self.g_s, ranked_opts, self.k, "__objective__",
+                           data=data_s, names=names_s)
+        self.reduced_names = [n for n in space.names
+                              if n in mb or n in {x for x, _ in ranked_opts[:self.k]}]
+        if not self.reduced_names:
+            self.reduced_names = [n for n, _ in ranked_opts[:max(self.k, 2)]]
+        self.g_t: Optional[CausalGraph] = None
+        self.extraction_s = time.perf_counter() - t0
+
+        self._warm: Optional[CausalGP] = None
+        self._cold: Optional[CausalGP] = None
+        self._fitted_at = -1
+
+    # ------------------------------------------------------------------ API
+
+    @property
+    def best(self) -> Tuple[Optional[Dict], float]:
+        if not self.d_t.ys:
+            return None, float("inf")
+        ys = np.asarray(self.d_t.ys)
+        feas = [i for i in range(len(ys))
+                if np.isfinite(ys[i])]
+        if not feas:
+            return None, float("inf")
+        i = feas[int(np.argmin(ys[feas] * self._sign))] \
+            if self.query.maximize else feas[int(np.argmin(ys[feas]))]
+        return self.d_t.configs[i], float(ys[i])
+
+    def seed_target(self, dataset: Dataset) -> None:
+        """Initial m target samples (D_t) — counted against nothing."""
+        for c, cnt, y in zip(dataset.configs, dataset.counters, dataset.ys):
+            self.d_t.add(c, cnt, y)
+        self._refresh_graph_t()
+
+    def run(self, env, budget: int) -> Tuple[Dict, float]:
+        """The active loop (lines 5-21). env: repro.envs.base.PerfEnv."""
+        for _ in range(budget):
+            self.step(env)
+        cfg, y = self.best
+        return cfg or self.space.default_config(), y
+
+    # ------------------------------------------------------------ internals
+
+    def _ys_internal(self) -> np.ndarray:
+        return np.asarray(self.d_t.ys) * self._sign
+
+    def _refresh_graph_t(self) -> None:
+        if len(self.d_t) >= 8:
+            data_t, names_t = self.d_t.matrix(self.space, self.counter_names)
+            keep = data_t.std(axis=0) > 1e-12
+            cols = np.where(keep)[0]
+            self.g_t = fci_lite(data_t[:, cols],
+                                [names_t[i] for i in cols],
+                                alpha=self.ci_alpha, max_cond=1)
+            self.trace.g_t_edges.append(self.g_t.num_edges())
+
+    def _fit_surrogates(self) -> None:
+        ys_s = np.asarray(self.d_s.ys) * self._sign
+        ys_t = self._ys_internal()
+        finite_t = np.isfinite(ys_t)
+        if finite_t.any():
+            good = ys_t[finite_t]
+            worst = float(good.max() + 0.5 * (np.ptp(good) + 1e-3))
+        else:
+            worst = 1.0
+        ys_t = np.where(finite_t, ys_t, worst)
+        self._warm = CausalGP(self.space, self.reduced_names).fit(
+            self.d_s.configs, ys_s)
+        # cold operates on the full space with a constant interventional
+        # mean: a multivariate adjustment is unsupported at the few-sample
+        # target regime and extrapolates disastrously
+        self._cold = CausalGP(self.space, self.space.names,
+                              mean_mode="constant").fit(
+            self.d_t.configs, ys_t)
+        self._fitted_at = len(self.d_t)
+
+    def step(self, env) -> str:
+        """One round; returns the action taken ('observe' | 'intervene')."""
+        if len(self.d_t) < 2:
+            # cold start: must intervene to have any target signal
+            cfg = self.space.sample(self.rng, 1)[0]
+            self._measure(env, cfg)
+            return "intervene"
+
+        t0 = time.perf_counter()
+        if self._warm is None or self._fitted_at != len(self.d_t):
+            self._fit_surrogates()
+        self.trace.model_update_s.append(time.perf_counter() - t0)
+
+        # -- ε-greedy observation / intervention (eq. 8) --------------------
+        x_t = np.stack([self.space.encode(c) for c in self.d_t.configs])
+        eps = observation_epsilon(x_t, len(self.d_t), self.n_max_obs)
+        u = float(self.rng.random())
+        if eps > u and hasattr(env, "observe"):
+            cfg, counters, y = env.observe(self.rng)
+            self.d_t.add(cfg, counters, self._maybe_constrain(counters, y))
+            self._post_round("observe")
+            return "observe"
+
+        # -- intervention via the λ-combined acquisition -------------------
+        t1 = time.perf_counter()
+        cands = self.space.sample(self.rng, self.cand_n)
+        best_cfg, _ = self.best
+        if best_cfg is not None:
+            cands.extend(self.space.neighbors(best_cfg, self.rng, 16))
+        # source incumbents: the warm model's strongest transfer signal
+        ys_s = np.asarray(self.d_s.ys) * self._sign
+        for i in np.argsort(np.where(np.isfinite(ys_s), ys_s, np.inf))[:5]:
+            cands.append({k: v for k, v in self.d_s.configs[int(i)].items()
+                          if k in self.space.by_name})
+            cands.extend(self.space.neighbors(cands[-1], self.rng, 3))
+        # never re-intervene on a configuration already measured infeasible
+        infeasible = {self._key(c) for c, y in zip(self.d_t.configs,
+                                                   self.d_t.ys)
+                      if not np.isfinite(y)}
+        measured = {self._key(c) for c in self.d_t.configs}
+        filtered = [c for c in cands
+                    if self._key(c) not in infeasible
+                    and self._key(c) not in measured]
+        if filtered:
+            cands = filtered
+        mu_w, sd_w = self._warm.predict(cands)
+        mu_c, sd_c = self._cold.predict(cands)
+        finite = self._ys_internal()[np.isfinite(self._ys_internal())]
+        best_internal = float(np.min(finite)) if len(finite) else 0.0
+        ei_w = expected_improvement(mu_w, sd_w, self._warm.best_observed)
+        ei_c = expected_improvement(mu_c, sd_c, best_internal)
+        alpha, lam = combined_acquisition(ei_w, ei_c, self.l_alpha)
+        pick = int(np.argmax(alpha))
+        self.trace.lam_fraction.append(float(lam.mean()))
+        self.trace.recommend_s.append(time.perf_counter() - t1)
+
+        self._measure(env, cands[pick])
+        self._post_round("intervene")
+        return "intervene"
+
+    def _key(self, cfg: Dict) -> tuple:
+        return tuple(cfg.get(n, self.space.by_name[n].default)
+                     for n in self.space.names)
+
+    def _measure(self, env, cfg: Dict) -> None:
+        counters, y = env.intervene(cfg)
+        self.d_t.add(cfg, counters, self._maybe_constrain(counters, y))
+
+    def _maybe_constrain(self, counters: Dict[str, float], y: float) -> float:
+        """Constraint handling (lines 17-19): infeasible -> ∞ (internal)."""
+        metrics = dict(counters or {})
+        metrics[self.query.objective] = y
+        if not self.query.satisfies(metrics):
+            return float("inf") * (self._sign)
+        return y
+
+    def _post_round(self, action: str) -> None:
+        self.trace.action.append(action)
+        _, best_y = self.best
+        self.trace.best_y.append(best_y)
+        if len(self.d_t) % self.rediscover_every == 0:
+            self._refresh_graph_t()
+            # refresh the reduced space with target evidence: union of the
+            # source blanket and any new strong target-side effects
+            if self.g_t is not None:
+                data_t, names_t = self.d_t.matrix(self.space, self.counter_names)
+                ranked_t = rank_by_ace(data_t, names_t, "__objective__", self.g_t)
+                extra = [n for n, v in ranked_t[:self.k]
+                         if n in self.space.by_name and n not in self.reduced_names]
+                self.reduced_names.extend(extra)

@@ -1,0 +1,70 @@
+"""Environment contract for configuration tuning.
+
+An environment is "a combination of hardware, workload, software, and
+deployment topology" (the paper's definition).  Tuners interact through:
+
+  observe(rng)      -> (config, counters, y)   draw from the cheap
+                       observational pool (staging measurements)
+  intervene(config) -> (counters, y)           set the configuration and
+                       measure (expensive in production)
+
+``counters`` are the system events C (perf counters in the paper; compiled
+HLO statistics in ours).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Protocol, Tuple
+
+import numpy as np
+
+from repro.core.spaces import ConfigSpace
+
+
+class PerfEnv(Protocol):
+    space: ConfigSpace
+    counter_names: Tuple[str, ...]
+
+    def observe(self, rng: np.random.Generator
+                ) -> Tuple[Dict[str, Any], Dict[str, float], float]: ...
+
+    def intervene(self, config: Dict[str, Any]
+                  ) -> Tuple[Dict[str, float], float]: ...
+
+
+class PooledEnv:
+    """Base env with an observational pool drawn by random configuration."""
+
+    def __init__(self, space: ConfigSpace, counter_names=(), seed: int = 0,
+                 pool_size: int = 512):
+        self.space = space
+        self.counter_names = tuple(counter_names)
+        self._pool_rng = np.random.default_rng(seed)
+        self._pool: List[Tuple[Dict, Dict, float]] = []
+        self._pool_size = pool_size
+
+    def _measure(self, config) -> Tuple[Dict[str, float], float]:
+        raise NotImplementedError
+
+    def intervene(self, config):
+        return self._measure(config)
+
+    def observe(self, rng: np.random.Generator):
+        if len(self._pool) < self._pool_size:
+            cfg = self.space.sample(self._pool_rng, 1)[0]
+            counters, y = self._measure(cfg)
+            self._pool.append((cfg, counters, y))
+            return cfg, counters, y
+        i = int(rng.integers(len(self._pool)))
+        return self._pool[i]
+
+    def dataset(self, n: int, seed: int = 0):
+        """Collect an observational dataset of n random measurements."""
+        from repro.core.cameo import Dataset
+
+        rng = np.random.default_rng(seed)
+        d = Dataset()
+        for cfg in self.space.sample(rng, n):
+            counters, y = self._measure(cfg)
+            d.add(cfg, counters, y)
+        return d

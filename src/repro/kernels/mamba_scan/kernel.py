@@ -1,0 +1,104 @@
+"""Pallas TPU kernel for the Mamba-1 selective scan.
+
+TPU adaptation notes
+--------------------
+The CUDA selective-scan kernel parallelizes over channels within a thread
+block and keeps state in registers.  On TPU we tile channels into VMEM blocks
+(``c_block`` lanes) and keep the (c_block, N) recurrent state in VMEM scratch.
+The sequence is processed in ``chunk``-sized HBM->VMEM blocks (the sequential
+"arbitrary" grid dimension); inside a chunk the recurrence runs as a
+``fori_loop`` over time — per step the update is a (c_block, N) VPU op plus a
+(c_block, N) x (N,) contraction, which keeps the working set entirely in
+VMEM/VREGs.
+
+Layouts: x/dt (B, L, C); A (C, N); Bmat/Cmat (B, L, N); D (C,); y (B, L, C).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, h_ref, *,
+                 chunk: int):
+    it = pl.program_id(2)
+
+    @pl.when(it == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    xb = x_ref[0].astype(jnp.float32)        # (chunk, Cb)
+    dtb = dt_ref[0].astype(jnp.float32)      # (chunk, Cb)
+    A = a_ref[...].astype(jnp.float32)       # (Cb, N)
+    Bb = b_ref[0].astype(jnp.float32)        # (chunk, N)
+    Cb_ = c_ref[0].astype(jnp.float32)       # (chunk, N)
+    Dv = d_ref[0].astype(jnp.float32)        # (Cb,)
+
+    def step(t, h):
+        dt_t = dtb[t][:, None]                       # (Cb, 1)
+        dA = jnp.exp(dt_t * A)                       # (Cb, N)
+        dBx = (dt_t * xb[t][:, None]) * Bb[t][None, :]
+        h = dA * h + dBx
+        y_t = jnp.sum(h * Cb_[t][None, :], axis=1)   # (Cb,)
+        y_t = y_t + Dv * xb[t]
+        y_ref[0, pl.ds(t, 1), :] = y_t[None].astype(y_ref.dtype)
+        return h
+
+    h_ref[...] = jax.lax.fori_loop(0, chunk, step, h_ref[...])
+
+
+def selective_scan_pallas(
+    x: jax.Array,     # (B, L, C)
+    dt: jax.Array,    # (B, L, C)
+    A: jax.Array,     # (C, N)
+    Bmat: jax.Array,  # (B, L, N)
+    Cmat: jax.Array,  # (B, L, N)
+    D: jax.Array,     # (C,)
+    *,
+    chunk: int = 256,
+    c_block: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    b, l, c = x.shape
+    n = A.shape[1]
+    orig_l = l
+    chunk = max(8, min(chunk, l))
+    if l % chunk != 0:
+        pad = chunk - l % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bmat = jnp.pad(Bmat, ((0, 0), (0, pad), (0, 0)))
+        Cmat = jnp.pad(Cmat, ((0, 0), (0, pad), (0, 0)))
+        l = x.shape[1]
+    c_block = min(c_block, c)
+    while c % c_block != 0:
+        c_block //= 2
+    n_cb = c // c_block
+    n_chunks = l // chunk
+
+    kernel = functools.partial(_scan_kernel, chunk=chunk)
+    grid = (b, n_cb, n_chunks)
+    y = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, c_block), lambda ib, ic, it: (ib, it, ic)),
+            pl.BlockSpec((1, chunk, c_block), lambda ib, ic, it: (ib, it, ic)),
+            pl.BlockSpec((c_block, n), lambda ib, ic, it: (ic, 0)),
+            pl.BlockSpec((1, chunk, n), lambda ib, ic, it: (ib, it, 0)),
+            pl.BlockSpec((1, chunk, n), lambda ib, ic, it: (ib, it, 0)),
+            pl.BlockSpec((1, c_block), lambda ib, ic, it: (0, ic)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, c_block), lambda ib, ic, it: (ib, it, ic)),
+        out_shape=jax.ShapeDtypeStruct((b, l, c), x.dtype),
+        scratch_shapes=[pltpu.VMEM((c_block, n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, dt, A.astype(jnp.float32), Bmat, Cmat, D.astype(jnp.float32)[None, :])
+    return y[:, :orig_l]

@@ -1,0 +1,76 @@
+"""Pallas TPU kernel for fused RMSNorm (optionally fused residual-add).
+
+Rows are flattened to (R, D) and tiled ``row_block`` rows at a time; each
+block is one HBM->VMEM stream, normalized in fp32 on the VPU.  Fusing the
+residual add removes one full activation round-trip to HBM per layer norm —
+visible in the memory roofline term.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rms_kernel(x_ref, w_ref, y_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps) * w_ref[...].astype(jnp.float32)
+    y_ref[...] = y.astype(y_ref.dtype)
+
+
+def _rms_res_kernel(x_ref, r_ref, w_ref, y_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32) + r_ref[...].astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps) * w_ref[...].astype(jnp.float32)
+    y_ref[...] = y.astype(y_ref.dtype)
+
+
+def rmsnorm_pallas(x: jax.Array, weight: jax.Array, *, eps: float = 1e-5,
+                   residual: jax.Array | None = None, row_block: int = 256,
+                   interpret: bool = False) -> jax.Array:
+    orig_shape = x.shape
+    d = x.shape[-1]
+    xf = x.reshape(-1, d)
+    r = xf.shape[0]
+    row_block = max(1, min(row_block, r))
+    pad = (-r) % row_block
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    n_rb = xf.shape[0] // row_block
+
+    if residual is not None:
+        rf = residual.reshape(-1, d)
+        if pad:
+            rf = jnp.pad(rf, ((0, pad), (0, 0)))
+        kernel = functools.partial(_rms_res_kernel, eps=eps)
+        in_specs = [
+            pl.BlockSpec((row_block, d), lambda i: (i, 0)),
+            pl.BlockSpec((row_block, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ]
+        args = (xf, rf, weight)
+    else:
+        kernel = functools.partial(_rms_kernel, eps=eps)
+        in_specs = [
+            pl.BlockSpec((row_block, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ]
+        args = (xf, weight)
+
+    y = pl.pallas_call(
+        kernel,
+        grid=(n_rb,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((row_block, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xf.shape, x.dtype),
+        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(*args)
+    if pad:
+        y = y[:r]
+    return y.reshape(orig_shape)

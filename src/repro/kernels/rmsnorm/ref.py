@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for fused RMSNorm (optionally with residual-add)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x: jax.Array, weight: jax.Array, eps: float = 1e-5,
+                residual: jax.Array | None = None) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if residual is not None:
+        xf = xf + residual.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * weight.astype(jnp.float32)
+    return y.astype(x.dtype)

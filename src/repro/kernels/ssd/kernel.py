@@ -1,0 +1,126 @@
+"""Pallas TPU kernel for the Mamba-2 SSD chunked algorithm.
+
+TPU adaptation notes
+--------------------
+The SSD decomposition is MXU-native: per (batch, head, chunk) the work is
+three small matmuls — the (chunk x chunk) intra-chunk score matrix, the
+(chunk x N) @ (N x P) inter-chunk output, and the (N x chunk) @ (chunk x P)
+state update.  We grid over (B, H, chunks) with the chunk dimension
+sequential, carrying the (N, P) recurrent state in VMEM scratch.  The chunk
+size is the tuning knob trading quadratic intra-chunk FLOPs against the
+length of the sequential inter-chunk dependency.
+
+Layouts: x (B, L, H, P); dt (B, L, H); A (H,); Bmat/Cmat (B, L, G, N);
+D (H,); y (B, L, H, P).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, state_ref, *,
+                chunk: int):
+    it = pl.program_id(2)
+
+    @pl.when(it == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    xc = x_ref[0, :, 0, :].astype(jnp.float32)        # (chunk, P)
+    dtc = dt_ref[0, :, 0].astype(jnp.float32)         # (chunk,)
+    a = a_ref[0, 0]                                   # scalar
+    Bc = b_ref[0, :, 0, :].astype(jnp.float32)        # (chunk, N)
+    Cc = c_ref[0, :, 0, :].astype(jnp.float32)        # (chunk, N)
+    Dh = d_ref[0, 0]                                  # scalar
+
+    log_a = dtc * a                                   # (chunk,) <= 0
+    cum = jnp.cumsum(log_a)                           # (chunk,)
+    xdt = xc * dtc[:, None]                           # (chunk, P)
+
+    # intra-chunk quadratic term: L[t,s] = exp(cum[t]-cum[s]) for s <= t
+    seg = cum[:, None] - cum[None, :]
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+           >= jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1))
+    Lm = jnp.where(tri, jnp.exp(seg), 0.0)
+    scores = jax.lax.dot_general(Cc, Bc, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (c, c)
+    y = jax.lax.dot_general(scores * Lm, xdt, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)       # (c, P)
+
+    # inter-chunk contribution from the carried state
+    a_start = jnp.exp(cum)                            # decay start->t inclusive
+    y = y + jax.lax.dot_general(Cc * a_start[:, None], state_ref[...],
+                                (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+
+    # state update: S <- a_chunk * S + B^T (a_end * xdt)
+    a_end = jnp.exp(cum[-1] - cum)                    # (chunk,)
+    state_ref[...] = (jnp.exp(cum[-1]) * state_ref[...]
+                      + jax.lax.dot_general(Bc, xdt * a_end[:, None],
+                                            (((0,), (0,)), ((), ())),
+                                            preferred_element_type=jnp.float32))
+
+    y = y + Dh * xc
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+
+def ssd_pallas(
+    x: jax.Array,     # (B, L, H, P)
+    dt: jax.Array,    # (B, L, H)
+    A: jax.Array,     # (H,)
+    Bmat: jax.Array,  # (B, L, G, N)
+    Cmat: jax.Array,  # (B, L, G, N)
+    D: jax.Array,     # (H,)
+    *,
+    chunk: int = 64,
+    init_state=None,
+    return_state: bool = False,
+    interpret: bool = False,
+):
+    if init_state is not None or return_state:
+        # continuation states are a serving-path feature; the oracle handles it
+        from repro.kernels.ssd.ref import ssd_ref
+        return ssd_ref(x, dt, A, Bmat, Cmat, D, chunk=chunk,
+                       init_state=init_state, return_state=return_state)
+    b, l, h, p = x.shape
+    g, n = Bmat.shape[2], Bmat.shape[3]
+    rep = h // g
+    orig_l = l
+    chunk = max(8, min(chunk, l))
+    if l % chunk != 0:
+        pad = chunk - l % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bmat = jnp.pad(Bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cmat = jnp.pad(Cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        l = x.shape[1]
+    n_chunks = l // chunk
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    grid = (b, h, n_chunks)
+    y = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda ib, ih, it: (ib, it, ih, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda ib, ih, it: (ib, it, ih)),
+            pl.BlockSpec((1, 1), lambda ib, ih, it: (0, ih)),
+            pl.BlockSpec((1, chunk, 1, n), lambda ib, ih, it: (ib, it, ih // rep, 0)),
+            pl.BlockSpec((1, chunk, 1, n), lambda ib, ih, it: (ib, it, ih // rep, 0)),
+            pl.BlockSpec((1, 1), lambda ib, ih, it: (0, ih)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, 1, p), lambda ib, ih, it: (ib, it, ih, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, l, h, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, dt, A.astype(jnp.float32)[None, :], Bmat, Cmat,
+      D.astype(jnp.float32)[None, :])
+    return y[:, :orig_l]

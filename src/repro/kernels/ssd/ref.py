@@ -1,0 +1,122 @@
+"""Pure-jnp oracle for the Mamba-2 SSD (state-space duality) chunked algorithm.
+
+Semantics (per head h, scalar decay per head per step):
+    h_t = exp(dt_t * A_h) * h_{t-1} + dt_t * B_t x_t^T      (state: (N, P))
+    y_t = C_t^T h_t + D_h * x_t
+
+Implemented with the chunked block decomposition from the Mamba-2 paper
+(intra-chunk quadratic term + inter-chunk low-rank state passing), which is
+exactly what the Pallas kernel tiles on TPU.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _segsum(log_a: jax.Array) -> jax.Array:
+    """Stable segment-sum: S[i, j] = sum_{k=j+1..i} log_a[k], lower-triangular.
+
+    log_a: (..., L). Returns (..., L, L) with -inf above the diagonal.
+    """
+    L = log_a.shape[-1]
+    cs = jnp.cumsum(log_a, axis=-1)
+    s = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), dtype=bool), k=0)
+    return jnp.where(mask, s, -jnp.inf)
+
+
+def ssd_ref(
+    x: jax.Array,    # (B, L, H, P)   head channels
+    dt: jax.Array,   # (B, L, H)      positive step sizes
+    A: jax.Array,    # (H,)           negative scalars
+    Bmat: jax.Array, # (B, L, G, N)   G groups (G divides H)
+    Cmat: jax.Array, # (B, L, G, N)
+    D: jax.Array,    # (H,)
+    chunk: int = 64,
+    init_state: jax.Array | None = None,  # (B, H, N, P)
+    return_state: bool = False,
+):
+    """Returns y: (B, L, H, P) (and final state if requested)."""
+    b, l, h, p = x.shape
+    g, n = Bmat.shape[2], Bmat.shape[3]
+    rep = h // g
+    orig_l = l
+    if l % chunk != 0:
+        pad = chunk - l % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bmat = jnp.pad(Bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cmat = jnp.pad(Cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        l = x.shape[1]
+    nc = l // chunk
+
+    xf = x.astype(jnp.float32).reshape(b, nc, chunk, h, p)
+    dtf = dt.astype(jnp.float32).reshape(b, nc, chunk, h)
+    Bf = Bmat.astype(jnp.float32).reshape(b, nc, chunk, g, n)
+    Cf = Cmat.astype(jnp.float32).reshape(b, nc, chunk, g, n)
+    Bh = jnp.repeat(Bf, rep, axis=3)  # (b, nc, c, h, n)
+    Ch = jnp.repeat(Cf, rep, axis=3)
+
+    log_a = dtf * A.astype(jnp.float32)[None, None, None, :]  # (b, nc, c, h) <= 0
+    xdt = xf * dtf[..., None]  # dt-weighted inputs
+
+    # 1) intra-chunk (quadratic) term
+    L_mat = jnp.exp(_segsum(log_a.transpose(0, 1, 3, 2)))  # (b, nc, h, c, c)
+    scores = jnp.einsum("bzchn,bzshn->bzhcs", Ch, Bh)  # (b,nc,h,c,s)
+    y_diag = jnp.einsum("bzhcs,bzhcs,bzshp->bzchp", scores, L_mat, xdt)
+
+    # 2) chunk-final states: S_z = sum_s a(end..s) * B_s x_s^T
+    a_end = jnp.exp(jnp.cumsum(log_a, axis=2)[:, :, -1:, :] - jnp.cumsum(log_a, axis=2))
+    # a_end: decay from step s (exclusive) to chunk end: (b, nc, c, h)
+    states = jnp.einsum("bzshn,bzsh,bzshp->bzhnp", Bh, a_end, xdt)
+
+    # 3) inter-chunk recurrence over chunk states
+    a_chunk = jnp.exp(jnp.sum(log_a, axis=2))  # (b, nc, h) total chunk decay
+
+    def combine(e1, e2):
+        a1, s1 = e1
+        a2, s2 = e2
+        return a1 * a2, s1 * a2[..., None, None] + s2
+
+    a_cum, states_cum = jax.lax.associative_scan(combine, (a_chunk, states), axis=1)
+    if init_state is not None:
+        states_cum = states_cum + a_cum[..., None, None] * init_state[:, None].astype(jnp.float32)
+    # state entering chunk z is states_cum[z-1]
+    prev = jnp.concatenate(
+        [jnp.zeros_like(states_cum[:, :1]) if init_state is None
+         else init_state[:, None].astype(jnp.float32),
+         states_cum[:, :-1]], axis=1)
+
+    # 4) inter-chunk output: y_off_t = C_t^T (a(t..chunk_start) * prev_state)
+    a_start = jnp.exp(jnp.cumsum(log_a, axis=2))  # decay from chunk start to t inclusive
+    y_off = jnp.einsum("bzchn,bzch,bzhnp->bzchp", Ch, a_start, prev)
+
+    y = (y_diag + y_off).reshape(b, l, h, p)[:, :orig_l]
+    y = y + x[:, :orig_l].astype(jnp.float32) * D.astype(jnp.float32)[None, None, :, None]
+    y = y.astype(x.dtype)
+    if return_state:
+        return y, states_cum[:, -1]
+    return y
+
+
+def ssd_step_ref(state, x_t, dt_t, A, B_t, C_t, D):
+    """Single decode step.
+
+    state: (B, H, N, P); x_t: (B, H, P); dt_t: (B, H); B_t/C_t: (B, G, N).
+    Returns (state_new, y_t: (B, H, P)).
+    """
+    b, hh, n, p = state.shape
+    g = B_t.shape[1]
+    rep = hh // g
+    Bh = jnp.repeat(B_t, rep, axis=1).astype(jnp.float32)  # (B, H, N)
+    Ch = jnp.repeat(C_t, rep, axis=1).astype(jnp.float32)
+    dtf = dt_t.astype(jnp.float32)
+    a = jnp.exp(dtf * A.astype(jnp.float32)[None, :])  # (B, H)
+    xdt = x_t.astype(jnp.float32) * dtf[..., None]  # (B, H, P)
+    new_state = state.astype(jnp.float32) * a[..., None, None] + jnp.einsum(
+        "bhn,bhp->bhnp", Bh, xdt)
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, new_state)
+    y = y + x_t.astype(jnp.float32) * D.astype(jnp.float32)[None, :, None]
+    return new_state, y.astype(x_t.dtype)

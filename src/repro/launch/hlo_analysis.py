@@ -1,0 +1,426 @@
+"""Compiled-HLO analysis: FLOPs, HBM traffic, and collective bytes, with
+while-loop (scan) trip-count scaling.
+
+Why not ``compiled.cost_analysis()`` alone: on the CPU backend XLA does not
+scale ``while`` bodies by trip count, so a 61-layer scanned model reports one
+layer's FLOPs.  This module parses the post-SPMD HLO text itself:
+
+- per computation: dot FLOPs (2 * prod(result) * prod(contracting)), bytes
+  accessed (operands + outputs of top-level ops, fusions counted at their
+  boundary — the same traffic model XLA's cost analysis uses), and collective
+  operand bytes by op kind;
+- a call graph walk multiplies ``while`` bodies by their trip count
+  (recovered from the loop-condition comparison constant) and adds called
+  computations (call / conditional branches counted once).
+
+All shapes in the post-SPMD module are per-device shard shapes, so every
+number this module emits is *per chip*; the roofline divides by per-chip
+peaks directly (equivalently: global values over chips x peak).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*\{\s*$")
+_ENTRY_RE = re.compile(r"^ENTRY\s+%?([\w\.\-]+)", re.MULTILINE)
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def _shape_bytes(type_str: str) -> int:
+    """'bf16[2,4096,512]' -> bytes. tuple types handled by caller."""
+    m = _SHAPE_RE.match(type_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def _all_shapes_bytes(text: str) -> int:
+    """Sum of every shape literal in `text` (used for operand lists)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.groups()
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _shape_elems(type_str: str) -> int:
+    m = _SHAPE_RE.match(type_str)
+    if not m:
+        return 0
+    dims = m.group(2)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+def _itemsize_of(type_str: str) -> int:
+    m = _SHAPE_RE.search(type_str)
+    return _DTYPE_BYTES.get(m.group(1), 4) if m else 4
+
+
+@dataclass
+class CompStats:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: Dict[str, float] = field(default_factory=dict)
+    collective_count: Dict[str, int] = field(default_factory=dict)
+    # (callee_name, multiplier, cond_name) edges: while bodies carry their
+    # condition computation so each loop resolves its own trip count
+    calls: List[Tuple[str, float, Optional[str]]] = field(default_factory=list)
+    # raw text lines (condition computations need constant extraction)
+    const_ints: List[int] = field(default_factory=list)
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    depth = 0
+    for line in hlo.splitlines():
+        if cur is None:
+            m = _COMP_HDR_RE.match(line)
+            if m and line.rstrip().endswith("{"):
+                cur = m.group(1)
+                comps[cur] = []
+                depth = 1
+            continue
+        depth += line.count("{") - line.count("}")
+        if depth <= 0:
+            cur = None
+            continue
+        comps[cur].append(line)
+    return comps
+
+
+_DOT_CONTRACT_RE = re.compile(r"rhs_contracting_dims=\{([0-9,]*)\}")
+_CALLEE_RE = {
+    "while_body": re.compile(r"body=%?([\w\.\-]+)"),
+    "while_cond": re.compile(r"condition=%?([\w\.\-]+)"),
+    "call": re.compile(r"(?:to_apply|called_computations=\{)%?([\w\.\-]+)"),
+    "cond_branches": re.compile(r"branch_computations=\{([^}]*)\}"),
+    "fusion": re.compile(r"calls=%?([\w\.\-]+)"),
+}
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+_OPCODE_RE = re.compile(r"(?:^|[\)\]\}])\s*([a-z][a-z0-9\-]*)\(")
+_NAME_REF_RE = re.compile(r"%([\w\.\-]+)")
+_OPNAME_META_RE = re.compile(r'op_name="([^"]*)"')
+
+# ops whose op_name metadata carries this scope are the interior of one
+# Pallas kernel (see repro.kernels.ops.KERNEL_SCOPE): their FLOPs count but
+# their intermediates live in VMEM — only scope-boundary reads/writes hit HBM
+KERNEL_SCOPE_MARK = "repro_kernel"
+
+
+def _arg_list(rest: str, start: int) -> str:
+    """The parenthesized argument list starting at/after `start`."""
+    lp = rest.find("(", start)
+    if lp < 0:
+        return ""
+    depth = 0
+    for i in range(lp, len(rest)):
+        if rest[i] == "(":
+            depth += 1
+        elif rest[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return rest[lp + 1:i]
+    return rest[lp + 1:]
+
+
+def _analyze_computation(name: str, lines: List[str]) -> CompStats:
+    st = CompStats()
+    # pass 1: symbol table op-name -> result type string (scheduled HLO
+    # prints operands without types, so operand sizes resolve via this table)
+    parsed = []
+    types: Dict[str, str] = {}
+    in_scope: Dict[str, bool] = {}
+    for line in lines:
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        opname, rest = m.groups()
+        om = _OPCODE_RE.search(rest)
+        opcode = om.group(1) if om else ""
+        type_str = rest[:om.start() + 1] if om else rest
+        # The CPU backend upcasts bf16 to f32 around dots and elementwise
+        # chains; TPUs execute bf16 natively. Upcast converts are free on
+        # TPU (fused) and the widened value would never exist — alias the
+        # converted name to its source type so downstream reads charge the
+        # narrow dtype.
+        if opcode == "convert":
+            srcs = _NAME_REF_RE.findall(_arg_list(rest, om.end() - 1))
+            if srcs and srcs[0] in types:
+                src_t = types[srcs[0]]
+                if 0 < _itemsize_of(src_t) < _itemsize_of(type_str):
+                    type_str = src_t
+        types[opname] = type_str
+        meta = _OPNAME_META_RE.search(rest)
+        in_scope[opname] = bool(meta and KERNEL_SCOPE_MARK in meta.group(1))
+        parsed.append((opname, opcode, rest, om.end() - 1 if om else 0,
+                       meta is not None))
+
+    # XLA-synthesized ops (wide/sunk clones, layout copies) carry no
+    # metadata; inherit the computation's majority scope so a fusion inside
+    # an attention-backward region isn't charged as if it hit HBM.
+    # Parameters/constants never inherit: they are boundary values by
+    # definition (reads of them must be charged).
+    _boundary_ops = ("parameter", "constant", "iota", "get-tuple-element",
+                     "tuple")
+    with_meta = [(n, in_scope[n]) for (n, _, _, _, has) in parsed if has]
+    if with_meta:
+        frac = sum(1 for _, s in with_meta if s) / len(with_meta)
+        if frac > 0.5:
+            for (n, oc, _, _, has) in parsed:
+                if not has and oc not in _boundary_ops:
+                    in_scope[n] = True
+    parsed = [(n, oc, r, ap) for (n, oc, r, ap, _) in parsed]
+
+    # scope-boundary writes: in-scope values read by out-of-scope ops
+    read_by_outside = set()
+    is_root = set()
+    for opname, opcode, rest, argpos in parsed:
+        if not in_scope.get(opname):
+            for ref in _NAME_REF_RE.findall(_arg_list(rest, argpos)):
+                read_by_outside.add(ref)
+    for line in lines:
+        lm = re.match(r"\s*ROOT\s+%?([\w\.\-]+)", line)
+        if lm:
+            is_root.add(lm.group(1))
+
+    for opname, opcode, rest, argpos in parsed:
+        result_bytes = _all_shapes_bytes(types[opname])
+        rm = _SHAPE_RE.search(types[opname])
+        result_elems = _shape_elems(rm.group(0)) if rm else 0
+
+        for const in _CONST_RE.finditer(rest):
+            st.const_ints.append(int(const.group(1)))
+
+        if opcode in ("parameter", "constant", "get-tuple-element", "tuple",
+                      "bitcast", "after-all", "partition-id", "replica-id",
+                      "iota", "convert"):
+            continue
+
+        args = _arg_list(rest, argpos)
+        operand_names = _NAME_REF_RE.findall(args)
+        operand_types = [types.get(n, "") for n in operand_names]
+        operand_bytes = sum(_all_shapes_bytes(t) for t in operand_types)
+
+        is_collective = None
+        for c in COLLECTIVE_OPS:
+            if opcode.startswith(c):
+                is_collective = c
+                break
+        if is_collective:
+            if opcode.endswith("-done"):
+                continue  # bytes counted at the -start op
+            st.collective_bytes[is_collective] = (
+                st.collective_bytes.get(is_collective, 0.0) + operand_bytes)
+            st.collective_count[is_collective] = (
+                st.collective_count.get(is_collective, 0) + 1)
+            st.bytes_accessed += operand_bytes + result_bytes
+            continue
+
+        if opcode == "while":
+            bm = _CALLEE_RE["while_body"].search(rest)
+            cm = _CALLEE_RE["while_cond"].search(rest)
+            tm = _TRIP_RE.search(rest)  # XLA annotates known trip counts
+            if bm:
+                if tm:
+                    st.calls.append((bm.group(1), float(tm.group(1)), None))
+                else:
+                    st.calls.append((bm.group(1), -1.0,
+                                     cm.group(1) if cm else None))
+            continue
+        if opcode == "conditional":
+            bm = _CALLEE_RE["cond_branches"].search(rest)
+            if bm:
+                for callee in re.findall(r"%?([\w\.\-]+)", bm.group(1)):
+                    st.calls.append((callee, 1.0, None))
+            continue
+        scoped = in_scope.get(opname, False)
+        if scoped:
+            # interior of a Pallas kernel: charge only boundary traffic —
+            # reads of out-of-scope values (bounded by output size: kLoop
+            # semantics) and the result if it escapes the scope.
+            boundary = 0.0
+            for n_, t_ in zip(operand_names, operand_types):
+                if not in_scope.get(n_, False):
+                    boundary += min(_all_shapes_bytes(t_),
+                                    max(result_elems, 1) * _itemsize_of(t_))
+            if opname in read_by_outside or opname in is_root:
+                boundary += result_bytes
+            st.bytes_accessed += boundary
+
+        if opcode in ("call", "custom-call", "map", "reduce", "sort",
+                      "reduce-window", "scatter", "select-and-scatter",
+                      "fusion"):
+            fm = _CALLEE_RE["fusion"].search(rest) or _CALLEE_RE["call"].search(rest)
+            if opcode == "call" and fm:
+                st.calls.append((fm.group(1), 1.0, None))
+            # kLoop fusions compute each output element from O(1) reads per
+            # operand, so an operand's traffic is bounded by the output size
+            # (this is what makes scan-over-layers charge one layer slice per
+            # iteration, not the whole stacked weight). kInput (reduce)
+            # fusions legitimately read more than they write -> full operands.
+            if not scoped:
+                if opcode == "fusion" and "kind=kLoop" in rest:
+                    used = sum(
+                        min(_all_shapes_bytes(t),
+                            result_elems * max(_itemsize_of(t), 1))
+                        for t in operand_types)
+                    st.bytes_accessed += used + result_bytes
+                else:
+                    st.bytes_accessed += operand_bytes + result_bytes
+            st.flops += float(result_elems)
+            continue
+
+        if opcode == "dynamic-slice":
+            # reads only the slice it emits (+ scalar indices)
+            if not scoped:
+                st.bytes_accessed += 2.0 * result_bytes
+            st.flops += float(result_elems)
+            continue
+        if opcode == "dynamic-update-slice":
+            # in-place: read + write the update slice only
+            if not scoped:
+                upd = (_all_shapes_bytes(operand_types[1])
+                       if len(operand_types) > 1 else result_bytes)
+                st.bytes_accessed += 2.0 * upd
+            continue
+
+        if not scoped:
+            if opcode == "dot" and operand_types:
+                # MXU accumulates in f32 on-chip; the HBM write is at the
+                # input precision (CPU's widened f32 output is an artifact)
+                out_item = min(_itemsize_of(t) for t in operand_types)
+                st.bytes_accessed += (operand_bytes
+                                      + result_elems * out_item)
+            else:
+                st.bytes_accessed += operand_bytes + result_bytes
+
+        if opcode == "dot":
+            cm = _DOT_CONTRACT_RE.search(rest)
+            contract_elems = 1
+            if cm and operand_types:
+                dims_idx = [int(x) for x in cm.group(1).split(",") if x]
+                rhs_t = operand_types[1] if len(operand_types) > 1 else operand_types[0]
+                mm = _SHAPE_RE.search(rhs_t)
+                if mm and mm.group(2):
+                    rdims = [int(x) for x in mm.group(2).split(",")]
+                    for di in dims_idx:
+                        if di < len(rdims):
+                            contract_elems *= rdims[di]
+            st.flops += 2.0 * result_elems * contract_elems
+        else:
+            # elementwise / copy / reduce: 1 flop per output element
+            st.flops += float(result_elems)
+    return st
+
+
+def _trip_count(cond_stats: CompStats) -> float:
+    """Loop condition compares the counter to a constant: take the max
+    constant in the condition computation (scan lengths, microbatch counts)."""
+    if not cond_stats.const_ints:
+        return 1.0
+    return float(max(cond_stats.const_ints))
+
+
+@dataclass
+class HloCosts:
+    flops: float
+    bytes_accessed: float
+    collective_bytes: Dict[str, float]
+    collective_count: Dict[str, int]
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def analyze_hlo(hlo_text: str, entry: Optional[str] = None) -> HloCosts:
+    comps = _split_computations(hlo_text)
+    stats = {name: _analyze_computation(name, lines)
+             for name, lines in comps.items()}
+
+    if entry is None:
+        em = _ENTRY_RE.search(hlo_text)
+        if em:
+            entry = em.group(1)
+        else:
+            # fallback: a computation never referenced as a callee
+            called = set(re.findall(
+                r"(?:calls|to_apply|condition|body)=%?([\w\.\-]+)", hlo_text))
+            entry = next((n for n in comps if n not in called), list(comps)[0])
+
+    memo: Dict[str, Tuple[float, float, Dict[str, float], Dict[str, int]]] = {}
+
+    def total(name: str, seen=()):
+        if name in memo:
+            return memo[name]
+        if name not in stats or name in seen:
+            return 0.0, 0.0, {}, {}
+        st = stats[name]
+        fl, by = st.flops, st.bytes_accessed
+        cb = dict(st.collective_bytes)
+        cc = dict(st.collective_count)
+        for callee, mult, cond in st.calls:
+            if mult < 0:  # while body: trip count from its own condition
+                trips = _trip_count(stats.get(cond, CompStats())) if cond else 1.0
+            else:
+                trips = mult
+            cfl, cby, ccb, ccc = total(callee, seen + (name,))
+            fl += trips * cfl
+            by += trips * cby
+            for k, v in ccb.items():
+                cb[k] = cb.get(k, 0.0) + trips * v
+            for k, v in ccc.items():
+                cc[k] = cc.get(k, 0) + int(trips * v)
+        memo[name] = (fl, by, cb, cc)
+        return memo[name]
+
+    fl, by, cb, cc = total(entry)
+    return HloCosts(flops=fl, bytes_accessed=by, collective_bytes=cb,
+                    collective_count=cc)
+
+
+def collective_schedule(hlo_text: str, limit: int = 40) -> List[str]:
+    """Human-readable list of collectives in program order (entry + bodies)."""
+    out = []
+    for line in hlo_text.splitlines():
+        for c in COLLECTIVE_OPS:
+            if re.search(rf"\b{c}(-start|-done)?\(", line):
+                frag = line.strip()
+                out.append(frag[:160])
+                break
+        if len(out) >= limit:
+            break
+    return out

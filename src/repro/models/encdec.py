@@ -1,0 +1,144 @@
+"""Whisper-style encoder-decoder backbone.
+
+Per the task spec the conv/mel frontend is a STUB: ``input_specs()`` provides
+precomputed frame embeddings (B, T_enc, D) directly to the encoder.  The
+encoder is bidirectional self-attention; the decoder has causal self-attention
+plus cross-attention over encoder output, with standard KV caching for decode.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models import attention as attn
+from repro.models.layers import (
+    apply_mlp, apply_rmsnorm, dense_init, embed_tokens, init_embed, init_mlp,
+    init_rmsnorm, lm_logits,
+)
+from repro.utils.config import ModelConfig, ParallelConfig
+
+
+def _init_enc_layer(key, cfg: ModelConfig, dtype) -> Dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn_norm": init_rmsnorm(cfg.d_model, dtype),
+        "attn": attn.init_gqa(k1, cfg, dtype),
+        "mlp_norm": init_rmsnorm(cfg.d_model, dtype),
+        "mlp": init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.mlp_type, dtype),
+    }
+
+
+def _init_dec_layer(key, cfg: ModelConfig, dtype) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "attn_norm": init_rmsnorm(cfg.d_model, dtype),
+        "attn": attn.init_gqa(k1, cfg, dtype),
+        "cross_norm": init_rmsnorm(cfg.d_model, dtype),
+        "cross": attn.init_cross_attn(k2, cfg, cfg.d_model, dtype),
+        "mlp_norm": init_rmsnorm(cfg.d_model, dtype),
+        "mlp": init_mlp(k3, cfg.d_model, cfg.d_ff, cfg.mlp_type, dtype),
+    }
+
+
+def init_encdec_params(cfg: ModelConfig, key: jax.Array, dtype) -> Dict[str, Any]:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    enc_layers = cfg.encoder_layers or cfg.num_layers
+    return {
+        "embed": init_embed(k1, cfg.vocab_size, cfg.d_model, dtype, cfg.tie_embeddings),
+        "frame_proj": dense_init(k4, cfg.d_model, cfg.d_model, dtype),  # stub frontend adapter
+        "enc_blocks": jax.vmap(lambda k: _init_enc_layer(k, cfg, dtype))(
+            jax.random.split(k2, enc_layers)),
+        "dec_blocks": jax.vmap(lambda k: _init_dec_layer(k, cfg, dtype))(
+            jax.random.split(k3, cfg.num_layers)),
+        "enc_norm": init_rmsnorm(cfg.d_model, dtype),
+        "final_norm": init_rmsnorm(cfg.d_model, dtype),
+    }
+
+
+def encode(params: Dict, cfg: ModelConfig, par: ParallelConfig,
+           frames: jax.Array) -> jax.Array:
+    """frames: (B, T_enc, D) precomputed frame embeddings (stub frontend)."""
+    h = jnp.einsum("btd,de->bte", frames, params["frame_proj"])
+    b, t, _ = h.shape
+    positions = jnp.arange(t)
+
+    def body(h, block_p):
+        hn = apply_rmsnorm(block_p["attn_norm"], h, cfg.norm_eps)
+        hd = cfg.head_dim
+        q = jnp.einsum("bsd,de->bse", hn, block_p["attn"]["wq"]).reshape(b, t, cfg.num_heads, hd)
+        k = jnp.einsum("bsd,de->bse", hn, block_p["attn"]["wk"]).reshape(b, t, cfg.num_kv_heads, hd)
+        v = jnp.einsum("bsd,de->bse", hn, block_p["attn"]["wv"]).reshape(b, t, cfg.num_kv_heads, hd)
+        from repro.models.layers import apply_rope
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        o = ops.flash_attention(q, k, v, causal=False,
+                                q_block=par.attn_q_block, kv_block=par.attn_kv_block)
+        h = h + jnp.einsum("bse,ed->bsd", o.reshape(b, t, -1), block_p["attn"]["wo"])
+        hm = apply_rmsnorm(block_p["mlp_norm"], h, cfg.norm_eps)
+        h = h + apply_mlp(block_p["mlp"], hm, cfg.mlp_type)
+        return h, None
+
+    body = _maybe_remat(body, par)
+    h, _ = jax.lax.scan(body, h, params["enc_blocks"])
+    return apply_rmsnorm(params["enc_norm"], h, cfg.norm_eps)
+
+
+def _maybe_remat(body, par: ParallelConfig):
+    if par.remat == "none":
+        return body
+    policy = None
+    if par.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+    return jax.checkpoint(body, policy=policy, prevent_cse=False)
+
+
+def decode_forward(
+    params: Dict,
+    cfg: ModelConfig,
+    par: ParallelConfig,
+    tokens: jax.Array,        # (B, S)
+    enc_out: jax.Array,       # (B, T_enc, D)
+    *,
+    positions: Optional[jax.Array] = None,
+    decode_state: Optional[Dict] = None,
+    decode: bool = False,
+) -> Tuple[jax.Array, Optional[Dict]]:
+    b, s = tokens.shape
+    if positions is None:
+        positions = jnp.arange(s)
+    h = embed_tokens(params["embed"], tokens, cfg.d_model)
+    use_cache = decode_state is not None
+
+    def body(h, xs):
+        if use_cache:
+            block_p, cache = xs
+        else:
+            block_p, cache = xs, None
+        hn = apply_rmsnorm(block_p["attn_norm"], h, cfg.norm_eps)
+        y, kv = attn.apply_gqa(block_p["attn"], cfg, par, hn, positions,
+                               cache=cache, decode=decode)
+        h = h + y
+        hc = apply_rmsnorm(block_p["cross_norm"], h, cfg.norm_eps)
+        h = h + attn.apply_cross_attn(block_p["cross"], cfg, par, hc, enc_out)
+        hm = apply_rmsnorm(block_p["mlp_norm"], h, cfg.norm_eps)
+        h = h + apply_mlp(block_p["mlp"], hm, cfg.mlp_type)
+        return h, (kv if use_cache else None)
+
+    if use_cache:
+        xs = (params["dec_blocks"], decode_state)
+    else:
+        xs = params["dec_blocks"]
+    body_fn = body if decode else _maybe_remat(body, par)
+    h, new_state = jax.lax.scan(body_fn, h, xs)
+    h = apply_rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    return lm_logits(params["embed"], h), new_state
+
+
+def init_encdec_decode_state(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Dict:
+    template = attn.init_kv_cache(cfg, batch, max_len, dtype)
+    return jax.tree.map(
+        lambda x: jnp.zeros((cfg.num_layers,) + x.shape, x.dtype), template)

@@ -1,0 +1,108 @@
+"""Shared layers: norms, rotary embeddings, MLP variants, embedding/head.
+
+Everything is functional: ``init_*`` returns a param dict, the apply function
+takes (params, activations).  Initializers follow standard truncated-normal
+fan-in scaling.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (in_dim, out_dim), jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (vocab, dim), jnp.float32)
+            ).astype(dtype)
+
+
+# -- RMSNorm ---------------------------------------------------------------
+
+def init_rmsnorm(dim: int, dtype=jnp.float32) -> Dict:
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def apply_rmsnorm(p: Dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    return ops.rmsnorm(x, p["scale"], eps=eps)
+
+
+# -- Rotary ----------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D) with even D; positions: (S,) or (B, S)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)  # (D/2,)
+    if positions.ndim == 1:
+        angles = positions[:, None].astype(jnp.float32) * freqs[None, :]  # (S, D/2)
+        angles = angles[None, :, None, :]  # (1, S, 1, D/2)
+    else:
+        angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, D/2)
+        angles = angles[:, :, None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- MLP variants ----------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, mlp_type: str, dtype) -> Dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if mlp_type == "swiglu":
+        return {
+            "w_gate": dense_init(k1, d_model, d_ff, dtype),
+            "w_up": dense_init(k2, d_model, d_ff, dtype),
+            "w_down": dense_init(k3, d_ff, d_model, dtype),
+        }
+    # relu2 (nemotron squared-ReLU) and gelu share a 2-matrix shape
+    return {
+        "w_up": dense_init(k1, d_model, d_ff, dtype),
+        "w_down": dense_init(k2, d_ff, d_model, dtype),
+    }
+
+
+def apply_mlp(p: Dict, x: jax.Array, mlp_type: str) -> jax.Array:
+    if mlp_type == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+        u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+        h = jax.nn.silu(g) * u
+    elif mlp_type == "relu2":
+        h = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", x, p["w_up"])))
+    else:  # gelu
+        h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w_up"]))
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+
+
+# -- Embedding + LM head ---------------------------------------------------
+
+def init_embed(key, vocab: int, d_model: int, dtype, tie: bool) -> Dict:
+    k1, k2 = jax.random.split(key)
+    p = {"embedding": embed_init(k1, vocab, d_model, dtype)}
+    if not tie:
+        p["lm_head"] = dense_init(k2, d_model, vocab, dtype)
+    return p
+
+
+def embed_tokens(p: Dict, tokens: jax.Array, d_model: int) -> jax.Array:
+    return p["embedding"][tokens] * jnp.asarray(math.sqrt(d_model), p["embedding"].dtype)
+
+
+def lm_logits(p: Dict, h: jax.Array) -> jax.Array:
+    if "lm_head" in p:
+        return jnp.einsum("bsd,dv->bsv", h, p["lm_head"])
+    return jnp.einsum("bsd,vd->bsv", h, p["embedding"])

@@ -1,0 +1,95 @@
+"""Model factory: build/init/apply dispatch over the 10 assigned families,
+plus exact analytic parameter counting (via ``jax.eval_shape`` — no
+allocation).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import encdec, transformer
+from repro.utils.config import ModelConfig, ParallelConfig
+
+
+class Model(NamedTuple):
+    """Bound model functions for one architecture."""
+    cfg: ModelConfig
+    init: Callable[..., Dict]
+    forward: Callable[..., Any]           # training/prefill forward
+    init_decode_state: Callable[..., Dict]
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def build_model(cfg: ModelConfig, par: Optional[ParallelConfig] = None) -> Model:
+    par = par or ParallelConfig()
+    dtype = _dtype(cfg)
+    if cfg.family == "audio":
+        def init(key):
+            return encdec.init_encdec_params(cfg, key, dtype)
+
+        def forward(params, tokens, *, frames=None, decode_state=None,
+                    decode=False, positions=None, **kw):
+            enc_out = encdec.encode(params, cfg, par, frames)
+            logits, state = encdec.decode_forward(
+                params, cfg, par, tokens, enc_out, positions=positions,
+                decode_state=decode_state, decode=decode)
+            return logits, state, jnp.zeros((), jnp.float32)
+
+        def init_state(batch, max_len):
+            return encdec.init_encdec_decode_state(cfg, batch, max_len, dtype)
+
+        return Model(cfg, init, forward, init_state)
+
+    def init(key):
+        return transformer.init_lm_params(cfg, key, dtype)
+
+    def forward(params, tokens, *, vision_embeds=None, decode_state=None,
+                decode=False, positions=None, return_hidden=False, **kw):
+        return transformer.forward(
+            params, cfg, par, tokens, positions=positions,
+            vision_embeds=vision_embeds, decode_state=decode_state,
+            decode=decode, return_hidden=return_hidden)
+
+    def init_state(batch, max_len):
+        return transformer.init_decode_state(cfg, batch, max_len, dtype)
+
+    return Model(cfg, init, forward, init_state)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Dict:
+    return build_model(cfg).init(key)
+
+
+@functools.lru_cache(maxsize=256)
+def _param_shapes_cached(cfg: ModelConfig):
+    model = build_model(cfg)
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+def count_params_analytic(cfg: ModelConfig, active_only: bool = False) -> int:
+    """Exact parameter count via eval_shape (no allocation).
+
+    With ``active_only`` (MoE), routed-expert params are scaled by
+    top_k / num_experts — the standard "active parameters" convention.
+    """
+    shapes = _param_shapes_cached(cfg)
+    total = 0
+    expert = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        n = int(np.prod(leaf.shape))
+        total += n
+        keys = "/".join(str(getattr(p, "key", getattr(p, "name", getattr(p, "idx", "")))) for p in path)
+        if "moe" in keys and any(w in keys for w in ("w_gate", "w_up", "w_down")) \
+                and "shared" not in keys:
+            expert += n
+    if active_only and cfg.is_moe and expert:
+        total = total - expert + int(expert * cfg.moe_top_k / cfg.moe_num_experts)
+    return total

@@ -1,0 +1,113 @@
+"""Mixture-of-Experts layer (DeepSeek-V3 / Llama-4 style).
+
+GSPMD-friendly grouped dense dispatch (GShard-style): tokens are split into
+routing groups of ``group_size`` tokens; within each group a one-hot
+dispatch/combine einsum routes at most ``capacity`` tokens to each expert.
+The group dimension shards over the data axis and the expert dimension over a
+configurable axis (``model`` -> TP-style all-reduce combine, ``data`` ->
+classic EP all-to-all), both of which XLA partitions automatically.  Group
+size, capacity factor, and the expert axis are first-class CAMEO knobs.
+
+Supports top-k softmax routing (llama4: top-1) and DeepSeek-style sigmoid
+scoring with renormalization over the selected experts, shared (always-on)
+experts, and the switch-style load-balance auxiliary loss.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, init_mlp, apply_mlp
+from repro.utils.config import ModelConfig
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> Dict:
+    e, dff = cfg.moe_num_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], cfg.d_model, e, jnp.float32),
+        # expert weights stacked on a leading expert dim (sharded for EP)
+        "w_gate": _stack_init(ks[1], e, cfg.d_model, dff, dtype),
+        "w_up": _stack_init(ks[2], e, cfg.d_model, dff, dtype),
+        "w_down": _stack_init(ks[3], e, dff, cfg.d_model, dtype),
+    }
+    if cfg.moe_num_shared > 0:
+        p["shared"] = init_mlp(ks[4], cfg.d_model, dff * cfg.moe_num_shared, "swiglu", dtype)
+    return p
+
+
+def _stack_init(key, e, din, dout, dtype):
+    scale = din ** -0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (e, din, dout), jnp.float32)
+            * scale).astype(dtype)
+
+
+def apply_moe(p: Dict, cfg: ModelConfig, x: jax.Array,
+              router_mode: str = "softmax", group_size: int = 512,
+              dropless: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D). Returns (out, aux_loss).
+
+    ``dropless`` forces capacity = group size (no token ever dropped) — used
+    on the decode path where dropping a token corrupts a live request.
+    """
+    b, s, d = x.shape
+    e, k = cfg.moe_num_experts, cfg.moe_top_k
+    t = b * s
+    tg = min(group_size, t)
+    while t % tg != 0:  # group size must divide the token count
+        tg //= 2
+    g = t // tg
+    tokens = x.reshape(g, tg, d)
+
+    logits = jnp.einsum("gtd,de->gte", tokens.astype(jnp.float32), p["router"])
+    if router_mode == "sigmoid":  # deepseek-v3 scoring
+        scores = jax.nn.sigmoid(logits)
+    else:
+        scores = jax.nn.softmax(logits, axis=-1)
+
+    top_vals, top_idx = jax.lax.top_k(scores, k)  # (G, Tg, k)
+    if router_mode == "sigmoid":
+        top_vals = top_vals / (jnp.sum(top_vals, axis=-1, keepdims=True) + 1e-20)
+
+    # per-group capacity per expert
+    if dropless:
+        capacity = tg
+    else:
+        capacity = max(1, int(tg * k * cfg.moe_capacity_factor / e))
+        capacity = min(capacity, tg)
+
+    # queue position of each (token, slot) within its expert, per group
+    onehot = jax.nn.one_hot(top_idx, e, dtype=jnp.int32)  # (G, Tg, k, E)
+    flat = onehot.reshape(g, tg * k, e)
+    pos = (jnp.cumsum(flat, axis=1) - flat).reshape(g, tg, k, e)
+    pos = jnp.sum(pos * onehot, axis=-1)  # (G, Tg, k)
+    keep = pos < capacity
+
+    gate = top_vals * keep.astype(top_vals.dtype)  # dropped slots contribute 0
+    slot = jax.nn.one_hot(pos, capacity, dtype=jnp.float32)  # (G, Tg, k, C)
+    mask = onehot.astype(jnp.float32) * keep[..., None].astype(jnp.float32)
+    # (G, Tg, E, C) dispatch / combine tensors
+    dispatch = jnp.einsum("gtke,gtkc->gtec", mask, slot).astype(x.dtype)
+    combine = jnp.einsum("gtke,gtkc,gtk->gtec", mask, slot, gate.astype(jnp.float32))
+
+    # route -> expert compute -> unroute
+    expert_in = jnp.einsum("gtec,gtd->gecd", dispatch, tokens)  # (G, E, C, D)
+    h_gate = jnp.einsum("gecd,edf->gecf", expert_in, p["w_gate"])
+    h_up = jnp.einsum("gecd,edf->gecf", expert_in, p["w_up"])
+    h = jax.nn.silu(h_gate) * h_up
+    expert_out = jnp.einsum("gecf,efd->gecd", h, p["w_down"])  # (G, E, C, D)
+    out = jnp.einsum("gtec,gecd->gtd", combine.astype(x.dtype), expert_out)
+
+    if cfg.moe_num_shared > 0:
+        out = out + apply_mlp(p["shared"], tokens, "swiglu")
+
+    # load-balance auxiliary loss (Switch-style): E * sum_e f_e * p_e
+    me = jnp.mean(jax.nn.softmax(logits, axis=-1), axis=(0, 1))  # mean router prob
+    ce = jnp.mean(jnp.sum(jax.nn.one_hot(top_idx, e, dtype=jnp.float32), axis=2),
+                  axis=(0, 1)) / k
+    aux = e * jnp.sum(me * ce)
+
+    return out.reshape(b, s, d), aux

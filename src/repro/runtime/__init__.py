@@ -1,0 +1,3 @@
+from repro.runtime.driver import TrainDriver, FaultInjector  # noqa: F401
+from repro.runtime.straggler import StragglerMonitor  # noqa: F401
+from repro.runtime.elastic import remesh_state  # noqa: F401

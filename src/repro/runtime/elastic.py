@@ -1,0 +1,57 @@
+"""Elastic re-meshing: continue a run on a different device count.
+
+The checkpoint format is mesh-agnostic (host numpy per leaf), so scaling is:
+build the new mesh, recompute the sharding rules for the same model under
+the new mesh, and restore with the new shardings.  The only global-batch
+constraint is divisibility by the new data-parallel size; the driver adjusts
+microbatching to preserve the global batch (so the loss trajectory is
+unchanged across the re-mesh, modulo data order).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.sharding.specs import named_shardings
+from repro.utils.config import MeshConfig, RunConfig
+
+
+def viable_mesh_shape(num_devices: int, model_parallel: int) -> Tuple[int, int]:
+    """Largest (data, model) grid for `num_devices` keeping TP degree."""
+    if num_devices % model_parallel != 0:
+        # degrade TP until it divides (prefer keeping TP large)
+        while model_parallel > 1 and num_devices % model_parallel != 0:
+            model_parallel //= 2
+    return num_devices // model_parallel, model_parallel
+
+
+def remesh_state(ckpt: CheckpointManager, step: int, state_template: Any,
+                 run: RunConfig, new_mesh: Mesh) -> Any:
+    """Restore checkpoint `step` resharded for `new_mesh`."""
+    from repro.launch.mesh import state_shardings  # late: avoids import cycle
+
+    shardings = state_shardings(state_template, run, new_mesh)
+    return ckpt.restore(step, state_template, shardings=shardings)
+
+
+def adjust_run_for_devices(run: RunConfig, num_devices: int) -> RunConfig:
+    """Rescale the mesh (and microbatching if needed) to `num_devices`."""
+    tp = run.parallel.tp
+    data, model = viable_mesh_shape(num_devices, tp)
+    mesh = MeshConfig(shape=(data, model), axes=("data", "model"))
+    par = run.parallel
+    if par.tp != model:
+        par = par.replace(tp=model)
+    # keep the global batch: if the new data size no longer divides it,
+    # increase microbatching
+    gb = run.shape.global_batch
+    micro = par.microbatch
+    while gb % (data * micro) != 0 and micro < gb:
+        micro *= 2
+    if micro != par.microbatch:
+        par = par.replace(microbatch=micro)
+    return run.replace(mesh=mesh, parallel=par)

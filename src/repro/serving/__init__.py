@@ -1,0 +1,2 @@
+from repro.serving.scheduler import (  # noqa: F401
+    ContinuousBatcher, Request, RequestState)

@@ -1,0 +1,185 @@
+"""Continuous-batching serving scheduler.
+
+Production serving does not run prefill/decode on fixed request batches: it
+keeps a fixed number of SLOTS (the compiled decode batch size), admits new
+requests into free slots as running ones finish, and runs one fused decode
+step per tick for whatever is resident.  That keeps the compiled decode
+shape static (one XLA program) while the request mix churns — the same
+design as production LLM servers, adapted to this framework's
+``ServeState``.
+
+Mechanics:
+
+- One decode program of batch = ``num_slots`` is compiled once.  Empty
+  slots carry a pad token and their outputs are ignored.
+- Prefill runs per admitted request (batch 1) and its cache is scattered
+  into the slot's rows of the shared stacked cache.
+- Per-request stopping: max_new_tokens or an EOS token id.
+- Fairness/occupancy stats for capacity planning.
+
+The scatter uses ``jax.tree.map`` over the cache pytree with a dynamic
+batch-row update — O(cache_row) per admission, no recompile.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+from repro.train.serve_step import (ServeState, make_decode_step,
+                                    make_prefill_step, sample_token)
+from repro.utils.config import RunConfig
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                  # (prompt_len,) int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    extras: Dict[str, np.ndarray] = field(default_factory=dict)
+
+
+@dataclass
+class RequestState:
+    request: Request
+    slot: int
+    generated: List[int] = field(default_factory=list)
+    admitted_at: float = 0.0
+    finished_at: Optional[float] = None
+
+    @property
+    def done(self) -> bool:
+        return self.finished_at is not None
+
+
+def _scatter_rows(dst_tree, src_tree, slot: int):
+    """Write src (batch-1 state rows) into dst at batch row `slot`.
+
+    Cache leaves are stacked (layers, batch, ...); lengths are (batch,).
+    The batch dim is located as the first axis whose size equals the slot
+    count — for stacked leaves that is axis 1, for flat leaves axis 0.
+    """
+    def one(dst, src):
+        if dst.ndim == src.ndim and dst.shape == src.shape:
+            return dst  # shared/static (e.g. vision_kv broadcast) — keep
+        if dst.ndim >= 2 and src.ndim == dst.ndim and \
+                src.shape[0] == dst.shape[0] and src.shape[1] == 1:
+            # stacked (layers, 1, ...) -> row `slot` of (layers, B, ...)
+            return jax.lax.dynamic_update_slice_in_dim(dst, src, slot, axis=1)
+        if src.ndim == dst.ndim and src.shape[0] == 1:
+            return jax.lax.dynamic_update_slice_in_dim(dst, src, slot, axis=0)
+        raise ValueError(f"unscatterable leaf {src.shape} -> {dst.shape}")
+
+    return jax.tree.map(one, dst_tree, src_tree)
+
+
+class ContinuousBatcher:
+    def __init__(self, model: Model, run: RunConfig, params, *,
+                 num_slots: int = 8, cache_len: int = 512,
+                 eos_token: Optional[int] = None, seed: int = 0):
+        self.model = model
+        self.run = run
+        self.params = params
+        self.num_slots = num_slots
+        self.cache_len = cache_len
+        self.eos_token = eos_token
+        self._key = jax.random.PRNGKey(seed)
+
+        self._prefill = jax.jit(make_prefill_step(model, run,
+                                                  cache_len=cache_len))
+        self._decode = jax.jit(make_decode_step(model, run))
+
+        caches = model.init_decode_state(num_slots, cache_len)
+        self.state = ServeState(
+            caches=caches,
+            lengths=jnp.zeros((num_slots,), jnp.int32),
+            extras={})
+        self._tokens = jnp.zeros((num_slots,), jnp.int32)
+        self._slots: List[Optional[RequestState]] = [None] * num_slots
+        self.queue: List[Request] = []
+        self.completed: List[RequestState] = []
+        self.ticks = 0
+        self._occupancy_sum = 0
+
+    # -- admission ----------------------------------------------------------
+
+    def submit(self, request: Request) -> None:
+        self.queue.append(request)
+
+    def _free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self._slots) if s is None]
+
+    def _admit(self) -> None:
+        for slot in self._free_slots():
+            if not self.queue:
+                break
+            req = self.queue.pop(0)
+            prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+            batch = {"tokens": prompt}
+            for k, v in req.extras.items():
+                batch[k] = jnp.asarray(v)[None]
+            one_state, logits = self._prefill(self.params, batch)
+            self.state = ServeState(
+                caches=_scatter_rows(self.state.caches, one_state.caches,
+                                     slot),
+                lengths=self.state.lengths.at[slot].set(
+                    one_state.lengths[0]),
+                extras=self.state.extras)
+            self._key, sub = jax.random.split(self._key)
+            tok = int(sample_token(logits, sub, req.temperature)[0])
+            rs = RequestState(req, slot, admitted_at=time.perf_counter())
+            rs.generated.append(tok)
+            self._tokens = self._tokens.at[slot].set(tok)
+            self._slots[slot] = rs
+            self._maybe_finish(rs, tok)
+
+    # -- stepping -----------------------------------------------------------
+
+    def _maybe_finish(self, rs: RequestState, tok: int) -> None:
+        if rs.done:
+            return
+        if (self.eos_token is not None and tok == self.eos_token) or \
+                len(rs.generated) >= rs.request.max_new_tokens:
+            rs.finished_at = time.perf_counter()
+            self.completed.append(rs)
+            self._slots[rs.slot] = None
+
+    def tick(self) -> int:
+        """Admit + one decode step for all resident requests.
+        Returns the number of live requests stepped."""
+        self._admit()
+        live = [s for s in self._slots if s is not None]
+        if not live:
+            return 0
+        self.ticks += 1
+        self._occupancy_sum += len(live)
+        new_state, logits = self._decode(self.params, self.state,
+                                         self._tokens[:, None])
+        self.state = new_state
+        self._key, sub = jax.random.split(self._key)
+        toks = sample_token(logits, sub, live[0].request.temperature)
+        for rs in list(live):
+            tok = int(toks[rs.slot])
+            rs.generated.append(tok)
+            self._tokens = self._tokens.at[rs.slot].set(tok)
+            self._maybe_finish(rs, tok)
+        return len(live)
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> List[RequestState]:
+        while (self.queue or any(self._slots)) and self.ticks < max_ticks:
+            if self.tick() == 0 and not self.queue:
+                break
+        return self.completed
+
+    # -- stats ----------------------------------------------------------------
+
+    @property
+    def mean_occupancy(self) -> float:
+        return self._occupancy_sum / max(self.ticks, 1)

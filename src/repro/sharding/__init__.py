@@ -1,0 +1,6 @@
+from repro.sharding.specs import (  # noqa: F401
+    activation_sharding,
+    param_specs,
+    named_shardings,
+    data_axes_of,
+)

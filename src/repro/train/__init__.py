@@ -1,0 +1,3 @@
+from repro.train.optimizer import make_optimizer, Optimizer  # noqa: F401
+from repro.train.train_step import make_train_step, TrainState  # noqa: F401
+from repro.train.serve_step import make_prefill_step, make_decode_step  # noqa: F401

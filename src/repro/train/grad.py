@@ -1,0 +1,57 @@
+"""Gradient machinery: microbatch accumulation, compression, loss helpers."""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy_loss(logits: jax.Array, targets: jax.Array,
+                       z_loss: float = 0.0) -> Tuple[jax.Array, Dict]:
+    """Token-level CE with optional z-loss. logits (B,S,V), targets (B,S)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    mask = (targets >= 0).astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(nll * mask) / denom
+    metrics = {"ce_loss": loss}
+    if z_loss > 0.0:
+        zl = z_loss * jnp.sum(jnp.square(lse) * mask) / denom
+        loss = loss + zl
+        metrics["z_loss"] = zl
+    acc = jnp.sum((jnp.argmax(logits, -1) == targets) * mask) / denom
+    metrics["accuracy"] = acc
+    return loss, metrics
+
+
+# --------------------------------------------------------------------------
+# gradient compression
+# --------------------------------------------------------------------------
+
+def compress_int8_ef(grads, error_buf):
+    """Int8 quantization with error feedback.
+
+    Returns (dequantized grads to apply, new error buffer).  On a real TPU
+    deployment the int8 representation is what crosses the ICI links (paired
+    with an int8 all-reduce); here the quantization error dynamics — the part
+    that affects convergence — are exact.
+    """
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        deq = q.astype(jnp.float32) * scale
+        return deq, gf - deq
+
+    out = jax.tree.map(one, grads, error_buf)
+    deq = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    err = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return deq, err
+
+
+def init_error_buffer(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

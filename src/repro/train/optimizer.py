@@ -1,0 +1,180 @@
+"""In-house optimizers (no external deps): AdamW, Adafactor, SGD-momentum,
+with warmup/cosine schedules and global-norm clipping.
+
+Adafactor is the default for the trillion-byte archs (deepseek-v3, llama4,
+command-r): its factored second moment keeps optimizer state at O(rows+cols)
+instead of O(rows*cols), which is what makes those models fit 16 GB/chip HBM
+at 512 chips (see EXPERIMENTS.md §Dry-run).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.config import TrainConfig
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], Tuple[Any, Any]]
+    # update(grads, state, params, step) -> (new_params, new_state)
+
+
+# --------------------------------------------------------------------------
+# schedules
+# --------------------------------------------------------------------------
+
+def make_schedule(cfg: TrainConfig) -> Callable[[jax.Array], jax.Array]:
+    warm, total, base = cfg.warmup_steps, cfg.total_steps, cfg.lr
+
+    def sched(step: jax.Array) -> jax.Array:
+        step = step.astype(jnp.float32)
+        warm_lr = base * (step + 1) / max(warm, 1)
+        if cfg.schedule == "constant":
+            post = jnp.asarray(base, jnp.float32)
+        elif cfg.schedule == "linear":
+            frac = jnp.clip((step - warm) / max(total - warm, 1), 0.0, 1.0)
+            post = base * (1.0 - frac)
+        else:  # cosine
+            frac = jnp.clip((step - warm) / max(total - warm, 1), 0.0, 1.0)
+            post = 0.5 * base * (1.0 + jnp.cos(math.pi * frac))
+        return jnp.where(step < warm, warm_lr, post)
+
+    return sched
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads)]
+    gnorm = jnp.sqrt(sum(leaves))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gnorm
+
+
+# --------------------------------------------------------------------------
+# AdamW
+# --------------------------------------------------------------------------
+
+def _adamw(cfg: TrainConfig) -> Optimizer:
+    sched = make_schedule(cfg)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params), "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        lr = sched(step)
+        t = step.astype(jnp.float32) + 1.0
+        c1 = 1.0 - cfg.b1 ** t
+        c2 = 1.0 - cfg.b2 ** t
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m_new = cfg.b1 * m + (1 - cfg.b1) * gf
+            v_new = cfg.b2 * v + (1 - cfg.b2) * jnp.square(gf)
+            mh, vh = m_new / c1, v_new / c2
+            delta = mh / (jnp.sqrt(vh) + cfg.eps)
+            if p.ndim >= 2:  # no decay on norms/biases
+                delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m_new, v_new
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m, "v": new_v}
+
+    return Optimizer(init, update)
+
+
+# --------------------------------------------------------------------------
+# Adafactor (factored second moment, no first moment)
+# --------------------------------------------------------------------------
+
+def _adafactor(cfg: TrainConfig) -> Optimizer:
+    sched = make_schedule(cfg)
+    d_clip = 1.0  # update clipping threshold (Shazeer & Stern)
+
+    def init(params):
+        def slot(p):
+            if p.ndim >= 2:
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),     # row stats
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"slots": jax.tree.map(slot, params,
+                                      is_leaf=lambda x: hasattr(x, "ndim"))}
+
+    def update(grads, state, params, step):
+        lr = sched(step)
+        t = step.astype(jnp.float32) + 1.0
+        beta2 = 1.0 - t ** -0.8  # standard adafactor decay schedule
+
+        def upd(g, slot, p):
+            gf = g.astype(jnp.float32)
+            g2 = jnp.square(gf) + 1e-30
+            if p.ndim >= 2:
+                vr = beta2 * slot["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * slot["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                vhat = (vr[..., None] * vc[..., None, :]
+                        / (jnp.mean(vr, axis=-1, keepdims=True)[..., None] + 1e-30))
+                new_slot = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * slot["v"] + (1 - beta2) * g2
+                vhat = v
+                new_slot = {"v": v}
+            u = gf / (jnp.sqrt(vhat) + 1e-30)
+            # update clipping: rms(u) <= d_clip
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / d_clip)
+            delta = u
+            if p.ndim >= 2:
+                delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), new_slot
+
+        out = jax.tree.map(upd, grads, state["slots"], params,
+                           is_leaf=lambda x: isinstance(x, dict) and ("vr" in x or "v" in x))
+        new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_slots = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"slots": new_slots}
+
+    return Optimizer(init, update)
+
+
+# --------------------------------------------------------------------------
+# SGD + momentum
+# --------------------------------------------------------------------------
+
+def _sgdm(cfg: TrainConfig) -> Optimizer:
+    sched = make_schedule(cfg)
+
+    def init(params):
+        return {"m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(grads, state, params, step):
+        lr = sched(step)
+
+        def upd(g, m, p):
+            m_new = cfg.b1 * m + g.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * m_new).astype(p.dtype), m_new
+
+        out = jax.tree.map(upd, grads, state["m"], params)
+        new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m}
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(cfg: TrainConfig) -> Optimizer:
+    if cfg.optimizer == "adamw":
+        return _adamw(cfg)
+    if cfg.optimizer == "adafactor":
+        return _adafactor(cfg)
+    if cfg.optimizer == "sgdm":
+        return _sgdm(cfg)
+    raise ValueError(f"unknown optimizer {cfg.optimizer}")

@@ -1,0 +1,122 @@
+"""Serve-step factories: prefill / decode / generate.
+
+``make_prefill_step`` runs the full prompt through the model, filling the KV
+caches (attention) or computing the final recurrent state (SSM), and returns
+the last-position logits.  ``make_decode_step`` advances one token per batch
+element against the cached state — this is the function the ``decode_*`` and
+``long_*`` dry-run shapes lower.
+
+State layout follows the training-side scan: caches are stacked over
+super-blocks so decode lowers to a single ``lax.scan`` over layers.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec
+from repro.models.model import Model
+from repro.utils.config import RunConfig
+
+
+class ServeState(NamedTuple):
+    caches: Any           # stacked per-super-block decode caches
+    lengths: jax.Array    # (B,) int32 tokens consumed so far
+    extras: Dict[str, jax.Array]  # enc_out / vision_embeds, static per request
+
+
+def make_prefill_step(model: Model, run: RunConfig,
+                      cache_len: Optional[int] = None
+                      ) -> Callable[..., Tuple[ServeState, jax.Array]]:
+    """Returns prefill(params, batch) -> (ServeState, last_logits (B, V))."""
+    cfg = model.cfg
+    max_len = cache_len or run.shape.seq_len
+
+    def prefill_step(params, batch: Dict) -> Tuple[ServeState, jax.Array]:
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        caches = model.init_decode_state(b, max_len)
+        extras: Dict[str, jax.Array] = {}
+        if cfg.family == "audio":
+            from repro.utils.config import ParallelConfig
+            par = run.parallel
+            enc_out = encdec.encode(params, cfg, par, batch["frames"])
+            extras["enc_out"] = enc_out
+            logits, new_caches = encdec.decode_forward(
+                params, cfg, par, tokens, enc_out, decode_state=caches,
+                decode=False)
+        else:
+            fkw = {}
+            if cfg.family == "vlm":
+                extras["vision_embeds"] = batch["vision_embeds"]
+                fkw["vision_embeds"] = batch["vision_embeds"]
+            logits, new_caches, _ = model.forward(
+                params, tokens, decode_state=caches, decode=False, **fkw)
+        lengths = jnp.full((b,), s, jnp.int32)
+        return ServeState(new_caches, lengths, extras), logits[:, -1]
+
+    return prefill_step
+
+
+def make_decode_step(model: Model, run: RunConfig
+                     ) -> Callable[..., Tuple[ServeState, jax.Array]]:
+    """Returns decode(params, state, tokens (B,1)) -> (state', logits (B, V))."""
+    cfg = model.cfg
+
+    def decode_step(params, state: ServeState, tokens: jax.Array
+                    ) -> Tuple[ServeState, jax.Array]:
+        positions = state.lengths[:, None]  # (B, 1) per-request positions
+        if cfg.family == "audio":
+            logits, new_caches = encdec.decode_forward(
+                params, cfg, run.parallel, tokens, state.extras["enc_out"],
+                positions=positions, decode_state=state.caches, decode=True)
+        else:
+            fkw = {}
+            if cfg.family == "vlm":
+                fkw["vision_embeds"] = state.extras["vision_embeds"]
+            logits, new_caches, _ = model.forward(
+                params, tokens, positions=positions, decode_state=state.caches,
+                decode=True, **fkw)
+        new_state = ServeState(new_caches, state.lengths + 1, state.extras)
+        return new_state, logits[:, -1]
+
+    return decode_step
+
+
+# --------------------------------------------------------------------------
+# generation loop (examples / integration tests)
+# --------------------------------------------------------------------------
+
+def sample_token(logits: jax.Array, key: jax.Array, temperature: float = 0.0
+                 ) -> jax.Array:
+    """logits (B, V) -> (B,) int32. temperature 0 = greedy."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature, axis=-1).astype(jnp.int32)
+
+
+def generate(model: Model, run: RunConfig, params, batch: Dict, *,
+             num_steps: int, temperature: float = 0.0, seed: int = 0,
+             cache_len: Optional[int] = None) -> jax.Array:
+    """Prefill + autoregressive decode. Returns generated tokens (B, steps)."""
+    prompt = batch["tokens"]
+    b = prompt.shape[0]
+    cache_len = cache_len or (prompt.shape[1] + num_steps)
+    prefill = jax.jit(make_prefill_step(model, run, cache_len=cache_len))
+    decode = jax.jit(make_decode_step(model, run))
+
+    state, logits = prefill(params, batch)
+    key = jax.random.PRNGKey(seed)
+
+    toks = []
+    tok = sample_token(logits, key, temperature)
+    toks.append(tok)
+    for i in range(num_steps - 1):
+        key, sub = jax.random.split(key)
+        state, logits = decode(params, state, tok[:, None])
+        tok = sample_token(logits, sub, temperature)
+        toks.append(tok)
+    return jnp.stack(toks, axis=1)

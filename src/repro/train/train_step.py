@@ -1,0 +1,128 @@
+"""Train-step factory.
+
+Produces a jit-able ``train_step(state, batch) -> (state, metrics)`` with:
+
+- microbatch gradient accumulation via ``lax.scan`` (per-microbatch gradient
+  reduction lets XLA overlap the data-parallel reduce with the next
+  microbatch's compute);
+- mixed precision: fp32 (or bf16) master params, bf16 compute copies.  With
+  ``grad_compression="bf16"`` gradients are taken w.r.t. the bf16 copies so
+  the cross-data-axis all-reduce happens in bf16 (half the collective bytes —
+  visible in the dry-run HLO); ``int8_ef`` adds error-feedback int8
+  quantization on top;
+- global-norm clipping, z-loss, MoE aux loss, DeepSeek MTP loss.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.models.transformer import mtp_logits
+from repro.train.grad import (
+    compress_int8_ef, cross_entropy_loss, init_error_buffer)
+from repro.train.optimizer import Optimizer, clip_by_global_norm, make_schedule
+from repro.utils.config import RunConfig
+from repro.utils.trees import tree_cast
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jax.Array
+    error_buf: Optional[Any] = None  # int8-EF compression residual
+
+
+def init_train_state(model: Model, run: RunConfig, optimizer: Optimizer,
+                     key: jax.Array) -> TrainState:
+    params = model.init(key)
+    params = tree_cast(params, jnp.dtype(run.train.param_dtype))
+    opt_state = optimizer.init(params)
+    err = (init_error_buffer(params)
+           if run.parallel.grad_compression == "int8_ef" else None)
+    return TrainState(params, opt_state, jnp.zeros((), jnp.int32), err)
+
+
+def make_train_step(model: Model, run: RunConfig, optimizer: Optimizer
+                    ) -> Callable[[TrainState, Dict], Tuple[TrainState, Dict]]:
+    cfg = model.cfg
+    tc = run.train
+    par = run.parallel
+    compute_dtype = jnp.dtype(tc.compute_dtype)
+    n_micro = par.microbatch
+
+    def loss_fn(params_c, batch):
+        inputs, targets = batch["inputs"], batch["targets"]
+        fkw = {}
+        if cfg.family == "vlm":
+            fkw["vision_embeds"] = batch["vision_embeds"]
+        if cfg.family == "audio":
+            fkw["frames"] = batch["frames"]
+        if cfg.mtp_depth > 0:
+            from repro.models.layers import lm_logits
+            h, _, aux = model.forward(params_c, inputs, return_hidden=True, **fkw)
+            logits = lm_logits(params_c["embed"], h)
+        else:
+            logits, _, aux = model.forward(params_c, inputs, **fkw)
+        loss, metrics = cross_entropy_loss(logits, targets, z_loss=tc.z_loss)
+        if cfg.is_moe:
+            loss = loss + tc.moe_aux_loss * aux
+            metrics["moe_aux"] = aux
+        if cfg.mtp_depth > 0:
+            positions = jnp.arange(inputs.shape[1])
+            lg2 = mtp_logits(params_c, cfg, par, h, targets, positions)
+            mtp_tgt = jnp.concatenate(
+                [targets[:, 1:], jnp.full_like(targets[:, :1], -1)], axis=1)
+            mtp_loss, _ = cross_entropy_loss(lg2, mtp_tgt)
+            loss = loss + 0.3 * mtp_loss
+            metrics["mtp_loss"] = mtp_loss
+        metrics["loss"] = loss
+        return loss, metrics
+
+    def grads_of(params, batch):
+        if par.grad_compression in ("bf16", "int8_ef"):
+            # differentiate w.r.t. the bf16 copies: the DP all-reduce of the
+            # cotangents is then bf16 (half the bytes on the wire)
+            params_c = tree_cast(params, compute_dtype)
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params_c, batch)
+            grads = tree_cast(grads, jnp.float32)
+        else:
+            def f32_loss(p, b):
+                return loss_fn(tree_cast(p, compute_dtype), b)
+            (loss, metrics), grads = jax.value_and_grad(f32_loss, has_aux=True)(
+                params, batch)
+        return grads, metrics
+
+    def train_step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
+        if n_micro > 1:
+            def micro(acc, mb):
+                g, m = grads_of(state.params, mb)
+                return jax.tree.map(jnp.add, acc, g), m
+
+            mb_batch = jax.tree.map(
+                lambda x: x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:]),
+                batch)
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            grads, metrics = jax.lax.scan(micro, zero, mb_batch)
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+        else:
+            grads, metrics = grads_of(state.params, batch)
+
+        new_err = state.error_buf
+        if par.grad_compression == "int8_ef":
+            grads, new_err = compress_int8_ef(grads, state.error_buf)
+
+        grads, gnorm = clip_by_global_norm(grads, tc.grad_clip)
+        new_params, new_opt = optimizer.update(grads, state.opt_state,
+                                               state.params, state.step)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        metrics["lr"] = make_schedule(tc)(state.step)
+        return TrainState(new_params, new_opt, state.step + 1, new_err), metrics
+
+    return train_step

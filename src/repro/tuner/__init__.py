@@ -1,0 +1,3 @@
+from repro.tuner.space import framework_space, config_to_parallel_kv  # noqa: F401
+from repro.tuner.compiled_env import CompiledPerfEnv  # noqa: F401
+from repro.tuner.runner import transfer_tune  # noqa: F401

@@ -1,0 +1,66 @@
+"""Transfer-tuning runner: CAMEO (or a baseline) on a (source, target) pair.
+
+The canonical production flow: collect a cheap observational dataset in the
+source (analytic staging model or a previously-measured cell), then tune the
+expensive target (a compiled cell, a different shape, a different arch, or
+the multi-pod topology) under a fixed intervention budget.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.baselines import make_baseline
+from repro.core.cameo import Cameo, Dataset
+from repro.core.query import Query, parse_query
+
+
+@dataclass
+class TuneResult:
+    method: str
+    best_config: Optional[Dict]
+    best_y: float
+    trace_best_y: List[float]
+    wall_s: float
+    extras: Dict[str, Any] = field(default_factory=dict)
+
+
+def transfer_tune(
+    method: str,
+    source_env,
+    target_env,
+    *,
+    budget: int = 50,
+    n_source: int = 300,
+    n_target_init: int = 5,
+    query_text: str = "minimize step_time within {budget} samples",
+    seed: int = 0,
+) -> TuneResult:
+    t0 = time.time()
+    d_s = source_env.dataset(n_source, seed=seed + 1)
+
+    if method == "cameo":
+        q = parse_query(query_text.format(budget=budget))
+        # optimization operates on the TARGET's configuration space; source
+        # measurements map onto the shared options (missing ones take the
+        # target default) — the paper's software-change setting
+        cam = Cameo(target_env.space, q, d_s,
+                    counter_names=source_env.counter_names, seed=seed)
+        cam.seed_target(target_env.dataset(n_target_init, seed=seed + 2))
+        cfg, y = cam.run(target_env, budget)
+        return TuneResult(
+            method="cameo", best_config=cfg, best_y=y,
+            trace_best_y=list(cam.trace.best_y), wall_s=time.time() - t0,
+            extras={"k": cam.k, "reduced_space": list(cam.reduced_names),
+                    "extraction_s": cam.extraction_s})
+
+    tuner = make_baseline(method, target_env.space, d_s,
+                          counter_names=source_env.counter_names, seed=seed)
+    cfg, y = tuner.run(target_env, budget)
+    return TuneResult(method=method, best_config=cfg, best_y=y,
+                      trace_best_y=list(tuner.trace.best_y),
+                      wall_s=time.time() - t0)

@@ -1,0 +1,70 @@
+"""The framework's own tunable surface as a CAMEO ConfigSpace.
+
+These are the cross-stack knobs a TPU performance engineer actually turns —
+the analogue of the paper's cpu_frequency / swappiness / dirty_ratio, with
+the same properties: they interact, some combinations are invalid, and their
+effect flips across environments (a tp that is optimal for a 15B dense model
+is over-sharded for a 1B one).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+from repro.core.spaces import ConfigSpace, Option
+from repro.utils.config import ModelConfig, ParallelConfig
+
+
+def framework_space(cfg: ModelConfig, kind: str = "train") -> ConfigSpace:
+    opts = [
+        Option("microbatch", (1, 2, 4, 8), default=1),
+        Option("remat", ("none", "dots", "full"), default="none",
+               kind="categorical"),
+        Option("sp", (0, 1), default=0, kind="boolean"),
+        Option("grad_compression", ("none", "bf16", "int8_ef"),
+               default="none", kind="categorical"),
+        Option("scan_layers", (0, 1), default=1, kind="boolean"),
+        Option("fsdp", (1, 2), default=2),
+    ]
+    if not cfg.is_attention_free:
+        opts.append(Option("attn_q_block", (256, 512, 1024), default=512))
+        opts.append(Option("attn_kv_block", (512, 1024, 2048), default=1024))
+    if cfg.family in ("ssm", "hybrid"):
+        opts.append(Option("ssm_chunk", (128, 256, 512), default=256))
+    if cfg.is_moe:
+        opts.append(Option("moe_group_size", (256, 512, 1024), default=512))
+        opts.append(Option("moe_expert_axis", ("model", "data"),
+                           default="model", kind="categorical"))
+    if kind != "train":
+        opts = [o for o in opts
+                if o.name in ("attn_kv_block", "sp", "scan_layers",
+                              "moe_group_size", "moe_expert_axis",
+                              "ssm_chunk")]
+        if not opts:
+            opts = [Option("scan_layers", (0, 1), default=1, kind="boolean")]
+    return ConfigSpace(opts)
+
+
+def config_to_parallel_kv(config: Dict[str, Any]) -> str:
+    """Tuner config -> the dryrun --parallel override string."""
+    items = []
+    for k, v in config.items():
+        if k == "ssm_chunk":
+            continue  # model-config knob, handled separately
+        items.append(f"{k}={v}")
+    return ",".join(items)
+
+
+def apply_config(par: ParallelConfig, config: Dict[str, Any]) -> ParallelConfig:
+    kw = {}
+    for k, v in config.items():
+        if k == "ssm_chunk":
+            continue
+        cur = getattr(par, k)
+        if isinstance(cur, bool):
+            kw[k] = bool(v)
+        elif isinstance(cur, int):
+            kw[k] = int(v)
+        else:
+            kw[k] = v
+    return par.replace(**kw)

@@ -1,0 +1,9 @@
+from repro.utils.config import (  # noqa: F401
+    ModelConfig,
+    MeshConfig,
+    ParallelConfig,
+    TrainConfig,
+    RunConfig,
+    frozen,
+)
+from repro.utils.hardware import HardwareSpec, TPU_V5E, TPU_V4_LIKE  # noqa: F401

@@ -1,0 +1,39 @@
+"""Structured run logging (stdout + JSONL metrics file)."""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+from typing import Any, Dict, Optional
+
+
+class MetricsLogger:
+    def __init__(self, path: Optional[str] = None, name: str = "run"):
+        self.name = name
+        self.path = path
+        self._fh = None
+        if path:
+            os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+            self._fh = open(path, "a", buffering=1)
+        self._t0 = time.time()
+
+    def log(self, step: int, **metrics: Any) -> None:
+        rec: Dict[str, Any] = {"step": step, "t": round(time.time() - self._t0, 3)}
+        rec.update({k: (float(v) if hasattr(v, "item") else v) for k, v in metrics.items()})
+        if self._fh:
+            self._fh.write(json.dumps(rec) + "\n")
+        msg = " ".join(f"{k}={_fmt(v)}" for k, v in rec.items())
+        print(f"[{self.name}] {msg}", file=sys.stderr)
+
+    def close(self) -> None:
+        if self._fh:
+            self._fh.close()
+            self._fh = None
+
+
+def _fmt(v):
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return v

@@ -1,0 +1,19 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests run on 1 CPU device by
+design (the 512-device flag belongs exclusively to repro.launch.dryrun)."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def tiny_model_config(**kw):
+    from repro.utils.config import ModelConfig
+
+    base = dict(vocab_size=64, d_model=32, num_heads=4, num_kv_heads=2,
+                d_ff=64, num_layers=2, dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)

@@ -1,0 +1,170 @@
+"""Checkpoint manager + fault-tolerant driver + elastic/straggler logic."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_model_config
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import make_data
+from repro.models.model import build_model
+from repro.runtime.driver import FaultInjector, TrainDriver
+from repro.runtime.elastic import adjust_run_for_devices, viable_mesh_shape
+from repro.runtime.straggler import StragglerMonitor
+from repro.train.optimizer import make_optimizer
+from repro.train.train_step import init_train_state, make_train_step
+from repro.utils.config import (MeshConfig, ParallelConfig, RunConfig,
+                                ShapeConfig, TrainConfig)
+from repro.utils.logging import MetricsLogger
+from repro.utils.trees import tree_allclose
+
+
+def _tree(key=0):
+    k = jax.random.PRNGKey(key)
+    return {"a": jax.random.normal(k, (4, 8)),
+            "b": {"c": jnp.arange(10, dtype=jnp.int32),
+                  "d": jax.random.normal(k, (3,)).astype(jnp.bfloat16)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    t = _tree()
+    mgr.save(7, t, extra={"note": "hi"}, blocking=True)
+    assert mgr.latest_step() == 7
+    restored = mgr.restore(7, jax.eval_shape(lambda: t))
+    assert tree_allclose(t, restored)
+    assert mgr.restore_extra(7)["note"] == "hi"
+
+
+def test_checkpoint_keep_k_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _tree(s), blocking=True)
+    assert mgr.all_steps() == [3, 4]
+
+
+def test_checkpoint_async_then_wait(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(1, _tree(), blocking=False)
+    mgr.wait()
+    assert mgr.latest_step() == 1
+
+
+def test_checkpoint_ignores_partial_tmp(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(1, _tree(), blocking=True)
+    # a crashed save leaves a tmp dir: must not be listed as a step
+    os.makedirs(tmp_path / "step_9.tmp.1234")
+    assert mgr.all_steps() == [1]
+    # a committed dir without manifest is also ignored
+    os.makedirs(tmp_path / "step_8")
+    assert mgr.all_steps() == [1]
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(1, {"a": jnp.zeros((2, 2))}, blocking=True)
+    with pytest.raises(ValueError):
+        mgr.restore(1, {"a": jax.ShapeDtypeStruct((3, 3), jnp.float32)})
+
+
+# --------------------------------------------------------------------------
+# driver fault tolerance
+# --------------------------------------------------------------------------
+
+def _make_driver(tmp_path, fault_steps=()):
+    cfg = tiny_model_config()
+    run = RunConfig(
+        model=cfg, shape=ShapeConfig("train", 16, 4, "train"),
+        mesh=MeshConfig(shape=(1,), axes=("data",)),
+        parallel=ParallelConfig(),
+        train=TrainConfig(lr=1e-3, warmup_steps=2, total_steps=20),
+        checkpoint_dir=str(tmp_path), checkpoint_every=3, log_every=100,
+    )
+    model = build_model(cfg, run.parallel)
+    opt = make_optimizer(run.train)
+    step_fn = jax.jit(make_train_step(model, run, opt))
+
+    def init_state():
+        return init_train_state(model, run, opt, jax.random.PRNGKey(0))
+
+    data = make_data(cfg, run.shape, seed=0)
+    ckpt = CheckpointManager(str(tmp_path), keep=2)
+    return TrainDriver(run, step_fn, init_state, data, ckpt,
+                       logger=MetricsLogger(name="test"),
+                       fault_injector=FaultInjector(list(fault_steps)))
+
+
+def test_driver_runs_to_completion(tmp_path):
+    d = _make_driver(tmp_path)
+    state = d.run_steps(10)
+    assert int(state.step) == 10
+
+
+def test_driver_restarts_after_faults_bitexact(tmp_path):
+    d_fault = _make_driver(tmp_path / "a", fault_steps=[5, 8])
+    s_fault = d_fault.run_steps(10)
+    assert d_fault.restarts == 2
+
+    d_clean = _make_driver(tmp_path / "b")
+    s_clean = d_clean.run_steps(10)
+    assert int(s_fault.step) == int(s_clean.step) == 10
+    assert tree_allclose(s_fault.params, s_clean.params, rtol=1e-6, atol=1e-7)
+
+
+def test_driver_gives_up_after_max_restarts(tmp_path):
+    d = _make_driver(tmp_path, fault_steps=list(range(1, 50)))
+    d.max_restarts = 3
+    with pytest.raises(RuntimeError):
+        d.run_steps(10)
+
+
+# --------------------------------------------------------------------------
+# straggler + elastic
+# --------------------------------------------------------------------------
+
+def test_straggler_flags_persistently_slow_host():
+    mon = StragglerMonitor(num_hosts=4, threshold=1.5, patience=3)
+    for _ in range(5):
+        mon.report({0: 1.0, 1: 1.0, 2: 1.0, 3: 3.0})
+    assert 3 in mon.flagged()
+    assert mon.should_exclude(3)
+    assert not mon.should_exclude(0)
+
+
+def test_straggler_recovers():
+    mon = StragglerMonitor(num_hosts=2, threshold=1.5, patience=2)
+    mon.report({0: 1.0, 1: 5.0})
+    for _ in range(20):
+        mon.report({0: 1.0, 1: 1.0})
+    assert mon.flagged() == []
+
+
+def test_viable_mesh_shape():
+    assert viable_mesh_shape(256, 16) == (16, 16)
+    assert viable_mesh_shape(192, 16) == (12, 16)
+    assert viable_mesh_shape(100, 16) == (25, 4)
+
+
+def test_adjust_run_for_devices_preserves_global_batch():
+    cfg = tiny_model_config()
+    run = RunConfig(model=cfg, shape=ShapeConfig("t", 32, 48, "train"),
+                    mesh=MeshConfig((16, 16), ("data", "model")),
+                    parallel=ParallelConfig(tp=16, microbatch=1))
+    new = adjust_run_for_devices(run, 128)
+    assert new.mesh.num_devices == 128
+    data_size = dict(zip(new.mesh.axes, new.mesh.shape)).get("data")
+    assert new.shape.global_batch % (data_size * new.parallel.microbatch) == 0
+
+
+def test_elastic_restore_roundtrip(tmp_path):
+    """Checkpoint written under one config restores under another mesh
+    (single-device CPU: exercises the template/sharding plumbing)."""
+    mgr = CheckpointManager(str(tmp_path), keep=1)
+    t = _tree()
+    mgr.save(3, t, blocking=True)
+    restored = mgr.restore(3, jax.eval_shape(lambda: t), shardings=None)
+    assert tree_allclose(t, restored)

@@ -1,0 +1,266 @@
+"""CAMEO core: CI tests, discovery, ACE, Markov blankets, GP/CGP,
+acquisition, epsilon, query parsing, and the full Algorithm 1 loop."""
+
+import numpy as np
+import pytest
+
+from repro.core.ace import adjusted_effect, choose_k, rank_by_ace
+from repro.core.acquisition import combined_acquisition, expected_improvement
+from repro.core.cameo import Cameo, Dataset
+from repro.core.ci_tests import fisher_z, mutual_info, partial_correlation
+from repro.core.discovery import (BIDIRECTED, DIRECTED, UNDIRECTED,
+                                  CausalGraph, fci_lite)
+from repro.core.epsilon import hull_volume_fraction, observation_epsilon
+from repro.core.gp import fit_gp, gp_predict
+from repro.core.markov_blanket import top_k_blanket
+from repro.core.query import parse_query
+from repro.core.spaces import ConfigSpace, Option
+from repro.envs.sandbox import SandboxSCMEnv, make_sandbox_pair
+
+
+# -- CI tests ---------------------------------------------------------------
+
+def test_fisher_z_detects_dependence_and_independence(rng):
+    n = 400
+    x = rng.standard_normal(n)
+    z = rng.standard_normal(n)
+    y = 2 * x + 0.1 * rng.standard_normal(n)
+    w = rng.standard_normal(n)
+    data = np.column_stack([x, y, z, w])
+    _, ind_xy = fisher_z(data, 0, 1, [])
+    _, ind_xw = fisher_z(data, 0, 3, [])
+    assert not ind_xy
+    assert ind_xw
+
+
+def test_fisher_z_conditional_independence(rng):
+    n = 600
+    z = rng.standard_normal(n)
+    x = z + 0.3 * rng.standard_normal(n)
+    y = z + 0.3 * rng.standard_normal(n)
+    data = np.column_stack([x, y, z])
+    _, ind_marginal = fisher_z(data, 0, 1, [])
+    _, ind_given_z = fisher_z(data, 0, 1, [2])
+    assert not ind_marginal
+    assert ind_given_z
+
+
+def test_partial_correlation_range(rng):
+    data = rng.standard_normal((100, 3))
+    r = partial_correlation(data, 0, 1, [2])
+    assert -1.0 <= r <= 1.0
+
+
+def test_mutual_info_discrete(rng):
+    n = 500
+    x = rng.integers(0, 3, n)
+    y = (x + rng.integers(0, 2, n)) % 3   # dependent
+    w = rng.integers(0, 3, n)             # independent
+    data = np.column_stack([x, y, w]).astype(float)
+    _, ind_xy = mutual_info(data, 0, 1, [], rng=rng)
+    _, ind_xw = mutual_info(data, 0, 2, [], rng=rng)
+    assert not ind_xy
+    assert ind_xw
+
+
+# -- graph + discovery -------------------------------------------------------
+
+def test_graph_markov_blanket():
+    g = CausalGraph(["a", "b", "c", "d", "e"])
+    g.add_edge("a", "c", DIRECTED)    # parent
+    g.add_edge("c", "d", DIRECTED)    # child
+    g.add_edge("e", "d", DIRECTED)    # spouse
+    assert g.markov_blanket("c") == {"a", "d", "e"}
+
+
+def test_graph_shd():
+    g1 = CausalGraph(["a", "b", "c"])
+    g1.add_edge("a", "b", DIRECTED)
+    g2 = CausalGraph(["a", "b", "c"])
+    g2.add_edge("b", "a", DIRECTED)
+    g2.add_edge("b", "c", DIRECTED)
+    assert g1.shd(g1.copy()) == 0
+    assert g1.shd(g2) == 2  # reversed + extra
+
+
+def test_discovery_chain(rng):
+    # x -> y -> z: skeleton must be x-y-z without x-z
+    n = 800
+    x = rng.standard_normal(n)
+    y = 1.5 * x + 0.4 * rng.standard_normal(n)
+    z = 1.5 * y + 0.4 * rng.standard_normal(n)
+    g = fci_lite(np.column_stack([x, y, z]), ["x", "y", "z"])
+    assert g.has_edge("x", "y")
+    assert g.has_edge("y", "z")
+    assert not g.has_edge("x", "z")
+
+
+def test_discovery_v_structure(rng):
+    # x -> z <- y (collider): discovery must orient both into z
+    n = 1000
+    x = rng.standard_normal(n)
+    y = rng.standard_normal(n)
+    z = x + y + 0.3 * rng.standard_normal(n)
+    g = fci_lite(np.column_stack([x, y, z]), ["x", "y", "z"],
+                 entropic_orient=False)
+    assert g.edge_kind("x", "z") == DIRECTED
+    assert g.edge_kind("y", "z") == DIRECTED
+    assert not g.has_edge("x", "y")
+
+
+def test_discovery_sandbox_recovers_invariant_cause():
+    env = SandboxSCMEnv("small", seed=0)
+    d = env.dataset(600, seed=1)
+    data, names = d.matrix(env.space, env.counter_names)
+    g = fci_lite(data, names)
+    # swappiness must be connected to the objective (directly or via blanket)
+    mb = g.markov_blanket("__objective__")
+    assert "swappiness" in mb or g.has_edge("swappiness", "__objective__")
+
+
+# -- ACE + blanket ------------------------------------------------------------
+
+def test_ace_ranks_true_cause_above_inert():
+    env = SandboxSCMEnv("small", seed=0)
+    d = env.dataset(600, seed=1)
+    data, names = d.matrix(env.space, env.counter_names)
+    g = fci_lite(data, names)
+    ranked = dict(rank_by_ace(data, names, "__objective__", g))
+    assert ranked["swappiness"] > ranked["vfs_cache_pressure"]
+    assert ranked["dirty_ratio"] > ranked["vfs_cache_pressure"]
+
+
+def test_choose_k_elbow():
+    ranked = [("a", 1.0), ("b", 0.9), ("c", 0.1), ("d", 0.05)]
+    assert choose_k(ranked) == 2
+
+
+def test_top_k_blanket_includes_top_nodes():
+    g = CausalGraph(["a", "b", "y"])
+    g.add_edge("a", "y", DIRECTED)
+    mb = top_k_blanket(g, [("a", 1.0), ("b", 0.01)], 1, "y")
+    assert "a" in mb
+
+
+# -- GP / acquisition ---------------------------------------------------------
+
+def test_gp_fits_smooth_function(rng):
+    x = rng.uniform(0, 1, (40, 2))
+    y = np.sin(3 * x[:, 0]) + x[:, 1] ** 2
+    fit = fit_gp(x, y)
+    xq = rng.uniform(0, 1, (20, 2))
+    mu, sd = gp_predict(fit, xq)
+    yq = np.sin(3 * xq[:, 0]) + xq[:, 1] ** 2
+    assert np.mean(np.abs(np.asarray(mu) - yq)) < 0.25
+    assert np.all(np.asarray(sd) > 0)
+
+
+def test_gp_interpolates_training_points(rng):
+    x = rng.uniform(0, 1, (15, 1))
+    y = 2 * x[:, 0]
+    fit = fit_gp(x, y, noises=(1e-4,))
+    mu, sd = gp_predict(fit, x)
+    np.testing.assert_allclose(np.asarray(mu), y, atol=0.1)
+
+
+def test_expected_improvement_properties():
+    mu = np.array([0.0, 1.0, 2.0])
+    sd = np.array([0.5, 0.5, 0.5])
+    ei = expected_improvement(mu, sd, best=1.0)
+    assert ei[0] > ei[1] > ei[2]   # lower predicted mean -> higher EI (min)
+    assert (ei >= 0).all()
+
+
+def test_combined_acquisition_gating():
+    ei_warm = np.array([1.0, 0.95, 0.2])
+    ei_cold = np.array([0.1, 0.9, 0.9])
+    alpha, lam = combined_acquisition(ei_warm, ei_cold, l_alpha=0.1)
+    assert lam[0] == 1.0 and lam[1] == 1.0 and lam[2] == 0.0
+    # near-warm-optimal points scored by cold, others by warm
+    assert alpha[2] == pytest.approx(0.0, abs=1e-9)  # normalized warm min
+
+
+# -- epsilon -------------------------------------------------------------------
+
+def test_hull_volume_monotone(rng):
+    pts = rng.uniform(0.4, 0.6, (10, 3))
+    v1 = hull_volume_fraction(pts)
+    pts2 = np.vstack([pts, [[0.0, 0.0, 0.0], [1.0, 1.0, 1.0]]])
+    v2 = hull_volume_fraction(pts2)
+    assert 0.0 <= v1 <= v2 <= 1.0
+
+
+def test_observation_epsilon_bounds(rng):
+    pts = rng.uniform(0, 1, (5, 2))
+    assert 0.0 <= observation_epsilon(pts, 5, 50) <= 1.0
+    assert observation_epsilon(pts, 0, 50) <= 0.1
+
+
+# -- query engine ----------------------------------------------------------------
+
+def test_parse_query_budget_samples():
+    q = parse_query("How to improve latency within 1 hour or 50 samples")
+    assert q.objective == "latency"
+    assert q.budget_samples == 50
+    assert q.budget_seconds == 3600.0
+
+
+def test_parse_query_constraint():
+    q = parse_query("I want to find the configuration with minimum energy "
+                    "for which latency is less than 20 seconds within 45 minutes")
+    assert q.objective == "energy"
+    assert ("latency", "<", 20.0) in q.constraints
+    assert q.budget_seconds == 45 * 60
+
+
+def test_parse_query_throughput_maximizes():
+    q = parse_query("maximize throughput within 30 samples")
+    assert q.maximize
+
+
+def test_query_satisfies():
+    q = parse_query("minimize energy for which latency is less than 10 s")
+    assert q.satisfies({"latency": 5.0, "energy": 1.0})
+    assert not q.satisfies({"latency": 15.0, "energy": 1.0})
+
+
+# -- full Algorithm 1 -----------------------------------------------------------
+
+def test_cameo_end_to_end_sandbox():
+    src, tgt = make_sandbox_pair(0)
+    d_s = src.dataset(300, seed=1)
+    q = parse_query("How to improve latency within 30 samples")
+    cam = Cameo(src.space, q, d_s, counter_names=src.counter_names, seed=0)
+    # knowledge extraction found the true causal options
+    assert "swappiness" in cam.reduced_names
+    cam.seed_target(tgt.dataset(5, seed=2))
+    cfg, y = cam.run(tgt, budget=25)
+    assert np.isfinite(y)
+    opt = tgt.optimum()
+    assert y < opt * 1.25   # within 25% of the noise-free optimum
+    # budget accounting: exactly 25 rounds
+    assert len(cam.trace.action) == 25
+
+
+def test_cameo_constraint_handling():
+    src, tgt = make_sandbox_pair(0)
+    d_s = src.dataset(150, seed=1)
+    # unsatisfiable: latency can never go below 0.001
+    q = parse_query("minimize latency for which latency is less than 0.001 "
+                    "within 10 samples")
+    assert ("latency", "<", 0.001) in q.constraints
+    cam = Cameo(src.space, q, d_s, counter_names=src.counter_names, seed=0)
+    cam.run(tgt, budget=6)
+    _, y = cam.best
+    assert not np.isfinite(y)  # nothing feasible -> inf
+
+
+def test_cameo_best_monotone():
+    src, tgt = make_sandbox_pair(1)
+    d_s = src.dataset(200, seed=3)
+    q = parse_query("minimize latency within 20 samples")
+    cam = Cameo(src.space, q, d_s, counter_names=src.counter_names, seed=1)
+    cam.seed_target(tgt.dataset(5, seed=4))
+    cam.run(tgt, budget=15)
+    b = cam.trace.best_y
+    assert all(b[i + 1] <= b[i] + 1e-9 for i in range(len(b) - 1))

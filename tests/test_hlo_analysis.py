@@ -1,0 +1,118 @@
+"""HLO analyzer unit tests on synthetic module text (no devices needed)."""
+
+import pytest
+
+from repro.launch.hlo_analysis import analyze_hlo, collective_schedule
+
+SIMPLE = """
+HloModule jit_f, entry_computation_layout={(f32[8,16])->f32[8,16]}
+
+ENTRY %main.1 (p: f32[8,16]) -> f32[8,16] {
+  %p = f32[8,16]{1,0} parameter(0)
+  %w = f32[16,16]{1,0} constant({...})
+  ROOT %dot = f32[8,16]{1,0} dot(%p, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+
+def test_simple_dot_flops_and_bytes():
+    c = analyze_hlo(SIMPLE)
+    assert c.flops == 2 * 8 * 16 * 16
+    # reads p + w, writes result
+    assert c.bytes_accessed == (8 * 16 + 16 * 16 + 8 * 16) * 4
+
+
+WHILE = """
+HloModule jit_g
+
+%body (param: (s32[], f32[4,4])) -> (s32[], f32[4,4]) {
+  %param = (s32[], f32[4,4]) parameter(0)
+  %i = s32[] get-tuple-element(%param), index=0
+  %x = f32[4,4]{1,0} get-tuple-element(%param), index=1
+  %one = s32[] constant(1)
+  %i2 = s32[] add(%i, %one)
+  %x2 = f32[4,4]{1,0} multiply(%x, %x)
+  ROOT %t = (s32[], f32[4,4]) tuple(%i2, %x2)
+}
+
+%cond (param.1: (s32[], f32[4,4])) -> pred[] {
+  %param.1 = (s32[], f32[4,4]) parameter(0)
+  %i.1 = s32[] get-tuple-element(%param.1), index=0
+  %n = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i.1, %n), direction=LT
+}
+
+ENTRY %main.2 (a: f32[4,4]) -> f32[4,4] {
+  %a = f32[4,4]{1,0} parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[4,4]) tuple(%z, %a)
+  %w = (s32[], f32[4,4]) while(%t0), condition=%cond, body=%body
+  ROOT %out = f32[4,4]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_while_trip_count_from_condition():
+    c = analyze_hlo(WHILE)
+    # multiply: 16 flops/iteration x 10 trips (plus the scalar add)
+    assert c.flops == pytest.approx(10 * (16 + 1))
+
+
+WHILE_BACKEND = WHILE.replace(
+    "body=%body", 'body=%body, backend_config={"known_trip_count":{"n":"7"}}')
+
+
+def test_while_trip_count_from_backend_config():
+    c = analyze_hlo(WHILE_BACKEND)
+    assert c.flops == pytest.approx(7 * 17)
+
+
+COLL = """
+HloModule jit_h
+
+ENTRY %main.3 (a: bf16[128,64]) -> bf16[128,64] {
+  %a = bf16[128,64]{1,0} parameter(0)
+  %ag = bf16[128,256]{1,0} all-gather(%a), dimensions={1}, replica_groups=[2,4]<=[8]
+  %c = bf16[128,64]{1,0} slice(%ag), slice={[0:128],[0:64]}
+  ROOT %ar = bf16[128,64]{1,0} all-reduce(%c), to_apply=%add
+}
+"""
+
+
+def test_collective_bytes_by_kind():
+    c = analyze_hlo(COLL)
+    assert c.collective_bytes["all-gather"] == 128 * 64 * 2
+    assert c.collective_bytes["all-reduce"] == 128 * 64 * 2
+    assert c.collective_count == {"all-gather": 1, "all-reduce": 1}
+    assert c.total_collective_bytes == 2 * 128 * 64 * 2
+
+
+SCOPED = """
+HloModule jit_k
+
+ENTRY %main.4 (q: bf16[64,32]) -> f32[64,64] {
+  %q = bf16[64,32]{1,0} parameter(0)
+  %s = f32[64,64]{1,0} dot(%q, %q), lhs_contracting_dims={1}, rhs_contracting_dims={1}, metadata={op_name="jit(k)/repro_kernel.flash_attention/dot"}
+  %e = f32[64,64]{1,0} exponential(%s), metadata={op_name="jit(k)/repro_kernel.flash_attention/exp"}
+  ROOT %o = f32[64,64]{1,0} add(%e, %e), metadata={op_name="jit(k)/consumer/add"}
+}
+"""
+
+
+def test_kernel_scope_elides_interior_bytes_keeps_flops():
+    c = analyze_hlo(SCOPED)
+    # flops: dot 2*64*64*32 + exp 64*64 + add 64*64
+    assert c.flops == 2 * 64 * 64 * 32 + 2 * 64 * 64
+    # bytes: dot reads q twice (both operands cross the scope boundary),
+    # e's write is charged (read by the out-of-scope add), the s->e interior
+    # round-trip is elided; add charges its operands + result
+    q_reads = 2 * 64 * 32 * 2
+    e_write = 64 * 64 * 4
+    add_io = 3 * 64 * 64 * 4
+    assert c.bytes_accessed == q_reads + e_write + add_io
+
+
+def test_collective_schedule_listing():
+    sched = collective_schedule(COLL)
+    assert len(sched) == 2
+    assert "all-gather" in sched[0]
