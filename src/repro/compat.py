@@ -1,0 +1,157 @@
+"""Version-compatibility shims for the jax APIs this repo leans on.
+
+The reproduction targets the pinned container jax (0.4.37 today) while the
+code is written against the modern surface; every API that moved, was
+renamed, or changed signature between jax 0.4.x and 0.6+ is centralized here
+behind a stable function.  Nothing outside this module may touch
+``jax.experimental.pallas.tpu`` attributes or version-gated ``jax.sharding``
+lookups directly — kernels go through :mod:`repro.kernels.dispatch`, which in
+turn goes through here.
+
+Shimmed surfaces
+----------------
+- ``jax.sharding.get_abstract_mesh`` (added ~0.5): :func:`get_abstract_mesh`
+  falls back to the thread-local physical mesh that ``with mesh:`` installs
+  on 0.4.x.
+- ``AbstractMesh`` constructor: 0.4.x takes ``((name, size), ...)``, newer
+  jax takes ``(sizes, names)`` — :func:`make_abstract_mesh` accepts the
+  modern form everywhere.
+- ``pltpu.TPUCompilerParams`` -> ``pltpu.CompilerParams`` rename:
+  :func:`tpu_compiler_params` builds whichever class exists and silently
+  drops kwargs the pinned class does not know.
+- pallas-TPU availability: CPU-only jaxlib builds may lack the mosaic
+  lowering entirely; ``HAS_PALLAS_TPU`` gates it and :func:`pallas_tpu`
+  raises a actionable error instead of an AttributeError mid-kernel.
+- tree utils: ``jax.tree.map`` only exists from 0.4.26; :func:`tree_map`
+  always works.
+"""
+
+from __future__ import annotations
+
+import inspect
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+
+try:  # pallas is present in every pinned container; TPU lowering may not be
+    from jax.experimental import pallas as pl  # noqa: F401
+    from jax.experimental.pallas import tpu as _pltpu
+
+    HAS_PALLAS_TPU = True
+except ImportError:  # pragma: no cover - exercised on stripped builds only
+    _pltpu = None
+    HAS_PALLAS_TPU = False
+
+
+# --------------------------------------------------------------------------
+# pallas TPU surface
+# --------------------------------------------------------------------------
+
+def pallas_tpu():
+    """The ``jax.experimental.pallas.tpu`` module, or a clear error."""
+    if _pltpu is None:
+        raise ImportError(
+            "jax.experimental.pallas.tpu is unavailable in this jaxlib "
+            "build; run kernels in 'ref' mode (REPRO_KERNEL_MODE=ref)")
+    return _pltpu
+
+
+def _compiler_params_cls():
+    tpu = pallas_tpu()
+    cls = getattr(tpu, "CompilerParams", None)  # jax >= 0.6 name
+    if cls is None:
+        cls = getattr(tpu, "TPUCompilerParams", None)  # 0.4.x - 0.5 name
+    if cls is None:  # pragma: no cover - no known jax lacks both
+        raise AttributeError("no pallas TPU CompilerParams class found")
+    return cls
+
+
+def tpu_compiler_params(**kwargs) -> Any:
+    """``CompilerParams``/``TPUCompilerParams`` with unknown kwargs dropped.
+
+    Dropping (rather than raising) keeps kernels expressible against the
+    newest parameter set while still compiling on the pinned jax.
+    """
+    cls = _compiler_params_cls()
+    accepted = set(inspect.signature(cls).parameters)
+    return cls(**{k: v for k, v in kwargs.items() if k in accepted})
+
+
+def vmem(shape: Tuple[int, ...], dtype) -> Any:
+    """A VMEM scratch-shape allocation request."""
+    return pallas_tpu().VMEM(shape, dtype)
+
+
+def prefetch_scalar_grid_spec(*, num_scalar_prefetch: int, grid, in_specs,
+                              out_specs, scratch_shapes=()) -> Any:
+    return pallas_tpu().PrefetchScalarGridSpec(
+        num_scalar_prefetch=num_scalar_prefetch, grid=grid,
+        in_specs=in_specs, out_specs=out_specs,
+        scratch_shapes=list(scratch_shapes))
+
+
+# --------------------------------------------------------------------------
+# mesh lookups
+# --------------------------------------------------------------------------
+
+def get_abstract_mesh() -> Optional[Any]:
+    """The mesh currently installed by a ``with mesh:`` context, or None.
+
+    On modern jax this is ``jax.sharding.get_abstract_mesh()``; on 0.4.x the
+    equivalent signal is the thread-local *physical* mesh.  Both expose
+    ``axis_names`` / ``shape``, which is all the sharding rules consume.
+    """
+    gam = getattr(jax.sharding, "get_abstract_mesh", None)
+    if gam is not None:
+        m = gam()
+        return None if m is None or m.empty else m
+    from jax._src import mesh as mesh_lib  # jax <= 0.4.x
+
+    env = getattr(mesh_lib, "thread_resources", None)
+    m = getattr(getattr(env, "env", None), "physical_mesh", None)
+    if m is None or m.empty:
+        return None
+    return m
+
+
+def set_mesh(mesh: Any):
+    """Context manager installing ``mesh`` for tracing/dispatch.
+
+    Modern jax spells this ``jax.set_mesh``; on 0.4.x the ``Mesh`` object is
+    itself the context manager and installs the thread-local physical mesh
+    that :func:`get_abstract_mesh` reads back.
+    """
+    sm = getattr(jax, "set_mesh", None)
+    if sm is not None:
+        return sm(mesh)
+    return mesh
+
+
+def make_abstract_mesh(axis_sizes: Sequence[int],
+                       axis_names: Sequence[str]) -> Any:
+    """``AbstractMesh(axis_sizes, axis_names)`` across the constructor skew."""
+    from jax.sharding import AbstractMesh
+
+    params = list(inspect.signature(AbstractMesh.__init__).parameters)
+    if "shape_tuple" in params:  # jax 0.4.x: one ((name, size), ...) tuple
+        return AbstractMesh(tuple(zip(axis_names, axis_sizes)))
+    return AbstractMesh(tuple(axis_sizes), tuple(axis_names))
+
+
+# --------------------------------------------------------------------------
+# tree utils
+# --------------------------------------------------------------------------
+
+_tree = getattr(jax, "tree", jax.tree_util)
+
+
+def tree_map(f, tree, *rest, is_leaf=None):
+    return _tree.map(f, tree, *rest, is_leaf=is_leaf) \
+        if hasattr(_tree, "map") else \
+        jax.tree_util.tree_map(f, tree, *rest, is_leaf=is_leaf)
+
+
+def tree_leaves(tree, is_leaf=None):
+    if hasattr(_tree, "leaves"):
+        return _tree.leaves(tree, is_leaf=is_leaf)
+    return jax.tree_util.tree_leaves(tree, is_leaf=is_leaf)

@@ -1,3 +1,5 @@
 from repro.envs.base import PerfEnv, PooledEnv  # noqa: F401
 from repro.envs.sandbox import SandboxSCMEnv, make_sandbox_pair  # noqa: F401
 from repro.envs.analytic import AnalyticTPUEnv, tpu_config_space  # noqa: F401
+from repro.envs.kernel_launch import (  # noqa: F401
+    KernelLaunchEnv, KernelWorkload)

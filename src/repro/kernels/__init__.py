@@ -1,3 +1,10 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Kernel families (flash_attention / mamba_scan / ssd / rmsnorm).
+
+Every family ships a Pallas TPU kernel (``<family>/kernel.py``), a pure-jax
+oracle (``<family>/ref.py``), and registers itself with the unified dispatch
+registry (``dispatch.py``); ``ops.py`` holds the public entry points.  Add a
+new family only for compute hot-spots worth a custom kernel, and register it
+so its launch parameters join the tunable surface.
+"""
+
+from repro.kernels import dispatch  # noqa: F401  (registry side effects)

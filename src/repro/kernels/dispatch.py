@@ -1,0 +1,322 @@
+"""Unified kernel dispatch: one registry routing every kernel family to the
+Pallas TPU kernel, the Pallas interpreter, or the pure-jax reference.
+
+Why a registry
+--------------
+The serve/train/benchmark surfaces all need the same decision — "which
+implementation of flash_attention/mamba_scan/ssd/rmsnorm runs here?" — and
+the answer depends on the detected backend, an env-var override, and (for
+the Pallas paths) launch parameters.  Centralizing it means:
+
+- CPU-only hosts (this container, CI) execute everything through the
+  reference or the Pallas interpreter without any call-site branching;
+- kernel *launch parameters* (block sizes, chunk lengths) become first-class
+  configuration options: :func:`launch_space` exposes them as a
+  ``repro.core.spaces.ConfigSpace`` so CAMEO tunes them exactly like the
+  paper tunes cpu_frequency or swappiness, and :func:`use_launch_config`
+  installs a tuned configuration for everything dispatched underneath it.
+
+Modes
+-----
+``ref`` | ``pallas`` | ``pallas_interpret``; the ``REPRO_KERNEL_MODE`` env
+var overrides, otherwise TPU backends get ``pallas`` and everything else
+gets ``ref``.
+
+Precedence for launch parameters (highest first): an active tuned config
+installed via :func:`use_launch_config` (the tuner speaking — it must win so
+a tuned serve/train step does not silently fall back to static defaults),
+then explicit call-site keyword arguments, then the registry defaults.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import functools
+import importlib
+import inspect
+import os
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
+
+import jax
+
+from repro import compat
+from repro.core.spaces import ConfigSpace, Option
+
+REF = "ref"
+PALLAS = "pallas"
+PALLAS_INTERPRET = "pallas_interpret"
+MODES = (REF, PALLAS, PALLAS_INTERPRET)
+
+KERNEL_MODE_ENV = "REPRO_KERNEL_MODE"
+
+
+def detect_backend() -> str:
+    """The effective jax backend: 'tpu' | 'gpu' | 'cpu'."""
+    return jax.default_backend()
+
+
+def default_mode(backend: Optional[str] = None) -> str:
+    """Dispatch mode before per-call overrides: env var, then backend."""
+    env = os.environ.get(KERNEL_MODE_ENV, "")
+    if env:
+        if env not in MODES:
+            raise ValueError(
+                f"{KERNEL_MODE_ENV}={env!r} is not one of {MODES}")
+        return env
+    backend = backend or detect_backend()
+    if backend == "tpu" and compat.HAS_PALLAS_TPU:
+        return PALLAS
+    return REF
+
+
+# --------------------------------------------------------------------------
+# registry
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class KernelFamily:
+    """One kernel family: implementations + its tunable launch surface.
+
+    ``pallas``/``ref`` are lazy ``"module:attr"`` references so importing the
+    registry never imports kernel modules (and therefore never requires a
+    functional pallas lowering).  ``variants`` holds secondary entry points
+    that share the family's launch surface (e.g. decode attention).
+    """
+
+    name: str
+    pallas: str
+    ref: str
+    launch_options: Tuple[Option, ...] = ()
+    variants: Tuple[Tuple[str, Tuple[str, str]], ...] = ()  # (name, (pallas, ref))
+
+    def option(self, name: str) -> Option:
+        for o in self.launch_options:
+            if o.name == name:
+                return o
+        raise KeyError(f"{self.name} has no launch option {name!r}")
+
+
+_REGISTRY: Dict[str, KernelFamily] = {}
+
+
+def register_family(fam: KernelFamily) -> KernelFamily:
+    if fam.name in _REGISTRY:
+        raise ValueError(f"kernel family {fam.name!r} already registered")
+    _REGISTRY[fam.name] = fam
+    return fam
+
+
+def get_family(name: str) -> KernelFamily:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown kernel family {name!r}; known: {sorted(_REGISTRY)}")
+
+
+def families() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+@functools.lru_cache(maxsize=None)
+def _load(ref: str) -> Callable:
+    module, attr = ref.split(":")
+    return getattr(importlib.import_module(module), attr)
+
+
+def _impl_ref(fam: KernelFamily, mode: str, variant: Optional[str]) -> str:
+    pallas, ref = fam.pallas, fam.ref
+    if variant is not None:
+        pallas, ref = dict(fam.variants)[variant]
+    return ref if mode == REF else pallas
+
+
+def pallas_fn(family: str, variant: Optional[str] = None) -> Callable:
+    return _load(_impl_ref(get_family(family), PALLAS, variant))
+
+
+def ref_fn(family: str, variant: Optional[str] = None) -> Callable:
+    return _load(_impl_ref(get_family(family), REF, variant))
+
+
+# --------------------------------------------------------------------------
+# launch configuration
+# --------------------------------------------------------------------------
+
+_local = threading.local()
+
+
+def _active() -> Dict[str, Dict[str, Any]]:
+    return getattr(_local, "launch", {})
+
+
+def split_launch_config(config: Dict[str, Any]) -> Dict[str, Dict[str, Any]]:
+    """Normalize flat ``{"family.param": v}`` / nested dicts to nested form.
+
+    Unknown families or parameters raise — a tuned configuration that cannot
+    land on a real launch knob is a bug in the space, not noise to ignore.
+    """
+    nested: Dict[str, Dict[str, Any]] = {}
+    for key, val in (config or {}).items():
+        if isinstance(val, dict):
+            fam_name, params = key, val
+        elif "." in key:
+            fam_name, pname = key.split(".", 1)
+            params = {pname: val}
+        else:
+            raise KeyError(
+                f"launch config key {key!r} is not 'family.param' or nested")
+        fam = get_family(fam_name)
+        for pname, v in params.items():
+            fam.option(pname)  # existence check
+            nested.setdefault(fam_name, {})[pname] = v
+    return nested
+
+
+@contextlib.contextmanager
+def use_launch_config(config: Optional[Dict[str, Any]]):
+    """Install a tuned launch configuration for dispatches underneath.
+
+    Accepts flat (``{"flash_attention.q_block": 256}``) or nested
+    (``{"flash_attention": {"q_block": 256}}``) form; nests are merged over
+    any outer active config.  Values are trace-time constants: wrapping the
+    traced body of a jit-compiled serve/train step bakes them into that
+    trace.  jax's jit cache does NOT see the active config — re-entering an
+    already-compiled step under a different config is a cache hit that keeps
+    the old launch geometry.  Deploying a new config to a jitted step
+    requires a fresh jit (or threading the config through static args).
+    """
+    overrides = split_launch_config(config or {})
+    prev = _active()
+    merged = {f: dict(p) for f, p in prev.items()}
+    for f, p in overrides.items():
+        merged.setdefault(f, {}).update(p)
+    _local.launch = merged
+    try:
+        yield
+    finally:
+        _local.launch = prev
+
+
+def launch_params(family: str, **explicit: Any) -> Dict[str, Any]:
+    """Resolved launch parameters: active tuned > explicit (non-None) > default."""
+    fam = get_family(family)
+    out = {o.name: o.default for o in fam.launch_options}
+    out.update({k: v for k, v in explicit.items() if v is not None})
+    out.update(_active().get(family, {}))
+    unknown = set(explicit) - {o.name for o in fam.launch_options}
+    if unknown:
+        raise KeyError(f"{family} has no launch options {sorted(unknown)}")
+    return out
+
+
+@dataclass(frozen=True)
+class Resolution:
+    """Outcome of one dispatch decision."""
+    family: str
+    mode: str
+    interpret: bool
+    launch: Dict[str, Any] = field(default_factory=dict)
+
+    @property
+    def impl(self) -> Callable:
+        return pallas_fn(self.family) if self.mode != REF else ref_fn(self.family)
+
+
+def resolve(family: str, mode: Optional[str] = None,
+            **explicit: Any) -> Resolution:
+    mode = mode or default_mode()
+    if mode not in MODES:
+        raise ValueError(f"mode {mode!r} not one of {MODES}")
+    return Resolution(family=family, mode=mode,
+                      interpret=(mode == PALLAS_INTERPRET),
+                      launch=launch_params(family, **explicit))
+
+
+def dispatch(family: str, *args: Any, mode: Optional[str] = None,
+             variant: Optional[str] = None, launch: Optional[Dict] = None,
+             **kwargs: Any) -> Any:
+    """Generic router: run ``family`` on the resolved implementation.
+
+    Launch parameters the chosen implementation does not accept (e.g.
+    ``q_block`` on a reference that has no blocking) are dropped by
+    signature inspection, so one launch config drives every mode.
+    """
+    res = resolve(family, mode=mode, **(launch or {}))
+    fn = _load(_impl_ref(get_family(family), res.mode, variant))
+    accepted = set(inspect.signature(fn).parameters)
+    kw = {k: v for k, v in res.launch.items() if k in accepted}
+    kw.update(kwargs)
+    if res.mode != REF and "interpret" in accepted:
+        kw["interpret"] = res.interpret
+    return fn(*args, **kw)
+
+
+# --------------------------------------------------------------------------
+# the tunable launch surface
+# --------------------------------------------------------------------------
+
+def launch_space(names: Optional[Iterable[str]] = None) -> ConfigSpace:
+    """Every registered launch parameter as one CAMEO ``ConfigSpace``.
+
+    Options are prefixed ``family.param`` so the space composes with the
+    framework-level space (``repro.tuner.space``) without name collisions.
+    """
+    opts: List[Option] = []
+    for fname in (sorted(names) if names is not None else families()):
+        fam = get_family(fname)
+        for o in fam.launch_options:
+            opts.append(Option(f"{fname}.{o.name}", o.values,
+                               default=o.default, kind=o.kind))
+    return ConfigSpace(opts)
+
+
+# --------------------------------------------------------------------------
+# built-in families
+# --------------------------------------------------------------------------
+# Domains are MXU/VPU-aligned recommended-value lists (the analogue of the
+# paper's Tables 7-12); defaults match the historical call-site defaults.
+
+register_family(KernelFamily(
+    name="flash_attention",
+    pallas="repro.kernels.flash_attention.kernel:flash_attention_pallas",
+    ref="repro.kernels.flash_attention.ref:attention_blockwise_ref",
+    launch_options=(
+        Option("q_block", (128, 256, 512, 1024), default=512),
+        Option("kv_block", (256, 512, 1024, 2048), default=1024),
+    ),
+    variants=(
+        ("decode", ("repro.kernels.flash_attention.kernel:decode_attention_pallas",
+                    "repro.kernels.flash_attention.ref:decode_attention_ref")),
+    ),
+))
+
+register_family(KernelFamily(
+    name="mamba_scan",
+    pallas="repro.kernels.mamba_scan.kernel:selective_scan_pallas",
+    ref="repro.kernels.mamba_scan.ref:selective_scan_chunked_ref",
+    launch_options=(
+        Option("chunk", (64, 128, 256, 512), default=256),
+        Option("c_block", (128, 256, 512, 1024), default=512),
+    ),
+))
+
+register_family(KernelFamily(
+    name="ssd",
+    pallas="repro.kernels.ssd.kernel:ssd_pallas",
+    ref="repro.kernels.ssd.ref:ssd_ref",
+    launch_options=(
+        Option("chunk", (32, 64, 128, 256), default=64),
+    ),
+))
+
+register_family(KernelFamily(
+    name="rmsnorm",
+    pallas="repro.kernels.rmsnorm.kernel:rmsnorm_pallas",
+    ref="repro.kernels.rmsnorm.ref:rmsnorm_ref",
+    launch_options=(
+        Option("row_block", (64, 128, 256, 512), default=256),
+    ),
+))

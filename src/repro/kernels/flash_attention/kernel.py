@@ -24,7 +24,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro import compat
 
 NEG_INF = -1e30
 _LANE = 128  # TPU lane width: scratch second-minor stats padded to this
@@ -149,11 +150,11 @@ def flash_attention_pallas(
         out_specs=pl.BlockSpec((1, q_block, 1, dv), lambda ib, ih, iq, ikv: (ib, iq, ih, 0)),
         out_shape=jax.ShapeDtypeStruct((b, qp.shape[1], hq, dv), q.dtype),
         scratch_shapes=[
-            pltpu.VMEM((q_block, dv), jnp.float32),
-            pltpu.VMEM((q_block, _LANE), jnp.float32),
-            pltpu.VMEM((q_block, _LANE), jnp.float32),
+            compat.vmem((q_block, dv), jnp.float32),
+            compat.vmem((q_block, _LANE), jnp.float32),
+            compat.vmem((q_block, _LANE), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(qp, kp, vp)
@@ -244,7 +245,7 @@ def decode_attention_pallas(
         _decode_kernel, scale=scale, sliding_window=sliding_window,
         logit_softcap=logit_softcap, g=g, kv_block=kv_block, n_kv=n_kv)
 
-    grid_spec = pltpu.PrefetchScalarGridSpec(
+    grid_spec = compat.prefetch_scalar_grid_spec(
         num_scalar_prefetch=1,
         grid=(b, hkv, n_kv),
         in_specs=[
@@ -254,16 +255,16 @@ def decode_attention_pallas(
         ],
         out_specs=pl.BlockSpec((1, 1, g, dv), lambda ib, ih, ikv, len_ref: (ib, 0, ih, 0)),
         scratch_shapes=[
-            pltpu.VMEM((g, dv), jnp.float32),
-            pltpu.VMEM((g, _LANE), jnp.float32),
-            pltpu.VMEM((g, _LANE), jnp.float32),
+            compat.vmem((g, dv), jnp.float32),
+            compat.vmem((g, _LANE), jnp.float32),
+            compat.vmem((g, _LANE), jnp.float32),
         ],
     )
     out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, 1, hq, dv), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(cache_len.astype(jnp.int32), q, kp, vp)

@@ -21,7 +21,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro import compat
 
 
 def _scan_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, h_ref, *,
@@ -96,8 +97,8 @@ def selective_scan_pallas(
         ],
         out_specs=pl.BlockSpec((1, chunk, c_block), lambda ib, ic, it: (ib, it, ic)),
         out_shape=jax.ShapeDtypeStruct((b, l, c), x.dtype),
-        scratch_shapes=[pltpu.VMEM((c_block, n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        scratch_shapes=[compat.vmem((c_block, n), jnp.float32)],
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, dt, A.astype(jnp.float32), Bmat, Cmat, D.astype(jnp.float32)[None, :])

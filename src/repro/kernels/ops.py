@@ -1,6 +1,7 @@
 """Public kernel entry points.
 
-Each op dispatches between the Pallas TPU kernel and the pure-jnp oracle:
+Each op routes through the unified dispatch registry
+(:mod:`repro.kernels.dispatch`):
 
 - on TPU backends the Pallas kernel is used;
 - on CPU (this container) the oracle is used for model execution and XLA cost
@@ -8,17 +9,21 @@ Each op dispatches between the Pallas TPU kernel and the pure-jnp oracle:
   the tests;
 - ``REPRO_KERNEL_MODE`` env var overrides: ``ref`` | ``pallas`` |
   ``pallas_interpret``.
+
+Launch parameters (block sizes, chunk lengths) left as ``None`` resolve
+through the registry: an active tuned configuration installed with
+``dispatch.use_launch_config`` wins, then the registry defaults.  Explicit
+call-site values (e.g. ``par.attn_q_block`` from the parallelism plan) are
+honored unless a tuned configuration is active.
 """
 
 from __future__ import annotations
 
 import functools
-import os
-from functools import partial
 
 import jax
-import jax.numpy as jnp
 
+from repro.kernels import dispatch
 from repro.kernels.flash_attention import ref as _attn_ref
 from repro.kernels.mamba_scan import ref as _scan_ref
 from repro.kernels.rmsnorm import ref as _rms_ref
@@ -26,14 +31,11 @@ from repro.kernels.ssd import ref as _ssd_ref
 
 
 def kernel_mode() -> str:
-    mode = os.environ.get("REPRO_KERNEL_MODE", "")
-    if mode:
-        return mode
-    return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return dispatch.default_mode()
 
 
 def _interpret() -> bool:
-    return kernel_mode() == "pallas_interpret"
+    return kernel_mode() == dispatch.PALLAS_INTERPRET
 
 
 # Every ref-path op body is wrapped in this named scope.  The HLO analyzer
@@ -91,31 +93,31 @@ def _attention_op(causal, sliding_window, logit_softcap, scale, q_offset,
 
 
 def flash_attention(q, k, v, *, causal=True, sliding_window=0, logit_softcap=0.0,
-                    scale=None, q_offset=0, q_block=512, kv_block=1024):
-    if kernel_mode() == "ref":
+                    scale=None, q_offset=0, q_block=None, kv_block=None):
+    res = dispatch.resolve("flash_attention", q_block=q_block,
+                           kv_block=kv_block)
+    if res.mode == dispatch.REF:
         return _attention_op(causal, sliding_window, logit_softcap, scale,
-                             q_offset, kv_block)(q, k, v)
-    from repro.kernels.flash_attention.kernel import flash_attention_pallas
-
-    return flash_attention_pallas(
+                             q_offset, res.launch["kv_block"])(q, k, v)
+    return res.impl(
         q, k, v, causal=causal, sliding_window=sliding_window,
         logit_softcap=logit_softcap, scale=scale, q_offset=q_offset,
-        q_block=q_block, kv_block=kv_block, interpret=_interpret())
+        q_block=res.launch["q_block"], kv_block=res.launch["kv_block"],
+        interpret=res.interpret)
 
 
 def decode_attention(q, k_cache, v_cache, cache_len, *, sliding_window=0,
-                     logit_softcap=0.0, scale=None, kv_block=1024):
-    if kernel_mode() == "ref":
+                     logit_softcap=0.0, scale=None, kv_block=None):
+    res = dispatch.resolve("flash_attention", kv_block=kv_block)
+    if res.mode == dispatch.REF:
         with _scoped("decode_attention"):
             return _attn_ref.decode_attention_ref(
                 q, k_cache, v_cache, cache_len, sliding_window=sliding_window,
                 logit_softcap=logit_softcap, scale=scale)
-    from repro.kernels.flash_attention.kernel import decode_attention_pallas
-
-    return decode_attention_pallas(
-        q, k_cache, v_cache, cache_len, sliding_window=sliding_window,
-        logit_softcap=logit_softcap, scale=scale, kv_block=kv_block,
-        interpret=_interpret())
+    fn = dispatch.pallas_fn("flash_attention", variant="decode")
+    return fn(q, k_cache, v_cache, cache_len, sliding_window=sliding_window,
+              logit_softcap=logit_softcap, scale=scale,
+              kv_block=res.launch["kv_block"], interpret=res.interpret)
 
 
 # --------------------------------------------------------------------------
@@ -130,18 +132,19 @@ def _selective_scan_op(chunk):
     return _recompute_vjp("selective_scan", fn)
 
 
-def selective_scan(x, dt, A, Bmat, Cmat, D, *, chunk=256, return_state=False):
+def selective_scan(x, dt, A, Bmat, Cmat, D, *, chunk=None, c_block=None,
+                   return_state=False):
+    res = dispatch.resolve("mamba_scan", chunk=chunk, c_block=c_block)
     if return_state:
         # the final-state variant is a serving/prefill path (no grad needed)
         with _scoped("selective_scan"):
             return _scan_ref.selective_scan_chunked_ref(
-                x, dt, A, Bmat, Cmat, D, chunk=chunk, return_state=True)
-    if kernel_mode() == "ref":
-        return _selective_scan_op(chunk)(x, dt, A, Bmat, Cmat, D)
-    from repro.kernels.mamba_scan.kernel import selective_scan_pallas
-
-    return selective_scan_pallas(x, dt, A, Bmat, Cmat, D, chunk=chunk,
-                                 interpret=_interpret())
+                x, dt, A, Bmat, Cmat, D, chunk=res.launch["chunk"],
+                return_state=True)
+    if res.mode == dispatch.REF:
+        return _selective_scan_op(res.launch["chunk"])(x, dt, A, Bmat, Cmat, D)
+    return res.impl(x, dt, A, Bmat, Cmat, D, chunk=res.launch["chunk"],
+                    c_block=res.launch["c_block"], interpret=res.interpret)
 
 
 def selective_scan_step(h, x_t, dt_t, A, B_t, C_t, D):
@@ -160,18 +163,19 @@ def _ssd_op(chunk):
     return _recompute_vjp("ssd", fn)
 
 
-def ssd(x, dt, A, Bmat, Cmat, D, *, chunk=64, init_state=None, return_state=False):
+def ssd(x, dt, A, Bmat, Cmat, D, *, chunk=None, init_state=None,
+        return_state=False):
+    res = dispatch.resolve("ssd", chunk=chunk)
     if init_state is not None or return_state:
         with _scoped("ssd"):  # serving/prefill path, no grad
-            return _ssd_ref.ssd_ref(x, dt, A, Bmat, Cmat, D, chunk=chunk,
+            return _ssd_ref.ssd_ref(x, dt, A, Bmat, Cmat, D,
+                                    chunk=res.launch["chunk"],
                                     init_state=init_state,
                                     return_state=return_state)
-    if kernel_mode() == "ref":
-        return _ssd_op(chunk)(x, dt, A, Bmat, Cmat, D)
-    from repro.kernels.ssd.kernel import ssd_pallas
-
-    return ssd_pallas(x, dt, A, Bmat, Cmat, D, chunk=chunk,
-                      interpret=_interpret())
+    if res.mode == dispatch.REF:
+        return _ssd_op(res.launch["chunk"])(x, dt, A, Bmat, Cmat, D)
+    return res.impl(x, dt, A, Bmat, Cmat, D, chunk=res.launch["chunk"],
+                    interpret=res.interpret)
 
 
 def ssd_step(state, x_t, dt_t, A, B_t, C_t, D):
@@ -183,11 +187,10 @@ def ssd_step(state, x_t, dt_t, A, B_t, C_t, D):
 # rmsnorm
 # --------------------------------------------------------------------------
 
-def rmsnorm(x, weight, *, eps=1e-5, residual=None):
-    if kernel_mode() == "ref":
+def rmsnorm(x, weight, *, eps=1e-5, residual=None, row_block=None):
+    res = dispatch.resolve("rmsnorm", row_block=row_block)
+    if res.mode == dispatch.REF:
         with _scoped("rmsnorm"):
             return _rms_ref.rmsnorm_ref(x, weight, eps=eps, residual=residual)
-    from repro.kernels.rmsnorm.kernel import rmsnorm_pallas
-
-    return rmsnorm_pallas(x, weight, eps=eps, residual=residual,
-                          interpret=_interpret())
+    return res.impl(x, weight, eps=eps, residual=residual,
+                    row_block=res.launch["row_block"], interpret=res.interpret)

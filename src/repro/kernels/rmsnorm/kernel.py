@@ -13,7 +13,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro import compat
 
 
 def _rms_kernel(x_ref, w_ref, y_ref, *, eps: float):
@@ -68,7 +69,8 @@ def rmsnorm_pallas(x: jax.Array, weight: jax.Array, *, eps: float = 1e-5,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((row_block, d), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct(xf.shape, x.dtype),
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel",)),
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("parallel",)),
         interpret=interpret,
     )(*args)
     if pad:

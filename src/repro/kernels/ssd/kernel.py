@@ -21,7 +21,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro import compat
 
 
 def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, state_ref, *,
@@ -117,8 +118,8 @@ def ssd_pallas(
         ],
         out_specs=pl.BlockSpec((1, chunk, 1, p), lambda ib, ih, it: (ib, it, ih, 0)),
         out_shape=jax.ShapeDtypeStruct((b, l, h, p), x.dtype),
-        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        scratch_shapes=[compat.vmem((n, p), jnp.float32)],
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, dt, A.astype(jnp.float32)[None, :], Bmat, Cmat,

@@ -16,6 +16,7 @@ import argparse
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs.registry import get_smoke_config, get_model_config, list_archs
 from repro.data.pipeline import make_data
@@ -66,7 +67,7 @@ def main() -> int:
         return init_train_state(model, run, optimizer,
                                 jax.random.PRNGKey(run.train.seed))
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         state_t = jax.eval_shape(init_state)
         step_fn = jax.jit(
             make_train_step(model, run, optimizer),

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.utils.config import ModelConfig, ParallelConfig
 
 
@@ -34,10 +35,8 @@ def data_axes_of(mesh_axes: Tuple[str, ...]) -> Tuple[str, ...]:
 
 
 def _active_mesh() -> Optional[Mesh]:
-    m = jax.sharding.get_abstract_mesh()
-    if m is None or m.empty:
-        return None
-    return m
+    # version-gated lookup (jax.sharding.get_abstract_mesh is 0.5+)
+    return compat.get_abstract_mesh()
 
 
 def activation_sharding(h: jax.Array, par: ParallelConfig) -> jax.Array:
@@ -173,8 +172,8 @@ def param_specs(params_shapes, cfg: ModelConfig, par: ParallelConfig,
 def named_shardings(params_shapes, cfg: ModelConfig, par: ParallelConfig,
                     mesh: Mesh) -> Any:
     specs = param_specs(params_shapes, cfg, par, mesh)
-    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
-                        is_leaf=lambda x: isinstance(x, P))
+    return compat.tree_map(lambda s: NamedSharding(mesh, s), specs,
+                           is_leaf=lambda x: isinstance(x, P))
 
 
 def cache_specs(state_shapes, cfg: ModelConfig, par: ParallelConfig,
@@ -284,7 +283,7 @@ def batch_specs(batch_template, mesh: Mesh):
             return P(daxes, *([None] * (len(leaf.shape) - 1)))
         return P(*([None] * len(leaf.shape)))
 
-    return jax.tree.map(one, batch_template)
+    return compat.tree_map(one, batch_template)
 
 
 def serve_state_specs(state_template, cfg: ModelConfig, par: ParallelConfig,
@@ -307,5 +306,5 @@ def serve_state_specs(state_template, cfg: ModelConfig, par: ParallelConfig,
             out[-1] = "model"
         return P(*out)
 
-    extras = jax.tree.map(extra_spec, state_template.extras)
+    extras = compat.tree_map(extra_spec, state_template.extras)
     return type(state_template)(caches=caches, lengths=lengths, extras=extras)

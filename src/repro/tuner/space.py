@@ -15,7 +15,8 @@ from repro.core.spaces import ConfigSpace, Option
 from repro.utils.config import ModelConfig, ParallelConfig
 
 
-def framework_space(cfg: ModelConfig, kind: str = "train") -> ConfigSpace:
+def framework_space(cfg: ModelConfig, kind: str = "train",
+                    include_kernel_launch: bool = False) -> ConfigSpace:
     opts = [
         Option("microbatch", (1, 2, 4, 8), default=1),
         Option("remat", ("none", "dots", "full"), default="none",
@@ -42,6 +43,26 @@ def framework_space(cfg: ModelConfig, kind: str = "train") -> ConfigSpace:
                               "ssm_chunk")]
         if not opts:
             opts = [Option("scan_layers", (0, 1), default=1, kind="boolean")]
+    if include_kernel_launch:
+        # the dispatch registry's launch parameters (``family.param`` keys)
+        # replace the plan-level block knobs — one source of truth per
+        # parameter, since an active ``dispatch.use_launch_config`` outranks
+        # the ``ParallelConfig`` values at the call sites.  Apply the tuned
+        # values with ``use_launch_config(launch_config_of(config))`` around
+        # the measured step (and re-jit: launch params are baked at trace
+        # time).
+        from repro.kernels import dispatch
+
+        overlap = {"attn_q_block": "flash_attention.q_block",
+                   "attn_kv_block": "flash_attention.kv_block",
+                   "ssm_chunk": "mamba_scan.chunk"}
+        opts = [o for o in opts if o.name not in overlap]
+        launch_families = ["rmsnorm"]
+        if not cfg.is_attention_free:
+            launch_families.append("flash_attention")
+        if cfg.family in ("ssm", "hybrid"):
+            launch_families.extend(["mamba_scan", "ssd"])
+        opts = opts + list(dispatch.launch_space(launch_families).options)
     return ConfigSpace(opts)
 
 
@@ -49,17 +70,23 @@ def config_to_parallel_kv(config: Dict[str, Any]) -> str:
     """Tuner config -> the dryrun --parallel override string."""
     items = []
     for k, v in config.items():
-        if k == "ssm_chunk":
-            continue  # model-config knob, handled separately
+        if k == "ssm_chunk" or "." in k:
+            continue  # model-config / kernel-launch knobs, handled separately
         items.append(f"{k}={v}")
     return ",".join(items)
+
+
+def launch_config_of(config: Dict[str, Any]) -> Dict[str, Any]:
+    """The kernel-launch subset (``family.param`` keys) of a tuner config —
+    feed it to ``repro.kernels.dispatch.use_launch_config`` around the step."""
+    return {k: v for k, v in config.items() if "." in k}
 
 
 def apply_config(par: ParallelConfig, config: Dict[str, Any]) -> ParallelConfig:
     kw = {}
     for k, v in config.items():
-        if k == "ssm_chunk":
-            continue
+        if k == "ssm_chunk" or "." in k:
+            continue  # kernel-launch keys apply via dispatch.use_launch_config
         cur = getattr(par, k)
         if isinstance(cur, bool):
             kw[k] = bool(v)
