@@ -10,13 +10,13 @@ tile the Pallas kernel executes.
 
 from __future__ import annotations
 
-import time
 from typing import List, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.envs.measure import timeit
 from repro.kernels import ops
 from repro.utils.hardware import TPU_V5E
 
@@ -24,13 +24,8 @@ VMEM = TPU_V5E.vmem_bytes
 
 
 def _time(fn, *args, iters=3) -> float:
-    out = fn(*args)
-    jax.block_until_ready(out)
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6  # us
+    # the shared timing harness: warmup + block_until_ready + median-of-k
+    return timeit(lambda: fn(*args), warmup=1, repeats=iters).median_us
 
 
 def _attn_row(b, s, hq, hkv, d, q_block, kv_block):

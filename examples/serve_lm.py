@@ -13,8 +13,7 @@ import numpy as np
 
 from repro import ModelConfig, RunConfig, build_model
 from repro.data import make_data
-from repro.train.serve_step import (make_decode_step, make_prefill_step,
-                                    sample_token)
+from repro.train.serve_step import jitted_steps, sample_token
 from repro.utils.config import MeshConfig, ShapeConfig
 
 
@@ -55,8 +54,8 @@ def main():
     prompts = jnp.asarray(
         data.batch_at(0)["inputs"][:args.batch, :args.prompt_len])
 
-    prefill = jax.jit(make_prefill_step(model, run, cache_len=cache_len))
-    decode = jax.jit(make_decode_step(model, run))
+    # cached jitted pair: repeated runs in one process reuse the compilation
+    prefill, decode = jitted_steps(model, run, cache_len=cache_len)
 
     t0 = time.perf_counter()
     state, logits = prefill(params, {"tokens": prompts})

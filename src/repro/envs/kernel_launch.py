@@ -3,197 +3,89 @@ a CAMEO performance environment.
 
 The configuration options are exactly the launch parameters the unified
 dispatch layer (:mod:`repro.kernels.dispatch`) hands to the Pallas kernels —
-block sizes and chunk lengths, prefixed ``family.param``.  The measurement is
-an analytic launch-geometry model built from the same quantities the real
-kernels derive from those parameters (grid extent, VMEM block footprints,
-streamed HBM bytes, per-step launch overhead), so the tradeoffs are the real
-ones:
+block sizes and chunk lengths, prefixed ``family.param``.  Measurement is
+delegated to a :class:`repro.envs.measure.MeasurementBackend`:
 
-- larger blocks amortize grid/launch overhead but pad more of the sequence
-  and eventually overflow the per-core VMEM budget (infeasible -> the
-  tuner's constraint-handling path);
-- the SSD chunk trades quadratic intra-chunk FLOPs against the length of the
-  sequential inter-chunk chain — a genuine interior optimum;
-- alignment to the 128-wide lane dimension changes MXU utilization.
+- ``analytic`` (default) — the launch-geometry model (grid extent, VMEM
+  block footprints, streamed HBM bytes, per-step launch overhead), so the
+  tradeoffs are the real ones:
 
-Counters play the role of the paper's system events C.  A tuned optimum is
-deployable directly: ``dispatch.use_launch_config(best_config)`` routes every
-subsequently dispatched kernel with the tuned launch parameters.
+  * larger blocks amortize grid/launch overhead but pad more of the sequence
+    and eventually overflow the per-core VMEM budget (infeasible -> the
+    tuner's constraint-handling path);
+  * the SSD chunk trades quadratic intra-chunk FLOPs against the length of
+    the sequential inter-chunk chain — a genuine interior optimum;
+  * alignment to the 128-wide lane dimension changes MXU utilization.
+
+- ``wallclock`` — real timed execution: each family is dispatched through
+  the registry (pallas on TPU, interpret/ref on CPU per
+  ``REPRO_KERNEL_MODE``) and the median of k repeats is the measurement.
+
+Select with the ``backend=`` constructor argument or the
+``REPRO_MEASURE_BACKEND`` env var.  Counters play the role of the paper's
+system events C.  A tuned optimum is deployable directly:
+``dispatch.use_launch_config(best_config)`` routes every subsequently
+dispatched kernel with the tuned launch parameters.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Any, Dict, Iterable, Optional, Tuple
+from typing import Any, Dict, Iterable, Optional, Tuple, Union
 
-import numpy as np
-
+from repro.envs import measure as measure_mod
 from repro.envs.base import PooledEnv
+from repro.envs.measure import (  # noqa: F401  (re-exported for backcompat)
+    BF16, F32, HBM_BYTES_PER_US, LANE, MXU_FLOPS_PER_US, VMEM_LIMIT_BYTES,
+    VPU_FLOPS_PER_US, KernelWorkload, MeasurementBackend)
 from repro.kernels import dispatch
-
-LANE = 128
-VMEM_LIMIT_BYTES = 12 * 2 ** 20   # per-core block budget the model enforces
-MXU_FLOPS_PER_US = 200e6          # ~bf16 peak of one v5e-class core
-VPU_FLOPS_PER_US = 4e6
-HBM_BYTES_PER_US = 0.8e6          # ~819 GB/s
-F32 = 4                           # scratch accumulators
-BF16 = 2                          # streamed in/out blocks
-
-
-def _ceil_div(a: int, b: int) -> int:
-    return -(-a // b)
-
-
-def _padded(a: int, b: int) -> int:
-    return _ceil_div(a, b) * b
-
-
-def _mxu_util(*block_dims: int) -> float:
-    """Fraction of the MXU filled by a tile: 1.0 at lane-aligned >=128."""
-    u = 1.0
-    for d in block_dims:
-        u *= min(d, LANE) / LANE
-    return max(u, 1e-3)
-
-
-@dataclass(frozen=True)
-class KernelWorkload:
-    """One (model shape x batch) cell the kernels run under."""
-
-    name: str = "serve-8b"
-    batch: int = 8
-    seq_len: int = 4096
-    heads: int = 32
-    kv_heads: int = 8
-    head_dim: int = 128
-    d_model: int = 4096
-    # mamba-1 surface
-    channels: int = 8192
-    scan_state: int = 16
-    # mamba-2 surface
-    ssm_heads: int = 64
-    ssm_head_dim: int = 64
-    ssm_state: int = 128
-    vmem_limit: int = VMEM_LIMIT_BYTES
-    launch_overhead_us: float = 1.5
-    noise: float = 0.01
 
 
 class KernelLaunchEnv(PooledEnv):
-    """PerfEnv over ``dispatch.launch_space()`` for a fixed workload."""
+    """PerfEnv over ``dispatch.launch_space()`` for a fixed workload.
 
-    counter_names = ("grid_points", "vmem_peak_bytes", "hbm_bytes", "flops")
+    ``backend`` is a backend name (``"analytic"`` | ``"wallclock"``), an
+    object satisfying :class:`~repro.envs.measure.MeasurementBackend`, or
+    ``None`` (the ``REPRO_MEASURE_BACKEND`` env var, default analytic).
+    ``backend_opts`` are forwarded to the backend constructor (e.g.
+    ``repeats``/``clock`` for wallclock).
+    """
+
+    counter_names = measure_mod.COUNTER_NAMES
 
     def __init__(self, workload: Optional[KernelWorkload] = None,
-                 families: Optional[Iterable[str]] = None, seed: int = 0):
+                 families: Optional[Iterable[str]] = None, seed: int = 0,
+                 backend: Union[None, str, MeasurementBackend] = None,
+                 backend_opts: Optional[Dict[str, Any]] = None):
         self.workload = workload or KernelWorkload()
-        if families is None:
-            # the registry is open; model only the families we have a
-            # geometry model for (newly registered families need one added)
-            families = [f for f in dispatch.families() if f in self._MODELS]
-        self.families = sorted(families)
-        unmodeled = [f for f in self.families if f not in self._MODELS]
-        if unmodeled:
-            raise ValueError(
-                f"no launch-geometry model for families {unmodeled}; "
-                f"modeled: {sorted(self._MODELS)}")
+        if isinstance(backend, (str, type(None))):
+            if families is None:
+                # the registry is open; model only the families we have a
+                # geometry model for (newly registered families need one
+                # added)
+                modeled = measure_mod.modeled_families()
+                families = [f for f in dispatch.families() if f in modeled]
+            self.families = sorted(families)
+            self.backend: MeasurementBackend = measure_mod.make_backend(
+                backend, self.workload, self.families, seed,
+                **(backend_opts or {}))
+        else:
+            if backend_opts:
+                raise ValueError(
+                    "backend_opts only apply when the backend is built here; "
+                    "pass a configured backend instance instead")
+            # the instance is authoritative: its families define the tuning
+            # space and its counter_names the counter schema
+            self.backend = backend
+            self.families = sorted(backend.families)
+            if families is not None and sorted(families) != self.families:
+                raise ValueError(
+                    f"families {sorted(families)} conflict with the backend "
+                    f"instance's {self.families}; pass one or the other")
         super().__init__(dispatch.launch_space(self.families),
-                         self.counter_names, seed=seed)
-        self._noise_rng = np.random.default_rng(seed + 13)
-
-    # -- launch-geometry model ------------------------------------------
-
-    def _family_params(self, family: str, config: Dict[str, Any]
-                       ) -> Dict[str, Any]:
-        fam = dispatch.get_family(family)
-        out = {o.name: o.default for o in fam.launch_options}
-        for o in fam.launch_options:
-            key = f"{family}.{o.name}"
-            if key in config:
-                out[o.name] = config[key]
-        return out
-
-    def _flash_attention(self, p) -> Tuple[float, float, float, float, float]:
-        w = self.workload
-        qb, kb = int(p["q_block"]), int(p["kv_block"])
-        sq, sk = _padded(w.seq_len, qb), _padded(w.seq_len, kb)
-        grid = w.batch * w.heads * (sq // qb) * (sk // kb)
-        # causal: roughly half the kv blocks are visible
-        flops = 0.5 * w.batch * w.heads * sq * sk * 4 * w.head_dim
-        vmem = (BF16 * 2 * (qb + 2 * kb) * w.head_dim         # double-buffered in
-                + BF16 * 2 * qb * w.head_dim                  # out
-                + F32 * qb * (w.head_dim + 2 * LANE))         # acc/m/l scratch
-        hbm = F32 * grid * (qb + 2 * kb) * w.head_dim / 2 + F32 * sq * w.head_dim
-        t = (grid * w.launch_overhead_us
-             + flops / (MXU_FLOPS_PER_US * _mxu_util(qb, kb))
-             + hbm / HBM_BYTES_PER_US)
-        return t, grid, vmem, flops, hbm
-
-    def _mamba_scan(self, p) -> Tuple[float, float, float, float, float]:
-        w = self.workload
-        chunk, cb = int(p["chunk"]), int(p["c_block"])
-        l = _padded(w.seq_len, chunk)
-        grid = w.batch * _ceil_div(w.channels, cb) * (l // chunk)
-        flops = 8.0 * w.batch * l * w.channels * w.scan_state
-        vmem = (BF16 * 2 * chunk * (3 * cb + 2 * w.scan_state)  # in, dbl-buffered
-                + BF16 * 2 * chunk * cb                          # out
-                + F32 * cb * w.scan_state)                       # state scratch
-        hbm = F32 * w.batch * l * (3 * w.channels + 2 * w.scan_state)
-        # the recurrence is serial inside a chunk: VPU-bound step chain
-        serial = grid * chunk * (cb * w.scan_state / VPU_FLOPS_PER_US) * 1e-3
-        t = grid * w.launch_overhead_us + serial + hbm / HBM_BYTES_PER_US
-        return t, grid, vmem, flops, hbm
-
-    def _ssd(self, p) -> Tuple[float, float, float, float, float]:
-        w = self.workload
-        chunk = int(p["chunk"])
-        l = _padded(w.seq_len, chunk)
-        grid = w.batch * w.ssm_heads * (l // chunk)
-        n, hd = w.ssm_state, w.ssm_head_dim
-        # quadratic intra-chunk term + two state matmuls per chunk
-        flops = grid * (2 * chunk * chunk * (n + hd) + 4 * chunk * n * hd)
-        vmem = (BF16 * 2 * chunk * (hd + 2 * n) + BF16 * 2 * chunk * hd
-                + F32 * (chunk * chunk + n * hd))
-        hbm = F32 * w.batch * l * w.ssm_heads * (hd + 2 * n // max(w.ssm_heads // 8, 1))
-        t = (grid * w.launch_overhead_us
-             + flops / (MXU_FLOPS_PER_US * _mxu_util(chunk))
-             + hbm / HBM_BYTES_PER_US)
-        return t, grid, vmem, flops, hbm
-
-    def _rmsnorm(self, p) -> Tuple[float, float, float, float, float]:
-        w = self.workload
-        rb = int(p["row_block"])
-        rows = _padded(w.batch * w.seq_len, rb)
-        grid = rows // rb
-        flops = 4.0 * rows * w.d_model
-        vmem = BF16 * (2 * 2 * rb * w.d_model + w.d_model)
-        hbm = F32 * rows * w.d_model * 2
-        t = grid * w.launch_overhead_us + hbm / HBM_BYTES_PER_US
-        return t, grid, vmem, flops, hbm
-
-    _MODELS = {"flash_attention": _flash_attention, "mamba_scan": _mamba_scan,
-               "ssd": _ssd, "rmsnorm": _rmsnorm}
+                         tuple(self.backend.counter_names), seed=seed)
 
     def _measure(self, config: Dict[str, Any]) -> Tuple[Dict[str, float], float]:
-        total_us, grid_pts, vmem_peak, flops, hbm = 0.0, 0.0, 0.0, 0.0, 0.0
-        feasible = True
-        for family in self.families:
-            model = self._MODELS[family]
-            t, grid, vmem, fl, hb = model(self, self._family_params(family, config))
-            total_us += t
-            grid_pts += grid
-            vmem_peak = max(vmem_peak, vmem)
-            flops += fl
-            hbm += hb
-            if vmem > self.workload.vmem_limit:
-                feasible = False
-        counters = {"grid_points": grid_pts, "vmem_peak_bytes": vmem_peak,
-                    "hbm_bytes": hbm, "flops": flops}
-        if not feasible:
-            return counters, float("inf")
-        y = total_us * (1.0 + self.workload.noise
-                        * float(self._noise_rng.standard_normal()))
-        return counters, y
+        return self.backend.measure(config)
 
     # -- deployment -----------------------------------------------------
 

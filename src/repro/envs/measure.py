@@ -1,0 +1,472 @@
+"""Measurement backends for the kernel-launch tuning environment.
+
+CAMEO's premise is that cheap source-environment measurements transfer to a
+costly target.  This module supplies both sides of that pair for the launch
+space:
+
+- :class:`AnalyticBackend` — the launch-geometry model (grid extent, VMEM
+  block footprints, streamed HBM bytes, per-step launch overhead).  Fast and
+  deterministic: the observational source.
+- :class:`WallClockBackend` — real timed execution: every registered kernel
+  family is dispatched (jit-compiled, ``block_until_ready``) under the
+  candidate launch configuration and the median of k repeats is the
+  measurement.  Expensive and honest: the intervention target.
+
+Both satisfy the :class:`MeasurementBackend` protocol —
+``measure(config) -> (counters, y)`` with latency in microseconds — so
+``KernelLaunchEnv`` (and anything else speaking ``PerfEnv``) swaps them
+freely.  Selection: an explicit constructor argument wins, then the
+``REPRO_MEASURE_BACKEND`` env var, then ``analytic``.
+
+The timing harness (:func:`timeit`) takes an injectable clock so tests run
+against a deterministic :class:`FakeClock` instead of ``perf_counter``.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass
+from typing import (Any, Callable, Dict, Iterable, List, Optional, Protocol,
+                    Sequence, Tuple, runtime_checkable)
+
+import numpy as np
+
+MEASURE_BACKEND_ENV = "REPRO_MEASURE_BACKEND"
+ANALYTIC = "analytic"
+WALLCLOCK = "wallclock"
+BACKENDS = (ANALYTIC, WALLCLOCK)
+
+LANE = 128
+VMEM_LIMIT_BYTES = 12 * 2 ** 20   # per-core block budget the model enforces
+MXU_FLOPS_PER_US = 200e6          # ~bf16 peak of one v5e-class core
+VPU_FLOPS_PER_US = 4e6
+HBM_BYTES_PER_US = 0.8e6          # ~819 GB/s
+F32 = 4                           # scratch accumulators
+BF16 = 2                          # streamed in/out blocks
+
+COUNTER_NAMES = ("grid_points", "vmem_peak_bytes", "hbm_bytes", "flops")
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _padded(a: int, b: int) -> int:
+    return _ceil_div(a, b) * b
+
+
+def _mxu_util(*block_dims: int) -> float:
+    """Fraction of the MXU filled by a tile: 1.0 at lane-aligned >=128."""
+    u = 1.0
+    for d in block_dims:
+        u *= min(d, LANE) / LANE
+    return max(u, 1e-3)
+
+
+@dataclass(frozen=True)
+class KernelWorkload:
+    """One (model shape x batch) cell the kernels run under."""
+
+    name: str = "serve-8b"
+    batch: int = 8
+    seq_len: int = 4096
+    heads: int = 32
+    kv_heads: int = 8
+    head_dim: int = 128
+    d_model: int = 4096
+    # mamba-1 surface
+    channels: int = 8192
+    scan_state: int = 16
+    # mamba-2 surface
+    ssm_heads: int = 64
+    ssm_head_dim: int = 64
+    ssm_state: int = 128
+    vmem_limit: int = VMEM_LIMIT_BYTES
+    launch_overhead_us: float = 1.5
+    noise: float = 0.01
+
+
+def family_params(family: str, config: Dict[str, Any]) -> Dict[str, Any]:
+    """Per-family launch parameters out of a flat ``family.param`` config,
+    falling back to the registry defaults for anything unspecified."""
+    from repro.kernels import dispatch
+
+    fam = dispatch.get_family(family)
+    out = {o.name: o.default for o in fam.launch_options}
+    for o in fam.launch_options:
+        key = f"{family}.{o.name}"
+        if key in config:
+            out[o.name] = config[key]
+    return out
+
+
+# --------------------------------------------------------------------------
+# launch-geometry model
+# --------------------------------------------------------------------------
+
+class LaunchGeometry:
+    """Analytic cost model of one kernel launch per family.
+
+    Each ``<family>(params)`` returns ``(t_us, grid, vmem, flops, hbm)`` —
+    modeled latency, grid points, per-core VMEM footprint of the blocks,
+    total FLOPs, and streamed HBM bytes — from the same quantities the real
+    kernels derive from the launch parameters.
+    """
+
+    def __init__(self, workload: KernelWorkload):
+        self.workload = workload
+
+    def flash_attention(self, p) -> Tuple[float, float, float, float, float]:
+        w = self.workload
+        qb, kb = int(p["q_block"]), int(p["kv_block"])
+        sq, sk = _padded(w.seq_len, qb), _padded(w.seq_len, kb)
+        grid = w.batch * w.heads * (sq // qb) * (sk // kb)
+        # causal: roughly half the kv blocks are visible
+        flops = 0.5 * w.batch * w.heads * sq * sk * 4 * w.head_dim
+        vmem = (BF16 * 2 * (qb + 2 * kb) * w.head_dim         # double-buffered in
+                + BF16 * 2 * qb * w.head_dim                  # out
+                + F32 * qb * (w.head_dim + 2 * LANE))         # acc/m/l scratch
+        hbm = F32 * grid * (qb + 2 * kb) * w.head_dim / 2 + F32 * sq * w.head_dim
+        t = (grid * w.launch_overhead_us
+             + flops / (MXU_FLOPS_PER_US * _mxu_util(qb, kb))
+             + hbm / HBM_BYTES_PER_US)
+        return t, grid, vmem, flops, hbm
+
+    def mamba_scan(self, p) -> Tuple[float, float, float, float, float]:
+        w = self.workload
+        chunk, cb = int(p["chunk"]), int(p["c_block"])
+        l = _padded(w.seq_len, chunk)
+        grid = w.batch * _ceil_div(w.channels, cb) * (l // chunk)
+        flops = 8.0 * w.batch * l * w.channels * w.scan_state
+        vmem = (BF16 * 2 * chunk * (3 * cb + 2 * w.scan_state)  # in, dbl-buffered
+                + BF16 * 2 * chunk * cb                          # out
+                + F32 * cb * w.scan_state)                       # state scratch
+        hbm = F32 * w.batch * l * (3 * w.channels + 2 * w.scan_state)
+        # the recurrence is serial inside a chunk: VPU-bound step chain
+        serial = grid * chunk * (cb * w.scan_state / VPU_FLOPS_PER_US) * 1e-3
+        t = grid * w.launch_overhead_us + serial + hbm / HBM_BYTES_PER_US
+        return t, grid, vmem, flops, hbm
+
+    def ssd(self, p) -> Tuple[float, float, float, float, float]:
+        w = self.workload
+        chunk = int(p["chunk"])
+        l = _padded(w.seq_len, chunk)
+        grid = w.batch * w.ssm_heads * (l // chunk)
+        n, hd = w.ssm_state, w.ssm_head_dim
+        # quadratic intra-chunk term + two state matmuls per chunk
+        flops = grid * (2 * chunk * chunk * (n + hd) + 4 * chunk * n * hd)
+        vmem = (BF16 * 2 * chunk * (hd + 2 * n) + BF16 * 2 * chunk * hd
+                + F32 * (chunk * chunk + n * hd))
+        hbm = F32 * w.batch * l * w.ssm_heads * (hd + 2 * n // max(w.ssm_heads // 8, 1))
+        t = (grid * w.launch_overhead_us
+             + flops / (MXU_FLOPS_PER_US * _mxu_util(chunk))
+             + hbm / HBM_BYTES_PER_US)
+        return t, grid, vmem, flops, hbm
+
+    def rmsnorm(self, p) -> Tuple[float, float, float, float, float]:
+        w = self.workload
+        rb = int(p["row_block"])
+        rows = _padded(w.batch * w.seq_len, rb)
+        grid = rows // rb
+        flops = 4.0 * rows * w.d_model
+        vmem = BF16 * (2 * 2 * rb * w.d_model + w.d_model)
+        hbm = F32 * rows * w.d_model * 2
+        t = grid * w.launch_overhead_us + hbm / HBM_BYTES_PER_US
+        return t, grid, vmem, flops, hbm
+
+    MODELS = ("flash_attention", "mamba_scan", "ssd", "rmsnorm")
+
+    def family_cost(self, family: str, params: Dict[str, Any]
+                    ) -> Tuple[float, float, float, float, float]:
+        if family not in self.MODELS:
+            raise KeyError(
+                f"no launch-geometry model for family {family!r}; "
+                f"modeled: {sorted(self.MODELS)}")
+        return getattr(self, family)(params)
+
+    def totals(self, families: Sequence[str], config: Dict[str, Any]
+               ) -> Tuple[Dict[str, float], float, bool]:
+        """Summed counters, total modeled latency, and VMEM feasibility over
+        ``families`` (evaluated in the given order — keep it sorted for
+        reproducible accumulation)."""
+        total_us, grid_pts, vmem_peak, flops, hbm = 0.0, 0.0, 0.0, 0.0, 0.0
+        feasible = True
+        for family in families:
+            t, grid, vmem, fl, hb = self.family_cost(
+                family, family_params(family, config))
+            total_us += t
+            grid_pts += grid
+            vmem_peak = max(vmem_peak, vmem)
+            flops += fl
+            hbm += hb
+            if vmem > self.workload.vmem_limit:
+                feasible = False
+        counters = {"grid_points": grid_pts, "vmem_peak_bytes": vmem_peak,
+                    "hbm_bytes": hbm, "flops": flops}
+        return counters, total_us, feasible
+
+
+def modeled_families() -> Tuple[str, ...]:
+    return LaunchGeometry.MODELS
+
+
+def _check_modeled(families: Tuple[str, ...]) -> None:
+    unmodeled = [f for f in families if f not in LaunchGeometry.MODELS]
+    if unmodeled:
+        raise ValueError(
+            f"no launch-geometry model for families {unmodeled}; "
+            f"modeled: {sorted(LaunchGeometry.MODELS)}")
+
+
+# --------------------------------------------------------------------------
+# timing harness
+# --------------------------------------------------------------------------
+
+class FakeClock:
+    """Deterministic clock for tests: each call returns the previous time
+    advanced by the next scripted delta (seconds), cycling when exhausted."""
+
+    def __init__(self, deltas: Sequence[float] = (1e-3,), start: float = 0.0):
+        if not deltas:
+            raise ValueError("FakeClock needs at least one delta")
+        self.deltas = tuple(float(d) for d in deltas)
+        self.now = float(start)
+        self.calls = 0
+
+    def __call__(self) -> float:
+        t = self.now
+        self.now += self.deltas[self.calls % len(self.deltas)]
+        self.calls += 1
+        return t
+
+
+@dataclass(frozen=True)
+class TimingResult:
+    """Samples from one timed measurement, all in microseconds."""
+
+    samples_us: Tuple[float, ...]
+    warmup_us: Tuple[float, ...] = ()
+
+    @property
+    def median_us(self) -> float:
+        return float(np.median(self.samples_us))
+
+    @property
+    def best_us(self) -> float:
+        return float(min(self.samples_us))
+
+    @property
+    def mean_us(self) -> float:
+        return float(np.mean(self.samples_us))
+
+
+def timeit(fn: Callable[[], Any], *, warmup: int = 2, repeats: int = 5,
+           clock: Optional[Callable[[], float]] = None,
+           block: bool = True) -> TimingResult:
+    """Time ``fn`` (a thunk): ``warmup`` discarded runs, then ``repeats``
+    measured ones.  Each run is bracketed by ``clock()`` and, when ``block``,
+    drained with ``jax.block_until_ready`` so async dispatch does not leak
+    compute into the next sample.  Returns all samples; callers take
+    ``median_us`` (robust to scheduler noise)."""
+    if repeats < 1:
+        raise ValueError(f"repeats must be >= 1, got {repeats}")
+    clock = clock or time.perf_counter
+    block_until_ready = None
+    if block:
+        import jax
+        block_until_ready = jax.block_until_ready
+
+    def one() -> float:
+        t0 = clock()
+        out = fn()
+        if block_until_ready is not None:
+            block_until_ready(out)
+        return (clock() - t0) * 1e6
+
+    warm = tuple(one() for _ in range(warmup))
+    samples = tuple(one() for _ in range(repeats))
+    return TimingResult(samples, warm)
+
+
+# --------------------------------------------------------------------------
+# backends
+# --------------------------------------------------------------------------
+
+@runtime_checkable
+class MeasurementBackend(Protocol):
+    """What ``KernelLaunchEnv`` needs from a measurement source.
+
+    ``measure`` maps a flat ``{"family.param": value}`` launch configuration
+    to ``(counters, y)``: the system-event counters (the paper's C) and the
+    latency objective in microseconds (``inf`` = infeasible).
+    """
+
+    counter_names: Tuple[str, ...]
+    families: Tuple[str, ...]
+
+    def measure(self, config: Dict[str, Any]
+                ) -> Tuple[Dict[str, float], float]: ...
+
+
+class AnalyticBackend:
+    """The launch-geometry model as a measurement backend.
+
+    Bit-identical to the pre-backend ``KernelLaunchEnv.measure``: same
+    accumulation order over sorted families, same VMEM feasibility gate, and
+    the multiplicative noise draw is taken from ``default_rng(seed + 13)``
+    only for feasible configurations.
+    """
+
+    counter_names = COUNTER_NAMES
+
+    def __init__(self, workload: KernelWorkload, families: Iterable[str],
+                 seed: int = 0):
+        self.workload = workload
+        self.families = tuple(sorted(families))
+        _check_modeled(self.families)
+        self.geometry = LaunchGeometry(workload)
+        self._noise_rng = np.random.default_rng(seed + 13)
+
+    def measure(self, config: Dict[str, Any]) -> Tuple[Dict[str, float], float]:
+        counters, total_us, feasible = self.geometry.totals(
+            self.families, config)
+        if not feasible:
+            return counters, float("inf")
+        y = total_us * (1.0 + self.workload.noise
+                        * float(self._noise_rng.standard_normal()))
+        return counters, y
+
+
+class WallClockBackend:
+    """Timed execution of the real kernels under the candidate config.
+
+    Each family's representative workload arrays are dispatched through
+    ``repro.kernels.dispatch`` (so ``REPRO_KERNEL_MODE`` picks pallas /
+    interpret / ref exactly as in production), jit-compiled once per distinct
+    launch-parameter tuple, and timed with warmup + ``block_until_ready`` +
+    median-of-k.  Counters and the VMEM feasibility gate still come from the
+    geometry model — they are exact derived quantities, and configurations
+    the VMEM model rejects would fail to compile on hardware, so they return
+    ``inf`` without being run.
+    """
+
+    counter_names = COUNTER_NAMES
+
+    def __init__(self, workload: KernelWorkload, families: Iterable[str],
+                 seed: int = 0, *, mode: Optional[str] = None,
+                 warmup: int = 1, repeats: int = 3,
+                 clock: Optional[Callable[[], float]] = None):
+        self.workload = workload
+        self.families = tuple(sorted(families))
+        _check_modeled(self.families)
+        self.geometry = LaunchGeometry(workload)
+        self.mode = mode
+        self.warmup = warmup
+        self.repeats = repeats
+        self.clock = clock
+        self._input_rng = np.random.default_rng(seed)
+        self._inputs: Dict[str, Tuple[Any, ...]] = {}
+        self._jitted: Dict[Tuple[str, Tuple[Tuple[str, Any], ...]], Callable] = {}
+
+    # -- representative inputs ------------------------------------------
+
+    def _build_inputs(self, family: str) -> Tuple[Any, ...]:
+        import jax.numpy as jnp
+
+        w, rng = self.workload, self._input_rng
+
+        def arr(*shape):
+            return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+        if family == "flash_attention":
+            return (arr(w.batch, w.seq_len, w.heads, w.head_dim),
+                    arr(w.batch, w.seq_len, w.kv_heads, w.head_dim),
+                    arr(w.batch, w.seq_len, w.kv_heads, w.head_dim))
+        if family == "mamba_scan":
+            x = arr(w.batch, w.seq_len, w.channels)
+            dt = jnp.abs(arr(w.batch, w.seq_len, w.channels)) * 0.05
+            A = -jnp.abs(arr(w.channels, w.scan_state))
+            B = arr(w.batch, w.seq_len, w.scan_state)
+            C = arr(w.batch, w.seq_len, w.scan_state)
+            D = jnp.ones((w.channels,), jnp.float32)
+            return (x, dt, A, B, C, D)
+        if family == "ssd":
+            x = arr(w.batch, w.seq_len, w.ssm_heads, w.ssm_head_dim)
+            dt = jnp.abs(arr(w.batch, w.seq_len, w.ssm_heads)) * 0.05
+            A = -jnp.abs(arr(w.ssm_heads))
+            B = arr(w.batch, w.seq_len, 1, w.ssm_state)
+            C = arr(w.batch, w.seq_len, 1, w.ssm_state)
+            D = jnp.ones((w.ssm_heads,), jnp.float32)
+            return (x, dt, A, B, C, D)
+        if family == "rmsnorm":
+            return (arr(w.batch, w.seq_len, w.d_model), arr(w.d_model))
+        raise KeyError(f"no representative workload for family {family!r}")
+
+    def _family_inputs(self, family: str) -> Tuple[Any, ...]:
+        if family not in self._inputs:
+            self._inputs[family] = self._build_inputs(family)
+        return self._inputs[family]
+
+    def _jitted_for(self, family: str, params: Dict[str, Any]) -> Callable:
+        import jax
+
+        from repro.kernels import dispatch
+
+        key = (family, tuple(sorted(params.items())))
+        if key not in self._jitted:
+            mode = self.mode
+            frozen = dict(params)
+
+            def call(*args):
+                # exclusively install the candidate as the ACTIVE config for
+                # the trace: explicit dispatch kwargs would lose to any outer
+                # use_launch_config (e.g. measuring inside result.install()),
+                # and the poisoned trace would be cached under this key
+                with dispatch.use_launch_config({family: frozen},
+                                                exclusive=True):
+                    return dispatch.dispatch(family, *args, mode=mode)
+
+            self._jitted[key] = jax.jit(call)
+        return self._jitted[key]
+
+    # -- MeasurementBackend ---------------------------------------------
+
+    def measure(self, config: Dict[str, Any]) -> Tuple[Dict[str, float], float]:
+        counters, _, feasible = self.geometry.totals(self.families, config)
+        if not feasible:
+            return counters, float("inf")
+        total_us = 0.0
+        for family in self.families:
+            fn = self._jitted_for(family, family_params(family, config))
+            args = self._family_inputs(family)
+            res = timeit(lambda: fn(*args), warmup=self.warmup,
+                         repeats=self.repeats, clock=self.clock)
+            total_us += res.median_us
+        return counters, total_us
+
+
+# --------------------------------------------------------------------------
+# selection
+# --------------------------------------------------------------------------
+
+def resolve_backend_name(explicit: Optional[str] = None) -> str:
+    """Backend precedence: explicit argument > env var > analytic."""
+    name = explicit or os.environ.get(MEASURE_BACKEND_ENV, "") or ANALYTIC
+    if name not in BACKENDS:
+        source = ("argument" if explicit
+                  else f"{MEASURE_BACKEND_ENV} env var")
+        raise ValueError(
+            f"measurement backend {name!r} (from {source}) is not one of "
+            f"{BACKENDS}")
+    return name
+
+
+def make_backend(name: Optional[str], workload: KernelWorkload,
+                 families: Iterable[str], seed: int = 0,
+                 **kw: Any) -> MeasurementBackend:
+    """Instantiate a backend by name (``None`` -> env var -> analytic).
+    Keyword arguments are forwarded to the backend constructor."""
+    resolved = resolve_backend_name(name)
+    cls = AnalyticBackend if resolved == ANALYTIC else WallClockBackend
+    return cls(workload, families, seed, **kw)

@@ -175,29 +175,57 @@ def split_launch_config(config: Dict[str, Any]) -> Dict[str, Dict[str, Any]]:
     return nested
 
 
-@contextlib.contextmanager
-def use_launch_config(config: Optional[Dict[str, Any]]):
+class use_launch_config:
     """Install a tuned launch configuration for dispatches underneath.
 
     Accepts flat (``{"flash_attention.q_block": 256}``) or nested
     (``{"flash_attention": {"q_block": 256}}``) form; nests are merged over
-    any outer active config.  Values are trace-time constants: wrapping the
+    any outer active config.  With ``exclusive=True`` the config underneath
+    is exactly this one — any outer active config is shadowed, not merged
+    (the serve/train step factories use this so a compiled step is a pure
+    function of its ``launch_config``, whatever happens to be installed when
+    jax finally traces it).  Values are trace-time constants: wrapping the
     traced body of a jit-compiled serve/train step bakes them into that
     trace.  jax's jit cache does NOT see the active config — re-entering an
     already-compiled step under a different config is a cache hit that keeps
     the old launch geometry.  Deploying a new config to a jitted step
-    requires a fresh jit (or threading the config through static args).
+    requires a fresh jit (or threading the config through static args — the
+    ``launch_config`` argument of the serve/train step factories does the
+    former).
+
+    The manager is re-entrant and reusable — one instance may be entered
+    recursively, across sequential ``with`` blocks, or from several threads
+    at once (the save-stack is per-thread, since the active config is) —
+    and the prior configuration is restored on exit even when the body
+    raises.  Validation against the registry happens eagerly at
+    construction.
     """
-    overrides = split_launch_config(config or {})
-    prev = _active()
-    merged = {f: dict(p) for f, p in prev.items()}
-    for f, p in overrides.items():
-        merged.setdefault(f, {}).update(p)
-    _local.launch = merged
-    try:
-        yield
-    finally:
-        _local.launch = prev
+
+    def __init__(self, config: Optional[Dict[str, Any]], *,
+                 exclusive: bool = False):
+        self._overrides = split_launch_config(config or {})
+        self._exclusive = exclusive
+
+    def __enter__(self) -> Dict[str, Dict[str, Any]]:
+        prev = _active()
+        if self._exclusive:
+            merged = {f: dict(p) for f, p in self._overrides.items()}
+        else:
+            merged = {f: dict(p) for f, p in prev.items()}
+            for f, p in self._overrides.items():
+                merged.setdefault(f, {}).update(p)
+        saved = getattr(_local, "saved_configs", None)
+        if saved is None:
+            saved = _local.saved_configs = []
+        saved.append(prev)
+        _local.launch = merged
+        return merged
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        # with-blocks unwind LIFO within a thread, so a plain per-thread
+        # stack restores correctly however instances nest or interleave
+        _local.launch = _local.saved_configs.pop()
+        return False
 
 
 def launch_params(family: str, **explicit: Any) -> Dict[str, Any]:
@@ -225,14 +253,48 @@ class Resolution:
         return pallas_fn(self.family) if self.mode != REF else ref_fn(self.family)
 
 
+@contextlib.contextmanager
+def record_resolutions():
+    """Observe every dispatch decision made underneath (same thread).
+
+    Yields a list that each :func:`resolve` call appends its
+    :class:`Resolution` to — including resolutions made while *tracing* a
+    jit-compiled step, which is where launch parameters are baked.  This is
+    the ground truth for "did the tuned config reach the kernel call":
+    wiring tests and audits read the recorded ``launch`` dicts instead of
+    trusting the config plumbing.
+    """
+    recorders = getattr(_local, "recorders", None)
+    if recorders is None:
+        recorders = _local.recorders = []
+    rec: List[Resolution] = []
+    recorders.append(rec)
+    try:
+        yield rec
+    finally:
+        # by identity, not ==: two empty recorder lists compare equal and
+        # list.remove would detach the outer one
+        for i in range(len(recorders) - 1, -1, -1):
+            if recorders[i] is rec:
+                del recorders[i]
+                break
+
+
+def _notify_recorders(res: Resolution) -> None:
+    for rec in getattr(_local, "recorders", ()):
+        rec.append(res)
+
+
 def resolve(family: str, mode: Optional[str] = None,
             **explicit: Any) -> Resolution:
     mode = mode or default_mode()
     if mode not in MODES:
         raise ValueError(f"mode {mode!r} not one of {MODES}")
-    return Resolution(family=family, mode=mode,
-                      interpret=(mode == PALLAS_INTERPRET),
-                      launch=launch_params(family, **explicit))
+    res = Resolution(family=family, mode=mode,
+                     interpret=(mode == PALLAS_INTERPRET),
+                     launch=launch_params(family, **explicit))
+    _notify_recorders(res)
+    return res
 
 
 def dispatch(family: str, *args: Any, mode: Optional[str] = None,

@@ -3,6 +3,11 @@ architecture.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
         --batch 4 --prompt-len 64 --gen 32
+
+``--tune-launch N`` closes the CAMEO loop before serving: a transfer-tuning
+run (analytic source, ``--measure-backend`` target) over the kernel-launch
+space picks block sizes / chunk lengths for this serving shape, and the
+winning configuration is baked into the jitted prefill/decode steps.
 """
 
 from __future__ import annotations
@@ -17,9 +22,46 @@ import numpy as np
 from repro.configs.registry import get_smoke_config, get_model_config, list_archs
 from repro.data.pipeline import make_data
 from repro.models.model import build_model
-from repro.train.serve_step import (make_decode_step, make_prefill_step,
-                                    sample_token)
+from repro.train.serve_step import jitted_steps, sample_token
 from repro.utils.config import MeshConfig, RunConfig, ShapeConfig
+
+
+def _launch_workload(cfg, batch: int, seq_len: int):
+    """A KernelWorkload cell matching this serving assignment — attention
+    dims from the config, and for ssm/hybrid models the mamba surface too
+    (d_inner channels, recurrent state, mamba-2 head geometry), so the tuned
+    chunk/block optimum is for the kernels this model actually runs."""
+    from repro.envs.kernel_launch import KernelWorkload
+
+    kw = KernelWorkload()
+    d_inner = cfg.ssm_expand * cfg.d_model
+    is_ssm = cfg.family in ("ssm", "hybrid")
+    return KernelWorkload(
+        name=f"serve-{cfg.name}", batch=batch, seq_len=seq_len,
+        heads=cfg.num_heads or kw.heads,
+        kv_heads=cfg.num_kv_heads or cfg.num_heads or kw.kv_heads,
+        head_dim=getattr(cfg, "head_dim", 0) or kw.head_dim,
+        d_model=cfg.d_model,
+        channels=d_inner if is_ssm else kw.channels,
+        scan_state=(cfg.ssm_state or kw.scan_state) if is_ssm else kw.scan_state,
+        ssm_heads=cfg.ssm_num_heads or kw.ssm_heads,
+        ssm_head_dim=(d_inner // cfg.ssm_num_heads if cfg.ssm_num_heads
+                      else kw.ssm_head_dim),
+        ssm_state=(cfg.ssm_state or kw.ssm_state) if is_ssm else kw.ssm_state)
+
+
+def tune_launch_config(cfg, batch: int, seq_len: int, budget: int,
+                       backend: str | None):
+    from repro.tuner.runner import tune_kernel_launch
+    from repro.tuner.space import launch_families_for
+
+    result = tune_kernel_launch(_launch_workload(cfg, batch, seq_len),
+                                families=launch_families_for(cfg),
+                                budget=budget, target_backend=backend)
+    print(f"[serve] tuned launch config ({result.method}, "
+          f"budget={budget}, y={result.best_y:.1f} us): "
+          f"{result.launch_config}")
+    return result.launch_config
 
 
 def main() -> int:
@@ -30,6 +72,13 @@ def main() -> int:
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--full-config", action="store_true")
+    ap.add_argument("--tune-launch", type=int, default=0, metavar="BUDGET",
+                    help="intervention budget for a kernel-launch tuning run "
+                         "before serving (0 = serve with registry defaults)")
+    ap.add_argument("--measure-backend", choices=["analytic", "wallclock"],
+                    default=None,
+                    help="target measurement backend for --tune-launch "
+                         "(default: REPRO_MEASURE_BACKEND, then analytic)")
     args = ap.parse_args()
 
     cfg = (get_model_config(args.arch) if args.full_config
@@ -53,8 +102,13 @@ def main() -> int:
     if cfg.family == "audio":
         batch["frames"] = jnp.asarray(raw["frames"][:args.batch])
 
-    prefill = jax.jit(make_prefill_step(model, run, cache_len=cache_len))
-    decode = jax.jit(make_decode_step(model, run))
+    launch_config = None
+    if args.tune_launch > 0:
+        launch_config = tune_launch_config(cfg, args.batch, cache_len,
+                                           args.tune_launch,
+                                           args.measure_backend)
+    prefill, decode = jitted_steps(model, run, cache_len=cache_len,
+                                   launch_config=launch_config)
 
     t0 = time.perf_counter()
     state, logits = prefill(params, batch)

@@ -32,8 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.model import Model
-from repro.train.serve_step import (ServeState, make_decode_step,
-                                    make_prefill_step, sample_token)
+from repro.train.serve_step import ServeState, jitted_steps, sample_token
 from repro.utils.config import RunConfig
 
 
@@ -83,7 +82,8 @@ def _scatter_rows(dst_tree, src_tree, slot: int):
 class ContinuousBatcher:
     def __init__(self, model: Model, run: RunConfig, params, *,
                  num_slots: int = 8, cache_len: int = 512,
-                 eos_token: Optional[int] = None, seed: int = 0):
+                 eos_token: Optional[int] = None, seed: int = 0,
+                 launch_config: Optional[Dict[str, Any]] = None):
         self.model = model
         self.run = run
         self.params = params
@@ -92,9 +92,11 @@ class ContinuousBatcher:
         self.eos_token = eos_token
         self._key = jax.random.PRNGKey(seed)
 
-        self._prefill = jax.jit(make_prefill_step(model, run,
-                                                  cache_len=cache_len))
-        self._decode = jax.jit(make_decode_step(model, run))
+        # a tuned kernel-launch optimum (e.g. TuneResult.launch_config) is
+        # baked into the traces; the shared cache means several batchers on
+        # one model reuse the compilation
+        self._prefill, self._decode = jitted_steps(
+            model, run, cache_len=cache_len, launch_config=launch_config)
 
         caches = model.init_decode_state(num_slots, cache_len)
         self.state = ServeState(

@@ -8,18 +8,40 @@ element against the cached state — this is the function the ``decode_*`` and
 
 State layout follows the training-side scan: caches are stacked over
 super-blocks so decode lowers to a single ``lax.scan`` over layers.
+
+Both factories take an optional ``launch_config`` (flat ``family.param`` or
+nested dict, e.g. ``TuneResult.launch_config`` from a kernel-launch tuning
+run): the step body runs under an *exclusive* ``dispatch.use_launch_config``
+so exactly the tuned block sizes / chunk lengths are baked into the trace —
+an ambient installed config cannot leak in, which is what lets
+:func:`jitted_steps` cache compiled (prefill, decode) pairs per
+(model, run, cache_len, launch_config) soundly (jax traces lazily, whenever
+the first call happens).  To deploy a tuned optimum to a step, pass it here;
+``use_launch_config`` alone cannot reach an already-compiled step.
 """
 
 from __future__ import annotations
 
+import functools
 from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch
 from repro.models import encdec
 from repro.models.model import Model
 from repro.utils.config import RunConfig
+
+
+def freeze_launch_config(launch_config: Optional[Dict[str, Any]]
+                         ) -> Tuple[Tuple[str, Tuple[Tuple[str, Any], ...]], ...]:
+    """Hashable canonical form of a launch config (flat or nested) — the jit
+    cache key component, so equivalent spellings share one compilation."""
+    if not launch_config:
+        return ()
+    nested = dispatch.split_launch_config(launch_config)
+    return tuple((f, tuple(sorted(p.items()))) for f, p in sorted(nested.items()))
 
 
 class ServeState(NamedTuple):
@@ -29,19 +51,24 @@ class ServeState(NamedTuple):
 
 
 def make_prefill_step(model: Model, run: RunConfig,
-                      cache_len: Optional[int] = None
+                      cache_len: Optional[int] = None,
+                      launch_config: Optional[Dict[str, Any]] = None
                       ) -> Callable[..., Tuple[ServeState, jax.Array]]:
     """Returns prefill(params, batch) -> (ServeState, last_logits (B, V))."""
     cfg = model.cfg
     max_len = cache_len or run.shape.seq_len
+    dispatch.split_launch_config(launch_config or {})  # eager validation
 
     def prefill_step(params, batch: Dict) -> Tuple[ServeState, jax.Array]:
+      # exclusive: the trace depends only on launch_config, never on an
+      # ambient use_launch_config active when jax happens to trace — that
+      # determinism is what makes the jitted_steps cache sound
+      with dispatch.use_launch_config(launch_config, exclusive=True):
         tokens = batch["tokens"]
         b, s = tokens.shape
         caches = model.init_decode_state(b, max_len)
         extras: Dict[str, jax.Array] = {}
         if cfg.family == "audio":
-            from repro.utils.config import ParallelConfig
             par = run.parallel
             enc_out = encdec.encode(params, cfg, par, batch["frames"])
             extras["enc_out"] = enc_out
@@ -61,13 +88,16 @@ def make_prefill_step(model: Model, run: RunConfig,
     return prefill_step
 
 
-def make_decode_step(model: Model, run: RunConfig
+def make_decode_step(model: Model, run: RunConfig,
+                     launch_config: Optional[Dict[str, Any]] = None
                      ) -> Callable[..., Tuple[ServeState, jax.Array]]:
     """Returns decode(params, state, tokens (B,1)) -> (state', logits (B, V))."""
     cfg = model.cfg
+    dispatch.split_launch_config(launch_config or {})  # eager validation
 
     def decode_step(params, state: ServeState, tokens: jax.Array
                     ) -> Tuple[ServeState, jax.Array]:
+      with dispatch.use_launch_config(launch_config, exclusive=True):
         positions = state.lengths[:, None]  # (B, 1) per-request positions
         if cfg.family == "audio":
             logits, new_caches = encdec.decode_forward(
@@ -87,6 +117,39 @@ def make_decode_step(model: Model, run: RunConfig
 
 
 # --------------------------------------------------------------------------
+# compiled-step cache
+# --------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=32)
+def _jitted_steps_cached(model: Model, run: RunConfig,
+                         cache_len: Optional[int],
+                         frozen_launch: Tuple) -> Tuple[Callable, Callable]:
+    launch_config = {f: dict(p) for f, p in frozen_launch}
+    return (jax.jit(make_prefill_step(model, run, cache_len=cache_len,
+                                      launch_config=launch_config)),
+            jax.jit(make_decode_step(model, run,
+                                     launch_config=launch_config)))
+
+
+def jitted_steps(model: Model, run: RunConfig,
+                 cache_len: Optional[int] = None,
+                 launch_config: Optional[Dict[str, Any]] = None
+                 ) -> Tuple[Callable, Callable]:
+    """Cached jit-compiled ``(prefill, decode)`` for this serving setup.
+
+    Keyed on (model, run, cache_len, canonical launch config) — ``Model`` is
+    a NamedTuple of config + closures, hashable by identity of those
+    closures — so repeated :func:`generate` calls and serving loops reuse
+    compilations instead of retracing, while a *different* tuned launch
+    config correctly gets a fresh trace (launch params are baked at trace
+    time).  LRU-bounded so long-lived processes cycling through many models
+    do not pin every compilation.
+    """
+    return _jitted_steps_cached(model, run, cache_len,
+                                freeze_launch_config(launch_config))
+
+
+# --------------------------------------------------------------------------
 # generation loop (examples / integration tests)
 # --------------------------------------------------------------------------
 
@@ -100,13 +163,18 @@ def sample_token(logits: jax.Array, key: jax.Array, temperature: float = 0.0
 
 def generate(model: Model, run: RunConfig, params, batch: Dict, *,
              num_steps: int, temperature: float = 0.0, seed: int = 0,
-             cache_len: Optional[int] = None) -> jax.Array:
-    """Prefill + autoregressive decode. Returns generated tokens (B, steps)."""
+             cache_len: Optional[int] = None,
+             launch_config: Optional[Dict[str, Any]] = None) -> jax.Array:
+    """Prefill + autoregressive decode. Returns generated tokens (B, steps).
+
+    Steps come from :func:`jitted_steps`, so repeated generation with the
+    same shapes/config reuses the compiled prefill/decode instead of
+    retracing on every call."""
     prompt = batch["tokens"]
     b = prompt.shape[0]
     cache_len = cache_len or (prompt.shape[1] + num_steps)
-    prefill = jax.jit(make_prefill_step(model, run, cache_len=cache_len))
-    decode = jax.jit(make_decode_step(model, run))
+    prefill, decode = jitted_steps(model, run, cache_len=cache_len,
+                                   launch_config=launch_config)
 
     state, logits = prefill(params, batch)
     key = jax.random.PRNGKey(seed)

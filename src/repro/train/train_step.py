@@ -20,6 +20,7 @@ from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch
 from repro.models.model import Model
 from repro.models.transformer import mtp_logits
 from repro.train.grad import (
@@ -46,13 +47,20 @@ def init_train_state(model: Model, run: RunConfig, optimizer: Optimizer,
     return TrainState(params, opt_state, jnp.zeros((), jnp.int32), err)
 
 
-def make_train_step(model: Model, run: RunConfig, optimizer: Optimizer
+def make_train_step(model: Model, run: RunConfig, optimizer: Optimizer,
+                    launch_config: Optional[Dict] = None
                     ) -> Callable[[TrainState, Dict], Tuple[TrainState, Dict]]:
+    """``launch_config`` (e.g. ``TuneResult.launch_config`` from a
+    kernel-launch tuning run) is installed on the dispatch registry around
+    the step body, so the tuned block sizes / chunk lengths are baked into
+    the trace when the returned step is jitted.  A different config needs a
+    fresh ``make_train_step`` + jit."""
     cfg = model.cfg
     tc = run.train
     par = run.parallel
     compute_dtype = jnp.dtype(tc.compute_dtype)
     n_micro = par.microbatch
+    dispatch.split_launch_config(launch_config or {})  # eager validation
 
     def loss_fn(params_c, batch):
         inputs, targets = batch["inputs"], batch["targets"]
@@ -98,6 +106,9 @@ def make_train_step(model: Model, run: RunConfig, optimizer: Optimizer
         return grads, metrics
 
     def train_step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
+      # exclusive: the trace is a pure function of launch_config (see
+      # serve_step; an ambient install at trace time must not leak in)
+      with dispatch.use_launch_config(launch_config, exclusive=True):
         if n_micro > 1:
             def micro(acc, mb):
                 g, m = grads_of(state.params, mb)

@@ -28,6 +28,25 @@ class TuneResult:
     wall_s: float
     extras: Dict[str, Any] = field(default_factory=dict)
 
+    @property
+    def launch_config(self) -> Dict[str, Any]:
+        """The kernel-launch subset (``family.param`` keys) of the winning
+        configuration — what the serve/train step factories install."""
+        from repro.tuner.space import launch_config_of
+
+        return launch_config_of(self.best_config or {})
+
+    def install(self):
+        """Context manager deploying the winning launch configuration onto
+        the dispatch registry — this governs *raw* kernel dispatches
+        underneath.  Serve/train steps are hermetic: to deploy into them,
+        pass ``launch_config=result.launch_config`` to the step factories /
+        ``jitted_steps`` instead (launch parameters are trace-time
+        constants)."""
+        from repro.kernels import dispatch
+
+        return dispatch.use_launch_config(self.launch_config)
+
 
 def transfer_tune(
     method: str,
@@ -64,3 +83,31 @@ def transfer_tune(
     return TuneResult(method=method, best_config=cfg, best_y=y,
                       trace_best_y=list(tuner.trace.best_y),
                       wall_s=time.time() - t0)
+
+
+def tune_kernel_launch(target_workload, *, source_workload=None,
+                       families=None, method: str = "cameo",
+                       budget: int = 15, n_source: int = 64,
+                       n_target_init: int = 4,
+                       target_backend: Optional[str] = None,
+                       seed: int = 0) -> TuneResult:
+    """Transfer-tune the kernel-launch space for one workload cell.
+
+    Source is always the cheap analytic geometry backend (the staging
+    environment); the target measures with ``target_backend`` (``None`` ->
+    ``REPRO_MEASURE_BACKEND`` -> analytic; pass ``"wallclock"`` on a real
+    host to time the actual kernels).  ``families`` restricts the tuned
+    surface to the kernel families the workload actually dispatches —
+    leaving it ``None`` tunes (and, under wallclock, times) every modeled
+    family.  The returned ``TuneResult.launch_config`` feeds straight into
+    the serve/train step factories or ``TuneResult.install()``.
+    """
+    from repro.envs.kernel_launch import KernelLaunchEnv
+
+    source_workload = source_workload or target_workload
+    src = KernelLaunchEnv(source_workload, families=families, seed=seed + 1,
+                          backend="analytic")
+    tgt = KernelLaunchEnv(target_workload, families=families, seed=seed + 2,
+                          backend=target_backend)
+    return transfer_tune(method, src, tgt, budget=budget, n_source=n_source,
+                         n_target_init=n_target_init, seed=seed)

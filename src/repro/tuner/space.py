@@ -15,6 +15,22 @@ from repro.core.spaces import ConfigSpace, Option
 from repro.utils.config import ModelConfig, ParallelConfig
 
 
+def launch_families_for(cfg: ModelConfig) -> list:
+    """Kernel families this architecture actually dispatches — the single
+    source of the applicability rules shared by
+    ``framework_space(include_kernel_launch=True)`` and the serve launcher's
+    ``--tune-launch``.  Tuning (and, under the wallclock backend, timing) a
+    family the model never runs wastes intervention budget on knobs with
+    zero effect."""
+    fams = ["rmsnorm"]
+    if not cfg.is_attention_free:
+        fams.append("flash_attention")
+    if cfg.family in ("ssm", "hybrid"):
+        # ssm_num_heads == 0 -> mamba-1 (selective scan); > 0 -> mamba-2 (ssd)
+        fams.append("ssd" if cfg.ssm_num_heads else "mamba_scan")
+    return fams
+
+
 def framework_space(cfg: ModelConfig, kind: str = "train",
                     include_kernel_launch: bool = False) -> ConfigSpace:
     opts = [
@@ -57,12 +73,7 @@ def framework_space(cfg: ModelConfig, kind: str = "train",
                    "attn_kv_block": "flash_attention.kv_block",
                    "ssm_chunk": "mamba_scan.chunk"}
         opts = [o for o in opts if o.name not in overlap]
-        launch_families = ["rmsnorm"]
-        if not cfg.is_attention_free:
-            launch_families.append("flash_attention")
-        if cfg.family in ("ssm", "hybrid"):
-            launch_families.extend(["mamba_scan", "ssd"])
-        opts = opts + list(dispatch.launch_space(launch_families).options)
+        opts = opts + list(dispatch.launch_space(launch_families_for(cfg)).options)
     return ConfigSpace(opts)
 
 

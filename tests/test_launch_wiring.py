@@ -1,0 +1,327 @@
+"""End-to-end launch-config wiring: a tuner run's winning kernel-launch
+configuration must actually reach the kernel calls inside the jitted
+serve/train steps (verified with the dispatch-level resolution spy, not by
+inspecting the config plumbing), `use_launch_config` must restore prior
+state across exceptions and re-entry, and repeated generation must not
+retrace."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_model_config
+from repro.envs.kernel_launch import KernelLaunchEnv, KernelWorkload
+from repro.kernels import dispatch
+from repro.models.model import build_model
+from repro.train.optimizer import make_optimizer
+from repro.train.serve_step import (
+    freeze_launch_config, generate, jitted_steps, make_decode_step,
+    make_prefill_step)
+from repro.train.train_step import init_train_state, make_train_step
+from repro.tuner.runner import transfer_tune, tune_kernel_launch
+from repro.utils.config import RunConfig, ShapeConfig
+
+TINY_SRC = KernelWorkload(name="src", batch=2, seq_len=128, heads=2,
+                          kv_heads=1, head_dim=16, d_model=32, channels=64,
+                          scan_state=4, ssm_heads=2, ssm_head_dim=16,
+                          ssm_state=8)
+TINY_TGT = KernelWorkload(name="tgt", batch=1, seq_len=256, heads=2,
+                          kv_heads=1, head_dim=16, d_model=32, channels=64,
+                          scan_state=4, ssm_heads=2, ssm_head_dim=16,
+                          ssm_state=8, launch_overhead_us=3.0)
+
+
+def _run_for(cfg, seq=16, batch=2):
+    return RunConfig(model=cfg, shape=ShapeConfig("t", seq, batch, "decode"))
+
+
+def _tuner_result(method="random", budget=6, seed=0):
+    src = KernelLaunchEnv(TINY_SRC, seed=seed + 1)
+    tgt = KernelLaunchEnv(TINY_TGT, seed=seed + 2)
+    return transfer_tune(method, src, tgt, budget=budget, n_source=24,
+                         n_target_init=2, seed=seed)
+
+
+def _launch_of(recorded, family):
+    return [r.launch for r in recorded if r.family == family]
+
+
+# --------------------------------------------------------------------------
+# tuner -> step factories (the dispatch spy is the ground truth)
+# --------------------------------------------------------------------------
+
+def test_tuner_launch_config_reaches_decode_kernels():
+    result = _tuner_result()
+    lc = result.launch_config
+    assert lc and all("." in k for k in lc)
+    assert set(lc) == set(KernelLaunchEnv(TINY_TGT).space.names)
+
+    cfg = tiny_model_config()
+    run = _run_for(cfg)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab_size)
+
+    prefill, decode = jitted_steps(model, run, cache_len=12, launch_config=lc)
+    with dispatch.record_resolutions() as rec:
+        state, logits = prefill(params, {"tokens": toks})
+        state, logits = decode(params, state, toks[:, :1])
+    attn = _launch_of(rec, "flash_attention")
+    assert attn, "no flash_attention dispatch recorded during trace"
+    for launch in attn:
+        assert launch["q_block"] == lc["flash_attention.q_block"]
+        assert launch["kv_block"] == lc["flash_attention.kv_block"]
+    # and without a launch_config the registry defaults are what's resolved
+    model2 = build_model(cfg)
+    prefill2, _ = jitted_steps(model2, run, cache_len=12)
+    with dispatch.record_resolutions() as rec2:
+        prefill2(model2.init(jax.random.PRNGKey(0)), {"tokens": toks})
+    fam = dispatch.get_family("flash_attention")
+    for launch in _launch_of(rec2, "flash_attention"):
+        assert launch["q_block"] == fam.option("q_block").default
+
+
+def test_tuner_launch_config_reaches_ssm_kernels():
+    result = _tuner_result(seed=3)
+    lc = result.launch_config
+    cfg = tiny_model_config(family="ssm", attn_type="none", num_heads=0,
+                            num_kv_heads=0, d_ff=0, ssm_state=4, ssm_chunk=4)
+    run = _run_for(cfg)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab_size)
+
+    prefill = make_prefill_step(model, run, cache_len=12, launch_config=lc)
+    decode = make_decode_step(model, run, launch_config=lc)
+    with dispatch.record_resolutions() as rec:
+        state, _ = prefill(params, {"tokens": toks})
+        decode(params, state, toks[:, :1])
+    ssm = _launch_of(rec, "mamba_scan") + _launch_of(rec, "ssd")
+    assert ssm, "no SSM-family dispatch recorded"
+    for launch in _launch_of(rec, "mamba_scan"):
+        assert launch["chunk"] == lc["mamba_scan.chunk"]
+    for launch in _launch_of(rec, "ssd"):
+        assert launch["chunk"] == lc["ssd.chunk"]
+
+
+def test_launch_config_reaches_train_step_kernels():
+    lc = {"flash_attention.q_block": 128, "flash_attention.kv_block": 256,
+          "rmsnorm.row_block": 64}
+    cfg = tiny_model_config()
+    run = RunConfig(model=cfg, shape=ShapeConfig("t", 16, 2, "train"))
+    model = build_model(cfg)
+    opt = make_optimizer(run.train)
+    step = jax.jit(make_train_step(model, run, opt, launch_config=lc))
+    state = init_train_state(model, run, opt, jax.random.PRNGKey(0))
+    batch = {
+        "inputs": jnp.zeros((2, 16), jnp.int32),
+        "targets": jnp.zeros((2, 16), jnp.int32),
+    }
+    with dispatch.record_resolutions() as rec:
+        state, metrics = step(state, batch)
+    attn = _launch_of(rec, "flash_attention")
+    assert attn, "no flash_attention dispatch recorded in train step"
+    for launch in attn:
+        assert launch["q_block"] == 128 and launch["kv_block"] == 256
+    assert np.isfinite(float(metrics["loss"]))
+    with pytest.raises(KeyError):
+        make_train_step(model, run, opt, launch_config={"bogus.k": 1})
+
+
+def test_launch_config_reaches_continuous_batcher():
+    from repro.serving.scheduler import ContinuousBatcher, Request
+
+    lc = {"flash_attention.kv_block": 256, "rmsnorm.row_block": 64}
+    cfg = tiny_model_config()
+    run = _run_for(cfg, seq=32, batch=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    b = ContinuousBatcher(model, run, params, num_slots=2, cache_len=32,
+                          launch_config=lc)
+    prompt = np.asarray([1, 2, 3])
+    b.submit(Request(uid=0, prompt=prompt, max_new_tokens=3))
+    with dispatch.record_resolutions() as rec:
+        done = b.run_until_drained()
+    assert len(done) == 1
+    attn = _launch_of(rec, "flash_attention")
+    assert attn, "no flash_attention dispatch recorded in batcher trace"
+    for launch in attn:
+        assert launch["kv_block"] == 256
+
+
+def test_tune_kernel_launch_and_install():
+    result = tune_kernel_launch(TINY_TGT, source_workload=TINY_SRC,
+                                method="random", budget=4, n_source=16,
+                                n_target_init=2, seed=0)
+    assert np.isfinite(result.best_y)
+    with result.install():
+        for key, v in result.launch_config.items():
+            fam, pname = key.split(".", 1)
+            assert dispatch.launch_params(fam)[pname] == v
+    # restored after exit
+    fam = dispatch.get_family("rmsnorm")
+    assert dispatch.launch_params("rmsnorm")["row_block"] == \
+        fam.option("row_block").default
+
+
+# --------------------------------------------------------------------------
+# use_launch_config: exception safety + re-entrancy
+# --------------------------------------------------------------------------
+
+def test_use_launch_config_restores_after_exception():
+    default = dispatch.launch_params("rmsnorm")["row_block"]
+    with pytest.raises(RuntimeError):
+        with dispatch.use_launch_config({"rmsnorm.row_block": 64}):
+            assert dispatch.launch_params("rmsnorm")["row_block"] == 64
+            raise RuntimeError("boom")
+    assert dispatch.launch_params("rmsnorm")["row_block"] == default
+    # also when the failure happens inside a nested install
+    outer = dispatch.use_launch_config({"rmsnorm.row_block": 128})
+    with pytest.raises(RuntimeError):
+        with outer:
+            with dispatch.use_launch_config({"flash_attention.q_block": 256}):
+                raise RuntimeError("inner")
+    assert dispatch.launch_params("rmsnorm")["row_block"] == default
+    assert dispatch.launch_params("flash_attention")["q_block"] == \
+        dispatch.get_family("flash_attention").option("q_block").default
+
+
+def test_record_resolutions_nested_detach_by_identity():
+    # two empty recorder lists compare ==; exit must detach by identity or
+    # the outer recorder goes dead
+    with dispatch.record_resolutions() as outer:
+        with dispatch.record_resolutions() as inner:
+            pass  # nothing recorded: outer == inner == []
+        dispatch.resolve("rmsnorm")
+    assert len(outer) == 1 and inner == []
+
+
+def test_tune_kernel_launch_families_restricts_surface():
+    result = tune_kernel_launch(TINY_TGT, source_workload=TINY_SRC,
+                                families=["rmsnorm", "flash_attention"],
+                                method="random", budget=3, n_source=8,
+                                n_target_init=1, seed=0)
+    assert set(result.launch_config) == {
+        "rmsnorm.row_block", "flash_attention.q_block",
+        "flash_attention.kv_block"}
+
+
+def test_use_launch_config_reentrant_same_instance():
+    cm = dispatch.use_launch_config({"rmsnorm.row_block": 64})
+    with cm:
+        assert dispatch.launch_params("rmsnorm")["row_block"] == 64
+        with cm:  # recursive entry of one instance
+            assert dispatch.launch_params("rmsnorm")["row_block"] == 64
+        assert dispatch.launch_params("rmsnorm")["row_block"] == 64
+    assert dispatch.launch_params("rmsnorm")["row_block"] == 256
+    with cm:  # sequential reuse
+        assert dispatch.launch_params("rmsnorm")["row_block"] == 64
+    assert dispatch.launch_params("rmsnorm")["row_block"] == 256
+
+
+# --------------------------------------------------------------------------
+# generate: jit cache, no per-call retrace
+# --------------------------------------------------------------------------
+
+def test_steps_are_hermetic_to_ambient_config():
+    # jax traces lazily: a cached step first called inside an ambient
+    # use_launch_config must still bake ITS OWN launch_config (here: the
+    # registry defaults), or the cache would serve poisoned traces to
+    # callers outside the context
+    cfg = tiny_model_config()
+    run = _run_for(cfg)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab_size)
+    prefill, _ = jitted_steps(model, run, cache_len=12)
+    default_q = dispatch.get_family("flash_attention").option("q_block").default
+    with dispatch.use_launch_config({"flash_attention.q_block": 128}):
+        with dispatch.record_resolutions() as rec:
+            prefill(params, {"tokens": toks})  # first call -> trace here
+    attn = _launch_of(rec, "flash_attention")
+    assert attn and all(l["q_block"] == default_q for l in attn)
+
+
+def test_use_launch_config_shared_instance_across_threads():
+    import threading
+
+    cm = dispatch.use_launch_config({"rmsnorm.row_block": 64})
+    default = dispatch.launch_params("rmsnorm")["row_block"]
+    a_entered, b_done = threading.Event(), threading.Event()
+    seen = {}
+
+    def thread_a():
+        with cm:
+            a_entered.set()
+            assert b_done.wait(10)
+            seen["a_inside"] = dispatch.launch_params("rmsnorm")["row_block"]
+        seen["a_after"] = dispatch.launch_params("rmsnorm")["row_block"]
+
+    def thread_b():
+        assert a_entered.wait(10)
+        with cm:  # same instance, concurrently, on another thread
+            seen["b_inside"] = dispatch.launch_params("rmsnorm")["row_block"]
+        seen["b_after"] = dispatch.launch_params("rmsnorm")["row_block"]
+        b_done.set()
+
+    ta, tb = threading.Thread(target=thread_a), threading.Thread(target=thread_b)
+    ta.start(); tb.start(); ta.join(10); tb.join(10)
+    # B entered AND exited while A was still inside: each thread must see
+    # its own install while active and its own prior state afterwards
+    assert seen == {"a_inside": 64, "b_inside": 64,
+                    "a_after": default, "b_after": default}
+
+
+def test_generate_does_not_retrace_on_repeat_calls():
+    cfg = tiny_model_config()
+    run = _run_for(cfg)
+    base = build_model(cfg)
+    counts = {"forward": 0}
+
+    def counting_forward(*args, **kwargs):
+        counts["forward"] += 1
+        return base.forward(*args, **kwargs)
+
+    model = base._replace(forward=counting_forward)
+    params = base.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 6), 0, cfg.vocab_size)
+
+    out1 = generate(model, run, params, {"tokens": toks}, num_steps=5)
+    traces = counts["forward"]
+    assert traces == 2  # one prefill trace + one decode trace
+    out2 = generate(model, run, params, {"tokens": toks}, num_steps=5)
+    assert counts["forward"] == traces, "repeat generation retraced"
+    np.testing.assert_array_equal(out1, out2)
+
+
+def test_jitted_steps_cache_identity_and_launch_key():
+    cfg = tiny_model_config()
+    run = _run_for(cfg)
+    model = build_model(cfg)
+    a = jitted_steps(model, run, cache_len=12)
+    b = jitted_steps(model, run, cache_len=12)
+    assert a[0] is b[0] and a[1] is b[1]
+    # equivalent flat/nested spellings share one compilation...
+    flat = jitted_steps(model, run, cache_len=12,
+                        launch_config={"rmsnorm.row_block": 64})
+    nested = jitted_steps(model, run, cache_len=12,
+                          launch_config={"rmsnorm": {"row_block": 64}})
+    assert flat[0] is nested[0]
+    # ...but a different tuned config gets a fresh trace
+    other = jitted_steps(model, run, cache_len=12,
+                         launch_config={"rmsnorm.row_block": 128})
+    assert other[0] is not flat[0]
+    assert flat[0] is not a[0]
+
+
+def test_freeze_launch_config_canonicalizes():
+    assert freeze_launch_config(None) == ()
+    assert freeze_launch_config({}) == ()
+    flat = freeze_launch_config(
+        {"flash_attention.kv_block": 512, "flash_attention.q_block": 256})
+    nested = freeze_launch_config(
+        {"flash_attention": {"q_block": 256, "kv_block": 512}})
+    assert flat == nested
+    with pytest.raises(KeyError):
+        freeze_launch_config({"bogus.q_block": 1})

@@ -1,0 +1,392 @@
+"""Measurement-backend subsystem: timing-harness invariants (median-of-k,
+warmup exclusion, fake-clock determinism — as hypothesis properties when the
+dev dep is installed, with deterministic counterparts that always run),
+bit-identity of AnalyticBackend against the pre-refactor KernelLaunchEnv
+measurement, backend selection precedence, and wall-clock measurement of the
+real kernels."""
+
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.envs.kernel_launch import KernelLaunchEnv, KernelWorkload
+from repro.envs.measure import (
+    ANALYTIC, BF16, F32, HBM_BYTES_PER_US, LANE, MEASURE_BACKEND_ENV,
+    MXU_FLOPS_PER_US, VPU_FLOPS_PER_US, WALLCLOCK, AnalyticBackend, FakeClock,
+    TimingResult, WallClockBackend, make_backend, resolve_backend_name, timeit)
+from repro.kernels import dispatch
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # dev-only dep: pip install -r requirements-dev.txt
+    HAVE_HYPOTHESIS = False
+
+TINY = KernelWorkload(name="tiny", batch=1, seq_len=64, heads=2, kv_heads=1,
+                      head_dim=16, d_model=32, channels=64, scan_state=4,
+                      ssm_heads=2, ssm_head_dim=16, ssm_state=8, noise=0.0)
+
+
+# --------------------------------------------------------------------------
+# timing harness — deterministic
+# --------------------------------------------------------------------------
+
+def test_fake_clock_scripted_sequence():
+    clk = FakeClock([1.0, 2.0], start=10.0)
+    assert [clk() for _ in range(4)] == [10.0, 11.0, 13.0, 14.0]
+    assert clk.calls == 4
+    with pytest.raises(ValueError):
+        FakeClock([])
+
+
+def _script(deltas):
+    """Clock deltas such that timed run i measures exactly ``deltas[i]`` —
+    each run brackets with two clock calls, so interleave zero-length gaps."""
+    return [x for d in deltas for x in (d, 0.0)]
+
+
+def test_timeit_counts_and_warmup_exclusion():
+    # warmup runs see huge deltas; measured runs see 1ms — the median must
+    # only reflect the measured samples
+    clk = FakeClock(_script([5.0, 5.0] + [1e-3] * 3))
+    res = timeit(lambda: 0, warmup=2, repeats=3, clock=clk, block=False)
+    assert len(res.warmup_us) == 2 and len(res.samples_us) == 3
+    assert res.warmup_us == (5e6, 5e6)
+    assert res.median_us == pytest.approx(1e3)
+    assert clk.calls == 10  # 2 calls per run, warmup included
+    with pytest.raises(ValueError):
+        timeit(lambda: 0, repeats=0, clock=clk, block=False)
+
+
+def test_timeit_median_permutation_invariant_deterministic():
+    deltas = [1e-3, 5e-3, 2e-3, 9e-3, 4e-3]
+    medians = []
+    for perm in itertools.permutations(deltas):
+        res = timeit(lambda: 0, warmup=0, repeats=5,
+                     clock=FakeClock(_script(perm)), block=False)
+        medians.append(res.median_us)
+    # invariant up to clock-accumulation ulps (~1e-9 us here)
+    assert max(medians) - min(medians) < 1e-6
+    assert medians[0] == pytest.approx(4e3)
+
+
+def test_timeit_fake_clock_deterministic():
+    runs = [timeit(lambda: 0, warmup=1, repeats=4,
+                   clock=FakeClock(_script([3e-3, 1e-3, 2e-3])), block=False)
+            for _ in range(2)]
+    assert runs[0] == runs[1]
+
+
+def test_timing_result_stats():
+    r = TimingResult((4.0, 1.0, 3.0))
+    assert r.median_us == 3.0 and r.best_us == 1.0
+    assert r.mean_us == pytest.approx(8.0 / 3.0)
+
+
+# --------------------------------------------------------------------------
+# timing harness — hypothesis properties (dev environments / CI)
+# --------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    deltas_s = st.lists(
+        st.floats(min_value=1e-6, max_value=10.0, allow_nan=False,
+                  allow_infinity=False),
+        min_size=1, max_size=8)
+
+    @given(deltas_s, st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=25, deadline=None)
+    def test_prop_median_invariant_under_permutation(deltas, seed):
+        rng = np.random.default_rng(seed)
+        perm = list(rng.permutation(deltas))
+        base = timeit(lambda: 0, warmup=0, repeats=len(deltas),
+                      clock=FakeClock(_script(deltas)), block=False)
+        shuf = timeit(lambda: 0, warmup=0, repeats=len(perm),
+                      clock=FakeClock(_script(perm)), block=False)
+        # clock-accumulation ulps scale with total elapsed time: rel 1e-6
+        # leaves ~100x margin over the worst case for these domains
+        assert base.median_us == pytest.approx(shuf.median_us, rel=1e-6)
+
+    @given(deltas_s, deltas_s)
+    @settings(max_examples=25, deadline=None)
+    def test_prop_warmup_samples_excluded(warm_deltas, meas_deltas):
+        with_warm = timeit(
+            lambda: 0, warmup=len(warm_deltas), repeats=len(meas_deltas),
+            clock=FakeClock(_script(warm_deltas + meas_deltas)), block=False)
+        without = timeit(lambda: 0, warmup=0, repeats=len(meas_deltas),
+                         clock=FakeClock(_script(meas_deltas)), block=False)
+        assert len(with_warm.warmup_us) == len(warm_deltas)
+        assert with_warm.samples_us == pytest.approx(without.samples_us)
+
+    @given(deltas_s, st.integers(1, 4), st.integers(1, 6))
+    @settings(max_examples=25, deadline=None)
+    def test_prop_fake_clock_determinism(deltas, warmup, repeats):
+        a = timeit(lambda: 0, warmup=warmup, repeats=repeats,
+                   clock=FakeClock(_script(deltas)), block=False)
+        b = timeit(lambda: 0, warmup=warmup, repeats=repeats,
+                   clock=FakeClock(_script(deltas)), block=False)
+        assert a == b
+
+
+# --------------------------------------------------------------------------
+# AnalyticBackend — bit-identical to the pre-refactor measurement
+# --------------------------------------------------------------------------
+
+def _frozen_pre_refactor_measure(w, families, config, noise_rng):
+    """Verbatim copy of KernelLaunchEnv._measure (and its geometry methods)
+    as shipped before the backend refactor — the bit-identity oracle."""
+    ceil_div = lambda a, b: -(-a // b)  # noqa: E731
+    padded = lambda a, b: ceil_div(a, b) * b  # noqa: E731
+
+    def mxu_util(*dims):
+        u = 1.0
+        for d in dims:
+            u *= min(d, LANE) / LANE
+        return max(u, 1e-3)
+
+    def params_of(family):
+        fam = dispatch.get_family(family)
+        out = {o.name: o.default for o in fam.launch_options}
+        for o in fam.launch_options:
+            key = f"{family}.{o.name}"
+            if key in config:
+                out[o.name] = config[key]
+        return out
+
+    def flash_attention(p):
+        qb, kb = int(p["q_block"]), int(p["kv_block"])
+        sq, sk = padded(w.seq_len, qb), padded(w.seq_len, kb)
+        grid = w.batch * w.heads * (sq // qb) * (sk // kb)
+        flops = 0.5 * w.batch * w.heads * sq * sk * 4 * w.head_dim
+        vmem = (BF16 * 2 * (qb + 2 * kb) * w.head_dim
+                + BF16 * 2 * qb * w.head_dim
+                + F32 * qb * (w.head_dim + 2 * LANE))
+        hbm = F32 * grid * (qb + 2 * kb) * w.head_dim / 2 + F32 * sq * w.head_dim
+        t = (grid * w.launch_overhead_us
+             + flops / (MXU_FLOPS_PER_US * mxu_util(qb, kb))
+             + hbm / HBM_BYTES_PER_US)
+        return t, grid, vmem, flops, hbm
+
+    def mamba_scan(p):
+        chunk, cb = int(p["chunk"]), int(p["c_block"])
+        l = padded(w.seq_len, chunk)
+        grid = w.batch * ceil_div(w.channels, cb) * (l // chunk)
+        flops = 8.0 * w.batch * l * w.channels * w.scan_state
+        vmem = (BF16 * 2 * chunk * (3 * cb + 2 * w.scan_state)
+                + BF16 * 2 * chunk * cb
+                + F32 * cb * w.scan_state)
+        hbm = F32 * w.batch * l * (3 * w.channels + 2 * w.scan_state)
+        serial = grid * chunk * (cb * w.scan_state / VPU_FLOPS_PER_US) * 1e-3
+        t = grid * w.launch_overhead_us + serial + hbm / HBM_BYTES_PER_US
+        return t, grid, vmem, flops, hbm
+
+    def ssd(p):
+        chunk = int(p["chunk"])
+        l = padded(w.seq_len, chunk)
+        grid = w.batch * w.ssm_heads * (l // chunk)
+        n, hd = w.ssm_state, w.ssm_head_dim
+        flops = grid * (2 * chunk * chunk * (n + hd) + 4 * chunk * n * hd)
+        vmem = (BF16 * 2 * chunk * (hd + 2 * n) + BF16 * 2 * chunk * hd
+                + F32 * (chunk * chunk + n * hd))
+        hbm = F32 * w.batch * l * w.ssm_heads * (hd + 2 * n // max(w.ssm_heads // 8, 1))
+        t = (grid * w.launch_overhead_us
+             + flops / (MXU_FLOPS_PER_US * mxu_util(chunk))
+             + hbm / HBM_BYTES_PER_US)
+        return t, grid, vmem, flops, hbm
+
+    def rmsnorm(p):
+        rb = int(p["row_block"])
+        rows = padded(w.batch * w.seq_len, rb)
+        grid = rows // rb
+        flops = 4.0 * rows * w.d_model
+        vmem = BF16 * (2 * 2 * rb * w.d_model + w.d_model)
+        hbm = F32 * rows * w.d_model * 2
+        t = grid * w.launch_overhead_us + hbm / HBM_BYTES_PER_US
+        return t, grid, vmem, flops, hbm
+
+    models = {"flash_attention": flash_attention, "mamba_scan": mamba_scan,
+              "ssd": ssd, "rmsnorm": rmsnorm}
+    total_us, grid_pts, vmem_peak, flops, hbm = 0.0, 0.0, 0.0, 0.0, 0.0
+    feasible = True
+    for family in families:
+        t, grid, vmem, fl, hb = models[family](params_of(family))
+        total_us += t
+        grid_pts += grid
+        vmem_peak = max(vmem_peak, vmem)
+        flops += fl
+        hbm += hb
+        if vmem > w.vmem_limit:
+            feasible = False
+    counters = {"grid_points": grid_pts, "vmem_peak_bytes": vmem_peak,
+                "hbm_bytes": hbm, "flops": flops}
+    if not feasible:
+        return counters, float("inf")
+    y = total_us * (1.0 + w.noise * float(noise_rng.standard_normal()))
+    return counters, y
+
+
+def _pinned_grid(seed=7, n=40):
+    space = dispatch.launch_space()
+    rng = np.random.default_rng(seed)
+    mins = {o.name: o.values[0] for o in space.options}
+    maxs = {o.name: o.values[-1] for o in space.options}
+    return [space.default_config(), mins, maxs] + space.sample(rng, n)
+
+
+@pytest.mark.parametrize("workload", [
+    KernelWorkload(),                                      # default serve-8b
+    KernelWorkload(name="train-2k", batch=16, seq_len=2048),
+    # tight VMEM budget: part of the grid goes infeasible, exercising the
+    # no-noise-draw path of the RNG stream
+    KernelWorkload(name="tight", vmem_limit=2 * 2 ** 20),
+], ids=lambda w: w.name)
+def test_analytic_backend_bit_identical_to_pre_refactor(workload):
+    families = sorted(dispatch.families())
+    backend = AnalyticBackend(workload, families, seed=0)
+    oracle_rng = np.random.default_rng(0 + 13)
+    saw_infeasible = False
+    for config in _pinned_grid():
+        counters, y = backend.measure(config)
+        exp_counters, exp_y = _frozen_pre_refactor_measure(
+            workload, families, config, oracle_rng)
+        assert counters == exp_counters, config
+        if np.isinf(exp_y):
+            saw_infeasible = True
+            assert np.isinf(y)
+        else:
+            assert y == exp_y, config  # bit-identical, not approx
+    if workload.name == "tight":
+        assert saw_infeasible
+
+
+def test_kernel_launch_env_delegates_to_analytic_backend():
+    env = KernelLaunchEnv(seed=3)
+    backend = AnalyticBackend(KernelWorkload(), sorted(dispatch.families()),
+                              seed=3)
+    for config in _pinned_grid(seed=11, n=8):
+        assert env.intervene(config) == backend.measure(config)
+
+
+# --------------------------------------------------------------------------
+# backend selection
+# --------------------------------------------------------------------------
+
+def test_backend_selection_precedence(monkeypatch):
+    fams = sorted(dispatch.families())
+    assert resolve_backend_name(None) == ANALYTIC
+    monkeypatch.setenv(MEASURE_BACKEND_ENV, WALLCLOCK)
+    assert resolve_backend_name(None) == WALLCLOCK
+    assert resolve_backend_name(ANALYTIC) == ANALYTIC  # explicit beats env
+    assert isinstance(make_backend(None, TINY, fams), WallClockBackend)
+    assert isinstance(KernelLaunchEnv(TINY).backend, WallClockBackend)
+    monkeypatch.setenv(MEASURE_BACKEND_ENV, "bogus")
+    with pytest.raises(ValueError):
+        resolve_backend_name(None)
+    monkeypatch.delenv(MEASURE_BACKEND_ENV)
+    assert isinstance(make_backend(None, TINY, fams), AnalyticBackend)
+    with pytest.raises(ValueError):
+        make_backend("bogus", TINY, fams)
+
+
+def test_env_accepts_backend_instance():
+    fams = sorted(dispatch.families())
+    inst = AnalyticBackend(TINY, fams, seed=0)
+    env = KernelLaunchEnv(TINY, backend=inst)
+    assert env.backend is inst
+    with pytest.raises(ValueError):
+        KernelLaunchEnv(TINY, backend=inst, backend_opts={"repeats": 2})
+
+
+def test_env_space_follows_backend_instance_families():
+    # the instance is authoritative: a backend measuring only rmsnorm must
+    # not expose flash_attention/ssm knobs the measurement ignores
+    inst = AnalyticBackend(TINY, ["rmsnorm"], seed=0)
+    env = KernelLaunchEnv(TINY, backend=inst)
+    assert env.families == ["rmsnorm"]
+    assert env.space.names == ["rmsnorm.row_block"]
+    assert env.counter_names == tuple(inst.counter_names)
+    with pytest.raises(ValueError, match="conflict"):
+        KernelLaunchEnv(TINY, families=["rmsnorm", "ssd"], backend=inst)
+
+
+def test_unmodeled_family_rejected():
+    with pytest.raises(ValueError, match="launch-geometry"):
+        KernelLaunchEnv(TINY, families=["flash_attention", "nope"])
+
+
+# --------------------------------------------------------------------------
+# wall-clock backend
+# --------------------------------------------------------------------------
+
+def test_wallclock_fake_clock_deterministic_and_counters_match():
+    fams = sorted(dispatch.families())
+    config = dispatch.launch_space().default_config()
+    ys = []
+    for _ in range(2):
+        b = WallClockBackend(TINY, fams, seed=0, warmup=0, repeats=3,
+                             clock=FakeClock([1e-3, 3e-3, 2e-3]))
+        counters, y = b.measure(config)
+        ys.append(y)
+        # counters are the geometry model's — identical to analytic
+        a_counters, _ = AnalyticBackend(TINY, fams, seed=0).measure(config)
+        assert counters == a_counters
+    assert ys[0] == ys[1]
+    # 4 families x 3 repeats x 2 clock calls, no warmup
+    assert ys[0] == pytest.approx(4 * 2e3)
+
+
+def test_wallclock_infeasible_short_circuits_without_timing():
+    clk = FakeClock([1e-3])
+    tight = KernelWorkload(name="tight", batch=1, seq_len=64, heads=2,
+                           kv_heads=1, head_dim=16, d_model=32, channels=64,
+                           scan_state=4, ssm_heads=2, ssm_head_dim=16,
+                           ssm_state=8, vmem_limit=1)
+    b = WallClockBackend(tight, ["rmsnorm"], clock=clk)
+    counters, y = b.measure({"rmsnorm.row_block": 512})
+    assert np.isinf(y)
+    assert clk.calls == 0  # never ran nor timed the kernel
+
+
+def test_wallclock_candidate_outranks_active_config():
+    # measuring while a tuned config is installed (e.g. re-tuning inside
+    # result.install()) must still time the CANDIDATE's launch params
+    b = WallClockBackend(TINY, ["rmsnorm"], seed=0, warmup=0, repeats=1,
+                         clock=FakeClock([1e-3]))
+    with dispatch.use_launch_config({"rmsnorm.row_block": 64}):
+        with dispatch.record_resolutions() as rec:
+            b.measure({"rmsnorm.row_block": 512})
+    resolved = [r.launch["row_block"] for r in rec if r.family == "rmsnorm"]
+    assert resolved and all(v == 512 for v in resolved)
+
+
+def test_wallclock_real_measurement_on_ref_kernels():
+    # ref mode on CPU: small but real jitted executions, real perf_counter
+    env = KernelLaunchEnv(TINY, backend="wallclock",
+                          backend_opts={"warmup": 1, "repeats": 3})
+    c1, y1 = env.intervene(env.space.default_config())
+    assert np.isfinite(y1) and y1 > 0
+    c2, y2 = env.intervene({"flash_attention.q_block": 128,
+                            "mamba_scan.chunk": 64})
+    assert np.isfinite(y2) and y2 > 0
+    assert c1 != c2  # geometry counters move with the config
+
+
+@pytest.mark.wallclock
+def test_wallclock_backend_across_config_grid():
+    """Second-tier CI job: REPRO_KERNEL_MODE=pallas_interpret exercises the
+    Pallas kernels themselves (interpreted on CPU) under timed dispatch."""
+    env = KernelLaunchEnv(TINY, backend="wallclock",
+                          backend_opts={"warmup": 1, "repeats": 2})
+    rng = np.random.default_rng(0)
+    for config in [env.space.default_config()] + env.space.sample(rng, 3):
+        counters, y = env.intervene(config)
+        assert np.isfinite(y) and y > 0, config
+        assert counters["grid_points"] > 0
+
+
+@pytest.mark.wallclock
+def test_wallclock_dataset_feeds_tuner():
+    env = KernelLaunchEnv(TINY, backend="wallclock",
+                          backend_opts={"warmup": 0, "repeats": 1})
+    d = env.dataset(3, seed=0)
+    assert len(d) == 3 and all(np.isfinite(v) for v in d.ys)

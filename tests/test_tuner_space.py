@@ -1,0 +1,159 @@
+"""Tuner-space plumbing: the partition of a tuner configuration into
+plan-level knobs (``apply_config`` / ``config_to_parallel_kv``) and
+kernel-launch knobs (``launch_config_of``), and the overlap rules of
+``framework_space(include_kernel_launch=True)`` — plan-level block knobs are
+replaced by the dispatch registry's ``family.param`` options so each launch
+parameter has exactly one source of truth."""
+
+import numpy as np
+import pytest
+
+from conftest import tiny_model_config
+from repro.kernels import dispatch
+from repro.tuner.space import (
+    apply_config, config_to_parallel_kv, framework_space,
+    launch_config_of, launch_families_for)
+from repro.utils.config import ParallelConfig
+
+# ssm_num_heads absent -> mamba-1 (selective scan dispatches mamba_scan)
+SSM_KW = dict(family="ssm", attn_type="none", num_heads=0, num_kv_heads=0,
+              d_ff=0, ssm_state=4, ssm_chunk=4)
+SSM2_KW = dict(SSM_KW, ssm_num_heads=4)  # mamba-2: dispatches ssd
+
+
+def _sampled(space, n=20, seed=0):
+    rng = np.random.default_rng(seed)
+    return [space.default_config()] + space.sample(rng, n)
+
+
+# --------------------------------------------------------------------------
+# launch_config_of / apply_config / config_to_parallel_kv round-trips
+# --------------------------------------------------------------------------
+
+def test_config_partition_roundtrip_dense():
+    space = framework_space(tiny_model_config(), include_kernel_launch=True)
+    for config in _sampled(space):
+        lc = launch_config_of(config)
+        plan = {k: v for k, v in config.items() if k not in lc}
+        # the two halves partition the config exactly
+        assert set(lc) | set(plan) == set(config)
+        assert all("." in k for k in lc)
+        assert all("." not in k for k in plan)
+        # launch half is installable as-is
+        nested = dispatch.split_launch_config(lc)
+        with dispatch.use_launch_config(lc):
+            for fam, params in nested.items():
+                resolved = dispatch.launch_params(fam)
+                for pname, v in params.items():
+                    assert resolved[pname] == v
+        # plan half lands on ParallelConfig and survives the kv encoding
+        par = apply_config(ParallelConfig(), config)
+        for k, v in plan.items():
+            if k == "ssm_chunk":
+                continue
+            cur = getattr(par, k)
+            assert cur == (type(cur)(v) if not isinstance(cur, str) else v)
+        kv = config_to_parallel_kv(config)
+        items = dict(p.split("=") for p in kv.split(",")) if kv else {}
+        assert set(items) == {k for k in plan if k != "ssm_chunk"}
+        for k, sv in items.items():
+            assert sv == str(config[k])
+
+
+def test_config_partition_roundtrip_ssm():
+    space = framework_space(tiny_model_config(**SSM_KW),
+                            include_kernel_launch=True)
+    for config in _sampled(space, n=10, seed=1):
+        lc = launch_config_of(config)
+        assert "mamba_scan.chunk" in lc  # mamba-1 model
+        apply_config(ParallelConfig(), config)  # dotted keys must be skipped
+        assert "." not in config_to_parallel_kv(config)
+
+
+def test_apply_config_casts_to_field_types():
+    par = apply_config(ParallelConfig(), {"sp": 1, "fsdp": 2.0,
+                                          "remat": "dots"})
+    assert par.sp is True and par.fsdp == 2 and par.remat == "dots"
+    assert isinstance(par.fsdp, int)
+
+
+def test_launch_config_of_only_takes_dotted_keys():
+    config = {"microbatch": 4, "flash_attention.q_block": 256,
+              "rmsnorm.row_block": 64, "remat": "full"}
+    assert launch_config_of(config) == {"flash_attention.q_block": 256,
+                                        "rmsnorm.row_block": 64}
+    assert launch_config_of({}) == {}
+
+
+# --------------------------------------------------------------------------
+# framework_space overlap rules
+# --------------------------------------------------------------------------
+
+def test_kernel_launch_replaces_plan_level_block_knobs_dense():
+    cfg = tiny_model_config()
+    plain = framework_space(cfg)
+    merged = framework_space(cfg, include_kernel_launch=True)
+    # the plan-level spellings exist without the launch surface...
+    assert {"attn_q_block", "attn_kv_block"} <= set(plain.names)
+    # ...and are replaced by the registry's family.param options with it
+    assert not {"attn_q_block", "attn_kv_block"} & set(merged.names)
+    assert {"flash_attention.q_block", "flash_attention.kv_block",
+            "rmsnorm.row_block"} <= set(merged.names)
+    # dense model: no SSM launch families
+    assert not any(n.startswith(("mamba_scan.", "ssd.")) for n in merged.names)
+    # non-block plan knobs survive the merge
+    assert {"microbatch", "remat", "fsdp"} <= set(merged.names)
+
+
+def test_kernel_launch_replaces_plan_level_block_knobs_ssm():
+    cfg = tiny_model_config(**SSM_KW)
+    merged = framework_space(cfg, include_kernel_launch=True)
+    assert "ssm_chunk" not in merged.names
+    assert {"mamba_scan.chunk", "mamba_scan.c_block",
+            "rmsnorm.row_block"} <= set(merged.names)
+    # attention-free: no flash_attention launch family; mamba-1: no ssd
+    assert not any(n.startswith(("flash_attention.", "ssd."))
+                   for n in merged.names)
+    # mamba-2 flips the SSM family: ssd in, mamba_scan out
+    merged2 = framework_space(tiny_model_config(**SSM2_KW),
+                              include_kernel_launch=True)
+    assert "ssd.chunk" in merged2.names
+    assert not any(n.startswith("mamba_scan.") for n in merged2.names)
+
+
+def test_launch_families_match_dispatched_kernels():
+    assert launch_families_for(tiny_model_config()) == \
+        ["rmsnorm", "flash_attention"]
+    assert launch_families_for(tiny_model_config(**SSM_KW)) == \
+        ["rmsnorm", "mamba_scan"]
+    assert launch_families_for(tiny_model_config(**SSM2_KW)) == \
+        ["rmsnorm", "ssd"]
+    hybrid = tiny_model_config(family="hybrid", ssm_state=4, ssm_num_heads=4,
+                               ssm_chunk=4, hybrid_attn_period=2)
+    assert launch_families_for(hybrid) == \
+        ["rmsnorm", "flash_attention", "ssd"]
+
+
+def test_kernel_launch_space_serve_kind():
+    cfg = tiny_model_config()
+    serve = framework_space(cfg, kind="serve", include_kernel_launch=True)
+    assert "attn_kv_block" not in serve.names
+    assert "flash_attention.kv_block" in serve.names
+    assert "microbatch" not in serve.names  # train-only knob filtered
+
+    # every sampled serve config still partitions cleanly
+    for config in _sampled(serve, n=5, seed=2):
+        lc = launch_config_of(config)
+        dispatch.split_launch_config(lc)
+        apply_config(ParallelConfig(), config)
+
+
+def test_launch_options_match_registry_domains():
+    merged = framework_space(tiny_model_config(), include_kernel_launch=True)
+    for name in merged.names:
+        if "." not in name:
+            continue
+        fam_name, pname = name.split(".", 1)
+        opt = merged.by_name[name]
+        reg = dispatch.get_family(fam_name).option(pname)
+        assert opt.values == reg.values and opt.default == reg.default
