@@ -4,14 +4,9 @@ ground-truth pools, timing."""
 from __future__ import annotations
 
 import os
-import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
-
-from repro.core.cameo import Cameo, Dataset
-from repro.core.baselines import make_baseline
-from repro.core.query import parse_query
 
 FULL = os.environ.get("REPRO_BENCH_FULL", "") == "1"
 
@@ -40,27 +35,19 @@ def run_method(method: str, source_env, target_env, *, budget: int,
                n_source: int, objective: str = "step_time", seed: int = 0,
                l_alpha: float = 0.1, n_target_init: int = 5
                ) -> Tuple[float, List[float], Dict]:
-    """Returns (best_y, best-so-far trace, extras)."""
-    d_s = source_env.dataset(n_source, seed=seed + 1)
-    if method == "cameo":
-        q = parse_query(f"minimize {objective} within {budget} samples")
-        cam = Cameo(source_env.space, q, d_s,
-                    counter_names=source_env.counter_names, seed=seed,
-                    l_alpha=l_alpha)
-        cam.seed_target(target_env.dataset(n_target_init, seed=seed + 2))
-        t0 = time.perf_counter()
-        _, y = cam.run(target_env, budget)
-        wall = time.perf_counter() - t0
-        return y, list(cam.trace.best_y), {
-            "model_update_s": float(np.mean(cam.trace.model_update_s or [0])),
-            "recommend_s": float(np.mean(cam.trace.recommend_s or [0])),
-            "wall_s": wall, "k": cam.k}
-    tuner = make_baseline(method, target_env.space, d_s,
-                          counter_names=source_env.counter_names, seed=seed)
-    t0 = time.perf_counter()
-    _, y = tuner.run(target_env, budget)
-    wall = time.perf_counter() - t0
-    return y, list(tuner.trace.best_y), {"wall_s": wall}
+    """Returns (best_y, best-so-far trace, extras).  Thin wrapper over the
+    production ``transfer_tune`` so the benchmarks measure exactly the
+    comparison protocol the tuner ships (identical free initial target
+    dataset per method, same budget accounting)."""
+    from repro.tuner.runner import transfer_tune
+
+    res = transfer_tune(
+        method, source_env, target_env, budget=budget, n_source=n_source,
+        n_target_init=n_target_init, l_alpha=l_alpha, seed=seed,
+        query_text=f"minimize {objective} within {{budget}} samples")
+    extras = dict(res.extras)
+    extras["wall_s"] = res.wall_s
+    return res.best_y, res.trace_best_y, extras
 
 
 def sweep(methods: Sequence[str], source_env, target_env, *, budget: int,

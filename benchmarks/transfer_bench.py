@@ -1,0 +1,109 @@
+"""Environment-shift transfer benchmark CLI -> BENCH_transfer.json.
+
+Sweeps (workload cell x shift kind x method) under a fixed intervention
+budget against shifted analytic targets (see ``repro.tuner.bench``) and
+writes regret-vs-round trajectories plus the CI gate verdict.
+
+    PYTHONPATH=src python benchmarks/transfer_bench.py --smoke
+    PYTHONPATH=src python benchmarks/transfer_bench.py \
+        --shifts hardware,severe --methods cameo,random,smac --budget 30
+
+``--smoke`` is the CI configuration: small budget, 3 shift kinds, cameo vs
+random, exits non-zero when the gate fails (CAMEO's mean final regret worse
+than random search).  See ``benchmarks/README.md`` for the JSON layout.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.envs.measure import shift_kinds
+from repro.tuner.bench import (
+    DEFAULT_CELLS, DEFAULT_METHODS, DEFAULT_SHIFTS, cell_by_name,
+    run_transfer_bench)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="small-budget CI sweep; non-zero exit on gate fail")
+    ap.add_argument("--budget", type=int, default=None)
+    ap.add_argument("--n-source", type=int, default=None)
+    ap.add_argument("--n-target-init", type=int, default=None)
+    ap.add_argument("--pool", type=int, default=None,
+                    help="ground-truth pool size per (cell, shift)")
+    ap.add_argument("--seeds", default=None, help="comma-separated ints")
+    ap.add_argument("--cells", default=None,
+                    help=f"comma-separated subset of "
+                         f"{[c.name for c in DEFAULT_CELLS]}")
+    ap.add_argument("--shifts", default=None,
+                    help=f"comma-separated subset of {list(shift_kinds())}")
+    ap.add_argument("--methods", default=None,
+                    help="comma-separated tuner names (cameo, random, smac, "
+                         "restune, restune-w/o-ml, cello, unicorn)")
+    ap.add_argument("--out", default="BENCH_transfer.json")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        budget, n_source, n_target_init = 8, 48, 3
+        pool, seeds = 128, (0, 1)
+        cells = DEFAULT_CELLS[:1]
+        shifts, methods = DEFAULT_SHIFTS, DEFAULT_METHODS
+    else:
+        budget, n_source, n_target_init = 25, 128, 4
+        pool, seeds = 512, (0, 1, 2)
+        cells = DEFAULT_CELLS
+        shifts, methods = tuple(shift_kinds()), ("cameo", "random", "smac",
+                                                 "restune")
+    if args.budget is not None:
+        budget = args.budget
+    if args.n_source is not None:
+        n_source = args.n_source
+    if args.n_target_init is not None:
+        n_target_init = args.n_target_init
+    if args.pool is not None:
+        pool = args.pool
+    if args.seeds:
+        seeds = tuple(int(s) for s in args.seeds.split(","))
+    if args.cells:
+        cells = tuple(cell_by_name(n) for n in args.cells.split(","))
+    if args.shifts:
+        shifts = tuple(args.shifts.split(","))
+    if args.methods:
+        methods = tuple(args.methods.split(","))
+
+    doc = run_transfer_bench(cells=cells, shifts=shifts, methods=methods,
+                             budget=budget, n_source=n_source,
+                             n_target_init=n_target_init, seeds=seeds,
+                             pool=pool)
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=2)
+
+    for cell in doc["cells"]:
+        print(f"\n== {cell['cell']} / {cell['shift']} "
+              f"(y_opt={cell['y_opt']:.1f} us) ==")
+        ranked = sorted(cell["methods"].items(),
+                        key=lambda kv: kv[1]["mean_final_regret"])
+        for method, stats in ranked:
+            print(f"  {method:16s} mean final regret = "
+                  f"{stats['mean_final_regret']*100:7.2f}%")
+    gate = doc["gate"]
+    print(f"\n[transfer_bench] wrote {args.out} "
+          f"({doc['meta']['wall_s']:.1f}s)")
+    if gate["checked"]:
+        print(f"[transfer_bench] gate: {gate['champion']}="
+              f"{gate['champion_mean_final_regret']*100:.2f}% vs "
+              f"{gate['reference']}="
+              f"{gate['reference_mean_final_regret']*100:.2f}% -> "
+              f"{'PASS' if gate['passed'] else 'FAIL'}")
+    if args.smoke and not gate["passed"]:
+        print("[transfer_bench] FAIL: champion regret exceeds reference",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -51,13 +51,18 @@ class Dataset:
     def __len__(self):
         return len(self.ys)
 
-    def matrix(self, space: ConfigSpace, counter_names: Sequence[str]
-               ) -> Tuple[np.ndarray, List[str]]:
+    def matrix(self, space: ConfigSpace, counter_names: Sequence[str],
+               *, maximize: bool = False) -> Tuple[np.ndarray, List[str]]:
         """[options..., counters..., objective] matrix + column names.
 
         Infeasible measurements (±inf from constraint handling / invalid
         configurations) are clamped to a pessimistic finite value so the CI
-        tests and regressions stay well-posed.
+        tests and regressions stay well-posed.  "Pessimistic" is
+        direction-aware: constraint handling stores ``inf * sign``, so for a
+        ``maximize`` objective the sentinel is ``-inf`` and the clamp must
+        land *below* every feasible value — clamping high would turn an
+        infeasible configuration into the best-looking row and poison
+        discovery and the ACE ranking.
         """
         rows = []
         for cfg, cnt, y in zip(self.configs, self.counters, self.ys):
@@ -66,13 +71,17 @@ class Dataset:
             rows.append(np.concatenate([x, c, [y]]))
         names = list(space.names) + list(counter_names) + ["__objective__"]
         m = np.asarray(rows, np.float64)
+        obj_col = m.shape[1] - 1
         for col in range(m.shape[1]):
             v = m[:, col]
             bad = ~np.isfinite(v)
             if bad.any():
                 good = v[~bad]
-                worst = (good.max() + 2.0 * (good.max() - good.min() + 1.0)
-                         if len(good) else 0.0)
+                margin = (2.0 * (good.max() - good.min() + 1.0)
+                          if len(good) else 0.0)
+                hi = good.max() + margin if len(good) else 0.0
+                lo = good.min() - margin if len(good) else 0.0
+                worst = lo if (maximize and col == obj_col) else hi
                 m[bad, col] = worst
         return m, names
 
@@ -122,7 +131,8 @@ class Cameo:
 
         # -- knowledge extraction phase (offline, lines 1-3) ---------------
         t0 = time.perf_counter()
-        data_s, names_s = self.d_s.matrix(space, self.counter_names)
+        data_s, names_s = self.d_s.matrix(space, self.counter_names,
+                                          maximize=query.maximize)
         self.g_s = fci_lite(data_s, names_s, alpha=ci_alpha)
         ranked = rank_by_ace(data_s, names_s, "__objective__", self.g_s)
         # only configuration options can be intervened on
@@ -177,8 +187,13 @@ class Cameo:
 
     def _refresh_graph_t(self) -> None:
         if len(self.d_t) >= 8:
-            data_t, names_t = self.d_t.matrix(self.space, self.counter_names)
+            data_t, names_t = self.d_t.matrix(self.space, self.counter_names,
+                                              maximize=self.query.maximize)
             keep = data_t.std(axis=0) > 1e-12
+            # the objective column must survive: early target rounds can have
+            # identical ys (constant column), and a g_t missing its
+            # __objective__ node breaks the later ACE re-ranking against it
+            keep[names_t.index("__objective__")] = True
             cols = np.where(keep)[0]
             self.g_t = fci_lite(data_t[:, cols],
                                 [names_t[i] for i in cols],
@@ -290,7 +305,9 @@ class Cameo:
             # refresh the reduced space with target evidence: union of the
             # source blanket and any new strong target-side effects
             if self.g_t is not None:
-                data_t, names_t = self.d_t.matrix(self.space, self.counter_names)
+                data_t, names_t = self.d_t.matrix(
+                    self.space, self.counter_names,
+                    maximize=self.query.maximize)
                 ranked_t = rank_by_ace(data_t, names_t, "__objective__", self.g_t)
                 extra = [n for n, v in ranked_t[:self.k]
                          if n in self.space.by_name and n not in self.reduced_names]

@@ -4,5 +4,6 @@ from repro.envs.analytic import AnalyticTPUEnv, tpu_config_space  # noqa: F401
 from repro.envs.kernel_launch import (  # noqa: F401
     KernelLaunchEnv, KernelWorkload)
 from repro.envs.measure import (  # noqa: F401
-    AnalyticBackend, FakeClock, LaunchGeometry, MeasurementBackend,
-    TimingResult, WallClockBackend, make_backend, timeit)
+    SHIFT_KINDS, AnalyticBackend, EnvShift, FakeClock, HardwareSpec,
+    LaunchGeometry, MeasurementBackend, ShiftedAnalyticBackend, TimingResult,
+    WallClockBackend, make_backend, shift_kinds, shifts_for, timeit)

@@ -21,6 +21,10 @@ delegated to a :class:`repro.envs.measure.MeasurementBackend`:
   the registry (pallas on TPU, interpret/ref on CPU per
   ``REPRO_KERNEL_MODE``) and the median of k repeats is the measurement.
 
+- ``shifted:<kind>`` — the analytic model under a registered environment
+  shift (``repro.envs.measure.SHIFT_KINDS``): the reproducible target side
+  of a source→target transfer pair (see ``repro.tuner.bench``).
+
 Select with the ``backend=`` constructor argument or the
 ``REPRO_MEASURE_BACKEND`` env var.  Counters play the role of the paper's
 system events C.  A tuned optimum is deployable directly:

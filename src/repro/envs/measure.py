@@ -11,6 +11,12 @@ space:
   family is dispatched (jit-compiled, ``block_until_ready``) under the
   candidate launch configuration and the median of k repeats is the
   measurement.  Expensive and honest: the intervention target.
+- :class:`ShiftedAnalyticBackend` — the analytic model a fixed,
+  reproducible distance away: composable :class:`EnvShift` perturbations
+  (scaled hardware constants, workload-shape changes, heteroscedastic
+  noise, tightened VMEM feasibility) build the paper's environmental-change
+  target pairs on CPU CI.  Named kinds live in ``SHIFT_KINDS`` and are
+  selectable as ``shifted:<kind>``.
 
 Both satisfy the :class:`MeasurementBackend` protocol —
 ``measure(config) -> (counters, y)`` with latency in microseconds — so
@@ -26,15 +32,16 @@ from __future__ import annotations
 
 import os
 import time
-from dataclasses import dataclass
-from typing import (Any, Callable, Dict, Iterable, List, Optional, Protocol,
-                    Sequence, Tuple, runtime_checkable)
+from dataclasses import dataclass, field, replace
+from typing import (Any, Callable, Dict, Iterable, List, Mapping, Optional,
+                    Protocol, Sequence, Tuple, Union, runtime_checkable)
 
 import numpy as np
 
 MEASURE_BACKEND_ENV = "REPRO_MEASURE_BACKEND"
 ANALYTIC = "analytic"
 WALLCLOCK = "wallclock"
+SHIFTED_PREFIX = "shifted:"
 BACKENDS = (ANALYTIC, WALLCLOCK)
 
 LANE = 128
@@ -62,6 +69,27 @@ def _mxu_util(*block_dims: int) -> float:
     for d in block_dims:
         u *= min(d, LANE) / LANE
     return max(u, 1e-3)
+
+
+@dataclass(frozen=True)
+class HardwareSpec:
+    """The hardware constants the launch-geometry model prices with.
+
+    The defaults are the module-level v5e-class constants, so a default
+    ``HardwareSpec`` reproduces the original model bit-for-bit; a shifted
+    environment scales them (a different accelerator generation)."""
+
+    mxu_flops_per_us: float = MXU_FLOPS_PER_US
+    vpu_flops_per_us: float = VPU_FLOPS_PER_US
+    hbm_bytes_per_us: float = HBM_BYTES_PER_US
+
+    def scaled(self, mxu: float = 1.0, vpu: float = 1.0,
+               hbm: float = 1.0) -> "HardwareSpec":
+        if mxu == vpu == hbm == 1.0:
+            return self
+        return HardwareSpec(self.mxu_flops_per_us * mxu,
+                            self.vpu_flops_per_us * vpu,
+                            self.hbm_bytes_per_us * hbm)
 
 
 @dataclass(frozen=True)
@@ -111,11 +139,14 @@ class LaunchGeometry:
     Each ``<family>(params)`` returns ``(t_us, grid, vmem, flops, hbm)`` —
     modeled latency, grid points, per-core VMEM footprint of the blocks,
     total FLOPs, and streamed HBM bytes — from the same quantities the real
-    kernels derive from the launch parameters.
+    kernels derive from the launch parameters.  ``hardware`` supplies the
+    peak rates (default: the v5e-class module constants).
     """
 
-    def __init__(self, workload: KernelWorkload):
+    def __init__(self, workload: KernelWorkload,
+                 hardware: Optional[HardwareSpec] = None):
         self.workload = workload
+        self.hardware = hardware or HardwareSpec()
 
     def flash_attention(self, p) -> Tuple[float, float, float, float, float]:
         w = self.workload
@@ -129,8 +160,8 @@ class LaunchGeometry:
                 + F32 * qb * (w.head_dim + 2 * LANE))         # acc/m/l scratch
         hbm = F32 * grid * (qb + 2 * kb) * w.head_dim / 2 + F32 * sq * w.head_dim
         t = (grid * w.launch_overhead_us
-             + flops / (MXU_FLOPS_PER_US * _mxu_util(qb, kb))
-             + hbm / HBM_BYTES_PER_US)
+             + flops / (self.hardware.mxu_flops_per_us * _mxu_util(qb, kb))
+             + hbm / self.hardware.hbm_bytes_per_us)
         return t, grid, vmem, flops, hbm
 
     def mamba_scan(self, p) -> Tuple[float, float, float, float, float]:
@@ -144,8 +175,10 @@ class LaunchGeometry:
                 + F32 * cb * w.scan_state)                       # state scratch
         hbm = F32 * w.batch * l * (3 * w.channels + 2 * w.scan_state)
         # the recurrence is serial inside a chunk: VPU-bound step chain
-        serial = grid * chunk * (cb * w.scan_state / VPU_FLOPS_PER_US) * 1e-3
-        t = grid * w.launch_overhead_us + serial + hbm / HBM_BYTES_PER_US
+        serial = grid * chunk * (cb * w.scan_state
+                                 / self.hardware.vpu_flops_per_us) * 1e-3
+        t = (grid * w.launch_overhead_us + serial
+             + hbm / self.hardware.hbm_bytes_per_us)
         return t, grid, vmem, flops, hbm
 
     def ssd(self, p) -> Tuple[float, float, float, float, float]:
@@ -160,8 +193,8 @@ class LaunchGeometry:
                 + F32 * (chunk * chunk + n * hd))
         hbm = F32 * w.batch * l * w.ssm_heads * (hd + 2 * n // max(w.ssm_heads // 8, 1))
         t = (grid * w.launch_overhead_us
-             + flops / (MXU_FLOPS_PER_US * _mxu_util(chunk))
-             + hbm / HBM_BYTES_PER_US)
+             + flops / (self.hardware.mxu_flops_per_us * _mxu_util(chunk))
+             + hbm / self.hardware.hbm_bytes_per_us)
         return t, grid, vmem, flops, hbm
 
     def rmsnorm(self, p) -> Tuple[float, float, float, float, float]:
@@ -172,7 +205,7 @@ class LaunchGeometry:
         flops = 4.0 * rows * w.d_model
         vmem = BF16 * (2 * 2 * rb * w.d_model + w.d_model)
         hbm = F32 * rows * w.d_model * 2
-        t = grid * w.launch_overhead_us + hbm / HBM_BYTES_PER_US
+        t = grid * w.launch_overhead_us + hbm / self.hardware.hbm_bytes_per_us
         return t, grid, vmem, flops, hbm
 
     MODELS = ("flash_attention", "mamba_scan", "ssd", "rmsnorm")
@@ -209,6 +242,89 @@ class LaunchGeometry:
 
 def modeled_families() -> Tuple[str, ...]:
     return LaunchGeometry.MODELS
+
+
+# --------------------------------------------------------------------------
+# environment shifts
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class EnvShift:
+    """One composable, deterministic perturbation of the analytic
+    environment — the paper's environmental-change axes instantiated for the
+    launch space.  A shift rewrites the (workload, hardware) pair the
+    geometry model prices with:
+
+    - hardware: scale the peak rates and per-launch overhead (a different
+      accelerator generation);
+    - workload: scale/override the workload shape (a different serving
+      assignment);
+    - feasibility: scale the per-core VMEM budget (tightened -> parts of the
+      source-feasible grid become infeasible in the target);
+    - noise: scale the multiplicative measurement noise and/or add a
+      heteroscedastic component that grows with modeled latency.
+
+    Shifts compose left-to-right: scales multiply, absolute
+    ``workload_update`` overrides win over earlier scales.
+    """
+
+    name: str = "shift"
+    mxu_scale: float = 1.0
+    vpu_scale: float = 1.0
+    hbm_scale: float = 1.0
+    launch_overhead_scale: float = 1.0
+    vmem_scale: float = 1.0
+    seq_scale: float = 1.0
+    batch_scale: float = 1.0
+    workload_update: Mapping[str, Any] = field(default_factory=dict)
+    noise_scale: float = 1.0
+    hetero_noise: float = 0.0
+
+    def apply(self, workload: KernelWorkload, hardware: HardwareSpec
+              ) -> Tuple[KernelWorkload, HardwareSpec]:
+        w = workload
+        if self.seq_scale != 1.0:
+            w = replace(w, seq_len=max(1, int(w.seq_len * self.seq_scale)))
+        if self.batch_scale != 1.0:
+            w = replace(w, batch=max(1, int(w.batch * self.batch_scale)))
+        if self.vmem_scale != 1.0:
+            w = replace(w, vmem_limit=max(1, int(w.vmem_limit * self.vmem_scale)))
+        if self.launch_overhead_scale != 1.0:
+            w = replace(w, launch_overhead_us=w.launch_overhead_us
+                        * self.launch_overhead_scale)
+        if self.noise_scale != 1.0:
+            w = replace(w, noise=w.noise * self.noise_scale)
+        if self.workload_update:
+            w = replace(w, **dict(self.workload_update))
+        return w, hardware.scaled(self.mxu_scale, self.vpu_scale,
+                                  self.hbm_scale)
+
+
+_HARDWARE_SHIFT = EnvShift(name="hardware", mxu_scale=0.5, hbm_scale=0.6,
+                           launch_overhead_scale=2.0)
+_WORKLOAD_SHIFT = EnvShift(name="workload", seq_scale=2.0, batch_scale=0.5)
+_NOISE_SHIFT = EnvShift(name="noise", noise_scale=4.0, hetero_noise=0.05)
+_FEASIBILITY_SHIFT = EnvShift(name="feasibility", vmem_scale=0.5)
+
+SHIFT_KINDS: Dict[str, Tuple[EnvShift, ...]] = {
+    "hardware": (_HARDWARE_SHIFT,),
+    "workload": (_WORKLOAD_SHIFT,),
+    "noise": (_NOISE_SHIFT,),
+    "feasibility": (_FEASIBILITY_SHIFT,),
+    "severe": (_HARDWARE_SHIFT, _WORKLOAD_SHIFT, _FEASIBILITY_SHIFT,
+               _NOISE_SHIFT),
+}
+
+
+def shift_kinds() -> Tuple[str, ...]:
+    return tuple(SHIFT_KINDS)
+
+
+def shifts_for(kind: str) -> Tuple[EnvShift, ...]:
+    if kind not in SHIFT_KINDS:
+        raise ValueError(
+            f"unknown shift kind {kind!r}; known: {sorted(SHIFT_KINDS)}")
+    return SHIFT_KINDS[kind]
 
 
 def _check_modeled(families: Tuple[str, ...]) -> None:
@@ -321,21 +437,66 @@ class AnalyticBackend:
     counter_names = COUNTER_NAMES
 
     def __init__(self, workload: KernelWorkload, families: Iterable[str],
-                 seed: int = 0):
+                 seed: int = 0, *, hardware: Optional[HardwareSpec] = None):
         self.workload = workload
         self.families = tuple(sorted(families))
         _check_modeled(self.families)
-        self.geometry = LaunchGeometry(workload)
+        self.hardware = hardware or HardwareSpec()
+        self.geometry = LaunchGeometry(workload, self.hardware)
         self._noise_rng = np.random.default_rng(seed + 13)
+
+    def _sigma(self, total_us: float) -> float:
+        """Relative noise scale for one measurement (constant here; the
+        shifted backend makes it latency-dependent)."""
+        return self.workload.noise
 
     def measure(self, config: Dict[str, Any]) -> Tuple[Dict[str, float], float]:
         counters, total_us, feasible = self.geometry.totals(
             self.families, config)
         if not feasible:
             return counters, float("inf")
-        y = total_us * (1.0 + self.workload.noise
+        y = total_us * (1.0 + self._sigma(total_us)
                         * float(self._noise_rng.standard_normal()))
         return counters, y
+
+
+class ShiftedAnalyticBackend(AnalyticBackend):
+    """An analytic target environment a fixed distance from the source.
+
+    ``shifts`` (a shift-kind name or a sequence of :class:`EnvShift`) are
+    composed onto the base workload and the default :class:`HardwareSpec`,
+    and the geometry model prices against the shifted pair.  Everything is
+    seeded and CPU-cheap, so source→target fidelity gaps (the paper's
+    environmental changes) are reproducible in CI.
+
+    Heteroscedastic noise: a shift's ``hetero_noise`` adds a latency-
+    dependent component ``hetero * t / (t + HETERO_PIVOT_US)`` to the
+    relative noise — slow configurations measure noisier than fast ones, so
+    the target's noise floor is configuration-dependent (unlike the source).
+    """
+
+    HETERO_PIVOT_US = 1e4
+
+    def __init__(self, workload: KernelWorkload, families: Iterable[str],
+                 seed: int = 0, *,
+                 shifts: Union[str, Sequence[EnvShift]] = ()):
+        if isinstance(shifts, str):
+            shifts = shifts_for(shifts)
+        self.shifts = tuple(shifts)
+        self.base_workload = workload
+        shifted, hardware = workload, HardwareSpec()
+        for s in self.shifts:
+            shifted, hardware = s.apply(shifted, hardware)
+        super().__init__(shifted, families, seed, hardware=hardware)
+        self._hetero = float(sum(s.hetero_noise for s in self.shifts))
+
+    @property
+    def shift_names(self) -> Tuple[str, ...]:
+        return tuple(s.name for s in self.shifts)
+
+    def _sigma(self, total_us: float) -> float:
+        return (self.workload.noise + self._hetero
+                * total_us / (total_us + self.HETERO_PIVOT_US))
 
 
 class WallClockBackend:
@@ -451,14 +612,24 @@ class WallClockBackend:
 # --------------------------------------------------------------------------
 
 def resolve_backend_name(explicit: Optional[str] = None) -> str:
-    """Backend precedence: explicit argument > env var > analytic."""
+    """Backend precedence: explicit argument > env var > analytic.
+
+    ``shifted:<kind>`` (e.g. ``shifted:hardware``) names a
+    :class:`ShiftedAnalyticBackend` with that registered shift kind, so an
+    environment-shifted target is selectable through the same
+    ``REPRO_MEASURE_BACKEND`` plumbing as the real backends."""
     name = explicit or os.environ.get(MEASURE_BACKEND_ENV, "") or ANALYTIC
+    if name.startswith(SHIFTED_PREFIX):
+        kind = name[len(SHIFTED_PREFIX):]
+        if kind in SHIFT_KINDS:
+            return name
     if name not in BACKENDS:
         source = ("argument" if explicit
                   else f"{MEASURE_BACKEND_ENV} env var")
         raise ValueError(
             f"measurement backend {name!r} (from {source}) is not one of "
-            f"{BACKENDS}")
+            f"{BACKENDS} or shifted:<kind> with kind in "
+            f"{sorted(SHIFT_KINDS)}")
     return name
 
 
@@ -468,5 +639,9 @@ def make_backend(name: Optional[str], workload: KernelWorkload,
     """Instantiate a backend by name (``None`` -> env var -> analytic).
     Keyword arguments are forwarded to the backend constructor."""
     resolved = resolve_backend_name(name)
+    if resolved.startswith(SHIFTED_PREFIX):
+        return ShiftedAnalyticBackend(
+            workload, families, seed,
+            shifts=resolved[len(SHIFTED_PREFIX):], **kw)
     cls = AnalyticBackend if resolved == ANALYTIC else WallClockBackend
     return cls(workload, families, seed, **kw)

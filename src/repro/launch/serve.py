@@ -21,47 +21,10 @@ import numpy as np
 
 from repro.configs.registry import get_smoke_config, get_model_config, list_archs
 from repro.data.pipeline import make_data
+from repro.launch.tune import measure_backend_arg, tune_launch_config
 from repro.models.model import build_model
 from repro.train.serve_step import jitted_steps, sample_token
 from repro.utils.config import MeshConfig, RunConfig, ShapeConfig
-
-
-def _launch_workload(cfg, batch: int, seq_len: int):
-    """A KernelWorkload cell matching this serving assignment — attention
-    dims from the config, and for ssm/hybrid models the mamba surface too
-    (d_inner channels, recurrent state, mamba-2 head geometry), so the tuned
-    chunk/block optimum is for the kernels this model actually runs."""
-    from repro.envs.kernel_launch import KernelWorkload
-
-    kw = KernelWorkload()
-    d_inner = cfg.ssm_expand * cfg.d_model
-    is_ssm = cfg.family in ("ssm", "hybrid")
-    return KernelWorkload(
-        name=f"serve-{cfg.name}", batch=batch, seq_len=seq_len,
-        heads=cfg.num_heads or kw.heads,
-        kv_heads=cfg.num_kv_heads or cfg.num_heads or kw.kv_heads,
-        head_dim=getattr(cfg, "head_dim", 0) or kw.head_dim,
-        d_model=cfg.d_model,
-        channels=d_inner if is_ssm else kw.channels,
-        scan_state=(cfg.ssm_state or kw.scan_state) if is_ssm else kw.scan_state,
-        ssm_heads=cfg.ssm_num_heads or kw.ssm_heads,
-        ssm_head_dim=(d_inner // cfg.ssm_num_heads if cfg.ssm_num_heads
-                      else kw.ssm_head_dim),
-        ssm_state=(cfg.ssm_state or kw.ssm_state) if is_ssm else kw.ssm_state)
-
-
-def tune_launch_config(cfg, batch: int, seq_len: int, budget: int,
-                       backend: str | None):
-    from repro.tuner.runner import tune_kernel_launch
-    from repro.tuner.space import launch_families_for
-
-    result = tune_kernel_launch(_launch_workload(cfg, batch, seq_len),
-                                families=launch_families_for(cfg),
-                                budget=budget, target_backend=backend)
-    print(f"[serve] tuned launch config ({result.method}, "
-          f"budget={budget}, y={result.best_y:.1f} us): "
-          f"{result.launch_config}")
-    return result.launch_config
 
 
 def main() -> int:
@@ -75,9 +38,10 @@ def main() -> int:
     ap.add_argument("--tune-launch", type=int, default=0, metavar="BUDGET",
                     help="intervention budget for a kernel-launch tuning run "
                          "before serving (0 = serve with registry defaults)")
-    ap.add_argument("--measure-backend", choices=["analytic", "wallclock"],
+    ap.add_argument("--measure-backend", type=measure_backend_arg,
                     default=None,
-                    help="target measurement backend for --tune-launch "
+                    help="target measurement backend for --tune-launch: "
+                         "analytic, wallclock, or shifted:<kind> "
                          "(default: REPRO_MEASURE_BACKEND, then analytic)")
     args = ap.parse_args()
 

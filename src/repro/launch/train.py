@@ -7,6 +7,12 @@ smoke-scale config end-to-end; on a real TPU slice the same entry point runs
 the full config (the mesh adapts to ``jax.device_count()``).
 
     PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --steps 50
+
+``--tune-launch N`` closes the CAMEO loop before training (mirroring
+serve): a transfer-tuning run (analytic source, ``--measure-backend``
+target) over the kernel-launch space picks block sizes / chunk lengths for
+this training shape, and the winning configuration is baked into the jitted
+train step.
 """
 
 from __future__ import annotations
@@ -21,6 +27,7 @@ from repro.checkpoint.manager import CheckpointManager
 from repro.configs.registry import get_smoke_config, get_model_config, list_archs
 from repro.data.pipeline import make_data
 from repro.launch.mesh import make_mesh, state_shardings, batch_shardings
+from repro.launch.tune import measure_backend_arg, tune_launch_config
 from repro.models.model import build_model
 from repro.runtime.driver import TrainDriver
 from repro.runtime.elastic import adjust_run_for_devices
@@ -41,6 +48,14 @@ def main() -> int:
                     help="use the full (not smoke) architecture config; "
                          "requires a real accelerator slice")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_train")
+    ap.add_argument("--tune-launch", type=int, default=0, metavar="BUDGET",
+                    help="intervention budget for a kernel-launch tuning run "
+                         "before training (0 = train with registry defaults)")
+    ap.add_argument("--measure-backend", type=measure_backend_arg,
+                    default=None,
+                    help="target measurement backend for --tune-launch: "
+                         "analytic, wallclock, or shifted:<kind> "
+                         "(default: REPRO_MEASURE_BACKEND, then analytic)")
     args = ap.parse_args()
 
     cfg = (get_model_config(args.arch) if args.full_config
@@ -63,6 +78,12 @@ def main() -> int:
     optimizer = make_optimizer(run.train)
     mesh = make_mesh(run.mesh)
 
+    launch_config = None
+    if args.tune_launch > 0:
+        launch_config = tune_launch_config(cfg, args.batch, args.seq,
+                                           args.tune_launch,
+                                           args.measure_backend, kind="train")
+
     def init_state():
         return init_train_state(model, run, optimizer,
                                 jax.random.PRNGKey(run.train.seed))
@@ -70,7 +91,8 @@ def main() -> int:
     with compat.set_mesh(mesh):
         state_t = jax.eval_shape(init_state)
         step_fn = jax.jit(
-            make_train_step(model, run, optimizer),
+            make_train_step(model, run, optimizer,
+                            launch_config=launch_config),
             in_shardings=(state_shardings(state_t, run, mesh), None),
             donate_argnums=(0,))
         driver = TrainDriver(

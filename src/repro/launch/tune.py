@@ -1,0 +1,70 @@
+"""Shared launch-tuning plumbing for the serve/train launchers.
+
+Both entry points close the CAMEO loop the same way before running: build
+the :class:`KernelWorkload` cell matching the assignment, transfer-tune the
+kernel-launch space (analytic source, ``--measure-backend`` target), and
+bake the winning configuration into the jitted steps.  This module is the
+single implementation both import, so the tuned surface (family gating via
+``launch_families_for``) and the backend selection semantics cannot drift
+between launchers.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+from repro.envs.measure import resolve_backend_name
+
+
+def launch_workload_for(cfg, batch: int, seq_len: int, *,
+                        kind: str = "serve"):
+    """A KernelWorkload cell matching this assignment — attention dims from
+    the config, and for ssm/hybrid models the mamba surface too (d_inner
+    channels, recurrent state, mamba-2 head geometry), so the tuned
+    chunk/block optimum is for the kernels this model actually runs."""
+    from repro.envs.kernel_launch import KernelWorkload
+
+    kw = KernelWorkload()
+    d_inner = cfg.ssm_expand * cfg.d_model
+    is_ssm = cfg.family in ("ssm", "hybrid")
+    return KernelWorkload(
+        name=f"{kind}-{cfg.name}", batch=batch, seq_len=seq_len,
+        heads=cfg.num_heads or kw.heads,
+        kv_heads=cfg.num_kv_heads or cfg.num_heads or kw.kv_heads,
+        head_dim=getattr(cfg, "head_dim", 0) or kw.head_dim,
+        d_model=cfg.d_model,
+        channels=d_inner if is_ssm else kw.channels,
+        scan_state=(cfg.ssm_state or kw.scan_state) if is_ssm else kw.scan_state,
+        ssm_heads=cfg.ssm_num_heads or kw.ssm_heads,
+        ssm_head_dim=(d_inner // cfg.ssm_num_heads if cfg.ssm_num_heads
+                      else kw.ssm_head_dim),
+        ssm_state=(cfg.ssm_state or kw.ssm_state) if is_ssm else kw.ssm_state)
+
+
+def tune_launch_config(cfg, batch: int, seq_len: int, budget: int,
+                       backend: Optional[str], *, kind: str = "serve",
+                       seed: int = 0) -> Dict[str, Any]:
+    """One transfer-tuning run over this assignment's kernel-launch space;
+    returns the winning ``family.param`` config for the step factories."""
+    from repro.tuner.runner import tune_kernel_launch
+    from repro.tuner.space import launch_families_for
+
+    result = tune_kernel_launch(
+        launch_workload_for(cfg, batch, seq_len, kind=kind),
+        families=launch_families_for(cfg), budget=budget,
+        target_backend=backend, seed=seed)
+    print(f"[{kind}] tuned launch config ({result.method}, "
+          f"budget={budget}, y={result.best_y:.1f} us): "
+          f"{result.launch_config}")
+    return result.launch_config
+
+
+def measure_backend_arg(name: str) -> str:
+    """argparse ``type=`` validator for ``--measure-backend``: any name
+    ``resolve_backend_name`` accepts (analytic, wallclock, shifted:<kind>)."""
+    try:
+        return resolve_backend_name(name)
+    except ValueError as e:
+        import argparse
+
+        raise argparse.ArgumentTypeError(str(e))

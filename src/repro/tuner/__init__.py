@@ -1,3 +1,5 @@
 from repro.tuner.space import framework_space, config_to_parallel_kv  # noqa: F401
 from repro.tuner.compiled_env import CompiledPerfEnv  # noqa: F401
 from repro.tuner.runner import transfer_tune  # noqa: F401
+from repro.tuner.bench import (  # noqa: F401
+    BenchCell, make_shifted_pair, run_transfer_bench)

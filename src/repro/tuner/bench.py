@@ -1,0 +1,200 @@
+"""Environment-shift transfer benchmark over the kernel-launch space.
+
+The paper's central claim is that causal transfer survives *environmental
+changes*.  This module measures exactly that on CPU-reproducible
+environments: the source is the unshifted analytic launch-geometry model,
+the target is a :class:`~repro.envs.measure.ShiftedAnalyticBackend` a fixed
+distance away (scaled hardware constants, workload-shape changes,
+heteroscedastic noise, tightened VMEM feasibility).  For every
+(workload cell x shift kind x method) tuple the sweep runs
+``transfer_tune`` under a fixed intervention budget and records the best-y
+and regret-vs-round trajectories against a pooled ground-truth optimum of
+the shifted target.
+
+``benchmarks/transfer_bench.py`` is the CLI wrapper that writes
+``BENCH_transfer.json``; the ``gate`` block is what CI asserts on (CAMEO's
+mean final regret must not exceed random search on the shifted cells).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.envs.kernel_launch import KernelLaunchEnv, KernelWorkload
+from repro.envs.measure import ShiftedAnalyticBackend
+from repro.tuner.runner import transfer_tune
+
+#: regret assigned when a method never measured a feasible configuration —
+#: far above any real relative regret so aggregate means stay ordered, while
+#: trajectories keep ``None`` at those rounds (JSON has no inf)
+INFEASIBLE_REGRET = 10.0
+
+DEFAULT_SHIFTS = ("hardware", "workload", "feasibility")
+DEFAULT_METHODS = ("cameo", "random")
+
+
+@dataclass(frozen=True)
+class BenchCell:
+    """One workload cell the benchmark sweeps."""
+
+    name: str
+    workload: KernelWorkload
+    families: Optional[Tuple[str, ...]] = None
+
+
+DEFAULT_CELLS: Tuple[BenchCell, ...] = (
+    BenchCell("serve-8b", KernelWorkload()),
+    BenchCell("train-2k", KernelWorkload(name="train-2k", batch=16,
+                                         seq_len=2048)),
+)
+
+
+def cell_by_name(name: str, cells: Sequence[BenchCell] = DEFAULT_CELLS
+                 ) -> BenchCell:
+    for c in cells:
+        if c.name == name:
+            return c
+    raise ValueError(f"unknown bench cell {name!r}; "
+                     f"known: {[c.name for c in cells]}")
+
+
+def make_shifted_pair(cell: BenchCell, shift: str, seed: int = 0
+                      ) -> Tuple[KernelLaunchEnv, KernelLaunchEnv]:
+    """(source, target) environments for one cell under one shift kind:
+    unshifted analytic source, shifted analytic target, identical launch
+    space.  The source env owns the family defaulting (modeled ∩ registered
+    when the cell doesn't pin them) and the target reuses its choice."""
+    src = KernelLaunchEnv(cell.workload, families=cell.families,
+                          seed=seed + 1, backend="analytic")
+    tgt_backend = ShiftedAnalyticBackend(cell.workload, src.families,
+                                         seed=seed + 2, shifts=shift)
+    tgt = KernelLaunchEnv(cell.workload, backend=tgt_backend, seed=seed + 2)
+    return src, tgt
+
+
+def target_optimum(cell: BenchCell, shift: str, pool: int = 512,
+                   seed: int = 99) -> float:
+    """Ground-truth Y_opt of the shifted target: best measured value over a
+    random pool (the paper's protocol, on a fresh noise stream)."""
+    _, tgt = make_shifted_pair(cell, shift, seed=seed)
+    rng = np.random.default_rng(seed)
+    best = np.inf
+    for cfg in tgt.space.sample(rng, pool):
+        _, y = tgt.intervene(cfg)
+        if np.isfinite(y) and y < best:
+            best = float(y)
+    if not np.isfinite(best):
+        raise RuntimeError(
+            f"no feasible configuration in a {pool}-sample pool for "
+            f"cell={cell.name} shift={shift}")
+    return best
+
+
+def _regret(y: float, y_opt: float) -> Optional[float]:
+    if not np.isfinite(y):
+        return None
+    return max(0.0, (float(y) - y_opt) / y_opt)
+
+
+def _final_regret(trace: Sequence[float], y_opt: float) -> float:
+    finite = [y for y in trace if np.isfinite(y)]
+    if not finite:
+        return INFEASIBLE_REGRET
+    return _regret(min(finite), y_opt)
+
+
+def run_transfer_bench(
+    *,
+    cells: Sequence[BenchCell] = DEFAULT_CELLS,
+    shifts: Sequence[str] = DEFAULT_SHIFTS,
+    methods: Sequence[str] = DEFAULT_METHODS,
+    budget: int = 20,
+    n_source: int = 64,
+    n_target_init: int = 4,
+    seeds: Sequence[int] = (0, 1),
+    pool: int = 512,
+) -> Dict[str, Any]:
+    """The full sweep; returns the ``BENCH_transfer.json`` document."""
+    t_start = time.time()
+    out_cells: List[Dict[str, Any]] = []
+    for cell in cells:
+        for shift in shifts:
+            y_opt = target_optimum(cell, shift, pool=pool)
+            per_method: Dict[str, Any] = {}
+            for method in methods:
+                runs = []
+                for seed in seeds:
+                    # fresh env pair per (method, seed): the backends' noise
+                    # RNGs are stateful, so sharing one pair across methods
+                    # would make results depend on run order
+                    src, tgt = make_shifted_pair(cell, shift, seed=seed)
+                    res = transfer_tune(method, src, tgt, budget=budget,
+                                        n_source=n_source,
+                                        n_target_init=n_target_init,
+                                        seed=seed)
+                    trace = [float(y) for y in res.trace_best_y]
+                    runs.append({
+                        "seed": int(seed),
+                        "best_y": (float(res.best_y)
+                                   if np.isfinite(res.best_y) else None),
+                        "final_regret": _final_regret(trace, y_opt),
+                        "regret": [_regret(y, y_opt) for y in trace],
+                        "best_y_trace": [
+                            float(y) if np.isfinite(y) else None
+                            for y in trace],
+                        "wall_s": float(res.wall_s),
+                        "n_target_init": res.extras.get("n_target_init"),
+                    })
+                per_method[method] = {
+                    "runs": runs,
+                    "mean_final_regret": float(np.mean(
+                        [r["final_regret"] for r in runs])),
+                }
+            out_cells.append({
+                "cell": cell.name,
+                "shift": shift,
+                "y_opt": y_opt,
+                "methods": per_method,
+            })
+    doc = {
+        "meta": {
+            "budget": int(budget),
+            "n_source": int(n_source),
+            "n_target_init": int(n_target_init),
+            "seeds": [int(s) for s in seeds],
+            "pool": int(pool),
+            "cells": [c.name for c in cells],
+            "shifts": list(shifts),
+            "methods": list(methods),
+            "wall_s": None,  # filled below
+        },
+        "cells": out_cells,
+    }
+    doc["gate"] = gate_summary(doc)
+    doc["meta"]["wall_s"] = round(time.time() - t_start, 2)
+    return doc
+
+
+def gate_summary(doc: Dict[str, Any], champion: str = "cameo",
+                 reference: str = "random") -> Dict[str, Any]:
+    """CI acceptance: the champion's mean final regret (over every
+    cell x shift x seed) must not exceed the reference's.  Absent methods
+    make the gate vacuously pass (``checked: False``)."""
+    champ, ref = [], []
+    for cell in doc["cells"]:
+        methods = cell["methods"]
+        if champion in methods and reference in methods:
+            champ.extend(r["final_regret"] for r in methods[champion]["runs"])
+            ref.extend(r["final_regret"] for r in methods[reference]["runs"])
+    if not champ:
+        return {"checked": False, "passed": True,
+                "champion": champion, "reference": reference}
+    c, r = float(np.mean(champ)), float(np.mean(ref))
+    return {"checked": True, "passed": bool(c <= r),
+            "champion": champion, "reference": reference,
+            "champion_mean_final_regret": c,
+            "reference_mean_final_regret": r}

@@ -57,10 +57,17 @@ def transfer_tune(
     n_source: int = 300,
     n_target_init: int = 5,
     query_text: str = "minimize step_time within {budget} samples",
+    l_alpha: float = 0.1,
     seed: int = 0,
 ) -> TuneResult:
     t0 = time.time()
     d_s = source_env.dataset(n_source, seed=seed + 1)
+    # every method starts from the IDENTICAL free initial target dataset —
+    # giving it only to CAMEO (via seed_target) would bias each comparison
+    # by n_target_init free target measurements
+    d_init = target_env.dataset(n_target_init, seed=seed + 2)
+    init_record = {"n_target_init": len(d_init),
+                   "target_init_ys": [float(y) for y in d_init.ys]}
 
     if method == "cameo":
         q = parse_query(query_text.format(budget=budget))
@@ -68,21 +75,29 @@ def transfer_tune(
         # measurements map onto the shared options (missing ones take the
         # target default) — the paper's software-change setting
         cam = Cameo(target_env.space, q, d_s,
-                    counter_names=source_env.counter_names, seed=seed)
-        cam.seed_target(target_env.dataset(n_target_init, seed=seed + 2))
+                    counter_names=source_env.counter_names, seed=seed,
+                    l_alpha=l_alpha)
+        cam.seed_target(d_init)
         cfg, y = cam.run(target_env, budget)
         return TuneResult(
             method="cameo", best_config=cfg, best_y=y,
             trace_best_y=list(cam.trace.best_y), wall_s=time.time() - t0,
             extras={"k": cam.k, "reduced_space": list(cam.reduced_names),
-                    "extraction_s": cam.extraction_s})
+                    "extraction_s": cam.extraction_s,
+                    "model_update_s": float(np.mean(
+                        cam.trace.model_update_s or [0.0])),
+                    "recommend_s": float(np.mean(
+                        cam.trace.recommend_s or [0.0])),
+                    **init_record})
 
     tuner = make_baseline(method, target_env.space, d_s,
                           counter_names=source_env.counter_names, seed=seed)
+    for c, cnt, y in zip(d_init.configs, d_init.counters, d_init.ys):
+        tuner.update(c, cnt, y)
     cfg, y = tuner.run(target_env, budget)
     return TuneResult(method=method, best_config=cfg, best_y=y,
                       trace_best_y=list(tuner.trace.best_y),
-                      wall_s=time.time() - t0)
+                      wall_s=time.time() - t0, extras=dict(init_record))
 
 
 def tune_kernel_launch(target_workload, *, source_workload=None,

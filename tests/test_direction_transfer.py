@@ -1,0 +1,241 @@
+"""Direction-aware infeasibility handling + transfer-tuning fairness.
+
+Pins the two clamp sites for maximize-direction queries (``Dataset.matrix``
+and ``_fit_surrogates``), ``Cameo.best`` tie-breaking, the
+constant-objective-column guard in ``_refresh_graph_t``, and the identical
+initial-target-dataset contract of ``transfer_tune``."""
+
+import numpy as np
+import pytest
+
+from repro.core.ace import rank_by_ace
+from repro.core.cameo import Cameo, Dataset
+from repro.core.query import parse_query
+from repro.core.spaces import ConfigSpace, Option
+from repro.envs.base import PooledEnv
+from repro.tuner.runner import transfer_tune
+
+
+# --------------------------------------------------------------------------
+# Dataset.matrix: direction-aware clamp
+# --------------------------------------------------------------------------
+
+def _space():
+    return ConfigSpace([Option("a", (1, 2, 4, 8)), Option("b", (1, 2, 4))])
+
+
+def _dataset(ys):
+    d = Dataset()
+    for i, y in enumerate(ys):
+        d.add({"a": [1, 2, 4, 8][i % 4], "b": [1, 2, 4][i % 3]},
+              {"c": float(i)}, y)
+    return d
+
+
+def test_matrix_clamps_neg_inf_below_for_maximize():
+    # maximize: constraint handling stores -inf; the clamp must land BELOW
+    # every feasible value, not above (the pre-fix poisoning)
+    d = _dataset([10.0, 30.0, float("-inf"), 20.0])
+    m, names = d.matrix(_space(), ["c"], maximize=True)
+    obj = m[:, names.index("__objective__")]
+    assert np.isfinite(obj).all()
+    assert obj[2] < 10.0  # pessimistically low
+    assert obj[2] == 10.0 - 2.0 * (30.0 - 10.0 + 1.0)
+
+
+def test_matrix_clamps_pos_inf_above_for_minimize():
+    d = _dataset([10.0, 30.0, float("inf"), 20.0])
+    m, names = d.matrix(_space(), ["c"])  # default: minimize
+    obj = m[:, names.index("__objective__")]
+    assert np.isfinite(obj).all()
+    assert obj[2] > 30.0
+    assert obj[2] == 30.0 + 2.0 * (30.0 - 10.0 + 1.0)
+
+
+def test_matrix_counter_clamp_unchanged_by_direction():
+    d = Dataset()
+    d.add({"a": 1, "b": 1}, {"c": 1.0}, 5.0)
+    d.add({"a": 2, "b": 2}, {"c": float("inf")}, 7.0)
+    for maximize in (False, True):
+        m, names = d.matrix(_space(), ["c"], maximize=maximize)
+        c = m[:, names.index("c")]
+        assert np.isfinite(c).all() and c[1] > c[0]
+
+
+def test_matrix_all_infeasible_column_clamps_to_zero():
+    d = _dataset([float("-inf"), float("-inf")])
+    m, names = d.matrix(_space(), [], maximize=True)
+    assert (m[:, -1] == 0.0).all()
+
+
+# --------------------------------------------------------------------------
+# a maximize environment (throughput objective, latency constraint)
+# --------------------------------------------------------------------------
+
+class ThroughputEnv(PooledEnv):
+    """Deterministic 12-point landscape: y = throughput (maximize), counters
+    carry the latency the query constrains on.  Optimum under latency < 16
+    is (a=8, b=1) -> 81.0."""
+
+    def __init__(self, seed=0):
+        super().__init__(_space(), ("latency", "throughput"), seed=seed)
+
+    def _measure(self, cfg):
+        a, b = float(cfg["a"]), float(cfg["b"])
+        throughput = 10.0 * a + 5.0 * b - 0.5 * a * b
+        latency = a * b
+        return {"latency": latency, "throughput": throughput}, throughput
+
+
+def _source_dataset(n=60, seed=1):
+    env = ThroughputEnv(seed=seed)
+    return env.dataset(n, seed=seed)
+
+
+def test_maximize_query_end_to_end():
+    q = parse_query("maximize throughput for which latency is "
+                    "less than 16 within 20 samples")
+    assert q.maximize and q.objective == "throughput"
+    assert q.constraints == [("latency", "<", 16.0)]
+
+    env = ThroughputEnv(seed=0)
+    cam = Cameo(env.space, q, _source_dataset(),
+                counter_names=env.counter_names, seed=0)
+    cam.seed_target(env.dataset(4, seed=2))
+    cfg, y = cam.run(env, 20)
+    assert cfg is not None
+    # the optimum of the constrained problem: a=8, b=1 -> 81, latency 8 < 16
+    assert cfg == {"a": 8, "b": 1}
+    assert y == 81.0
+    # infeasible measurements were stored as -inf (maximize sentinel), and
+    # best never surfaces one
+    assert all(np.isfinite(v) or v == float("-inf") for v in cam.d_t.ys)
+    # clamp site 1: the discovery matrix is finite with infeasible rows
+    # pessimistically LOW
+    m, names = cam.d_t.matrix(env.space, cam.counter_names, maximize=True)
+    obj = m[:, -1]
+    assert np.isfinite(obj).all()
+    feas = [v for v in cam.d_t.ys if np.isfinite(v)]
+    if len(feas) < len(cam.d_t.ys):
+        assert obj.min() < min(feas)
+
+
+def test_maximize_infeasible_does_not_poison_ranking():
+    # pre-fix: -inf clamped HIGH made infeasible rows the "best" objective
+    # values, so options correlated with infeasibility ranked as strong
+    # causes; post-fix the clamp is pessimistic and the top-ACE option must
+    # be one that actually drives feasible throughput
+    env = ThroughputEnv(seed=0)
+    d = env.dataset(48, seed=3)
+    q = parse_query("maximize throughput for which latency is "
+                    "less than 16 within 10 samples")
+    # apply constraint handling the way Cameo stores target data
+    constrained = Dataset()
+    for c, cnt, y in zip(d.configs, d.counters, d.ys):
+        ok = cnt["latency"] < 16.0
+        constrained.add(c, cnt, y if ok else float("-inf"))
+    cam = Cameo(env.space, q, constrained,
+                counter_names=env.counter_names, seed=0)
+    data_s, names_s = constrained.matrix(env.space, cam.counter_names,
+                                         maximize=True)
+    obj = data_s[:, -1]
+    feasible_max = max(y for y in constrained.ys if np.isfinite(y))
+    assert obj.max() <= feasible_max  # no artificially-good rows
+
+
+def test_fit_surrogates_clamp_is_direction_aware():
+    # clamp site 2: -inf target measurements become pessimistic (worst) in
+    # the internal minimize space, so the cold GP's incumbent stays feasible
+    env = ThroughputEnv(seed=0)
+    q = parse_query("maximize throughput within 10 samples")
+    cam = Cameo(env.space, q, _source_dataset(), seed=0)
+    init = Dataset()
+    init.add({"a": 1, "b": 1}, {}, 14.5)
+    init.add({"a": 2, "b": 2}, {}, 28.0)
+    init.add({"a": 4, "b": 4}, {}, float("-inf"))  # infeasible
+    cam.seed_target(init)
+    cam._fit_surrogates()
+    mu, sd = cam._cold.predict([{"a": 4, "b": 4}])
+    assert np.isfinite(mu).all() and np.isfinite(sd).all()
+    # internal best (minimize space) is the best FEASIBLE value, not -inf
+    finite = cam._ys_internal()[np.isfinite(cam._ys_internal())]
+    assert float(np.min(finite)) == -28.0
+
+
+def test_best_tie_breaking_first_index_both_directions():
+    env = ThroughputEnv(seed=0)
+    q_max = parse_query("maximize throughput within 5 samples")
+    cam = Cameo(env.space, q_max, _source_dataset(), seed=0)
+    d = Dataset()
+    d.add({"a": 1, "b": 1}, {}, 3.0)
+    d.add({"a": 2, "b": 1}, {}, 7.0)   # first maximal
+    d.add({"a": 4, "b": 1}, {}, 7.0)   # tied
+    cam.seed_target(d)
+    cfg, y = cam.best
+    assert y == 7.0 and cfg == {"a": 2, "b": 1}
+
+    q_min = parse_query("minimize latency within 5 samples")
+    cam2 = Cameo(env.space, q_min, _source_dataset(), seed=0)
+    d2 = Dataset()
+    d2.add({"a": 4, "b": 1}, {}, 2.0)  # first minimal
+    d2.add({"a": 2, "b": 1}, {}, 2.0)  # tied
+    d2.add({"a": 1, "b": 1}, {}, 9.0)
+    cam2.seed_target(d2)
+    cfg2, y2 = cam2.best
+    assert y2 == 2.0 and cfg2 == {"a": 4, "b": 1}
+
+
+# --------------------------------------------------------------------------
+# _refresh_graph_t: constant objective column survives
+# --------------------------------------------------------------------------
+
+def test_refresh_graph_t_retains_constant_objective():
+    env = ThroughputEnv(seed=0)
+    q = parse_query("minimize latency within 10 samples")
+    cam = Cameo(env.space, q, _source_dataset(), seed=0)
+    init = Dataset()
+    rng = np.random.default_rng(0)
+    for cfg in env.space.sample(rng, 9):
+        init.add(cfg, {}, 5.0)  # identical early target ys
+    cam.seed_target(init)
+    assert cam.g_t is not None
+    assert "__objective__" in cam.g_t.nodes
+    # the later ACE re-ranking against g_t must see its objective node
+    data_t, names_t = cam.d_t.matrix(cam.space, cam.counter_names)
+    ranked = rank_by_ace(data_t, names_t, "__objective__", cam.g_t)
+    assert [n for n, _ in ranked]  # well-posed, no missing-node collapse
+
+
+# --------------------------------------------------------------------------
+# transfer_tune: identical initial target dataset for every method
+# --------------------------------------------------------------------------
+
+class QuadraticEnv(PooledEnv):
+    def __init__(self, seed=0):
+        space = ConfigSpace([Option("x", tuple(range(8))),
+                             Option("z", (0, 1, 2, 3))])
+        super().__init__(space, (), seed=seed)
+
+    def _measure(self, cfg):
+        return {}, float((cfg["x"] - 5) ** 2 + 0.5 * (cfg["z"] - 1) ** 2)
+
+
+@pytest.mark.parametrize("method", ["random", "smac", "cameo"])
+def test_transfer_tune_records_identical_target_init(method):
+    res = transfer_tune(method, QuadraticEnv(seed=1), QuadraticEnv(seed=2),
+                        budget=4, n_source=16, n_target_init=3, seed=0)
+    assert res.extras["n_target_init"] == 3
+    assert len(res.extras["target_init_ys"]) == 3
+    # the init samples count toward the incumbent from round one
+    assert res.best_y <= min(res.extras["target_init_ys"])
+    assert res.trace_best_y[0] <= min(res.extras["target_init_ys"])
+
+
+def test_transfer_tune_init_identical_across_methods():
+    ys = {}
+    for method in ("cameo", "random", "restune"):
+        res = transfer_tune(method, QuadraticEnv(seed=1),
+                            QuadraticEnv(seed=2), budget=3, n_source=16,
+                            n_target_init=4, seed=7)
+        ys[method] = res.extras["target_init_ys"]
+    assert ys["cameo"] == ys["random"] == ys["restune"]

@@ -1,0 +1,295 @@
+"""Environment-shift subsystem: EnvShift composition, ShiftedAnalyticBackend
+determinism / fidelity-gap properties, shifted:<kind> backend selection, the
+transfer benchmark runner's document shape + gate, and the train launcher's
+--tune-launch wiring (spy-verified, mirroring serve)."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.envs.kernel_launch import KernelLaunchEnv, KernelWorkload
+from repro.envs.measure import (
+    MEASURE_BACKEND_ENV, SHIFT_KINDS, AnalyticBackend, EnvShift, HardwareSpec,
+    LaunchGeometry, ShiftedAnalyticBackend, make_backend,
+    resolve_backend_name, shift_kinds, shifts_for)
+from repro.kernels import dispatch
+from repro.tuner.bench import (
+    BenchCell, cell_by_name, gate_summary, make_shifted_pair,
+    run_transfer_bench, target_optimum)
+
+SERVE = KernelWorkload()
+FAMS = None  # filled lazily per test via dispatch.families()
+
+
+def _fams():
+    return sorted(dispatch.families())
+
+
+def _grid(n=20, seed=5):
+    space = dispatch.launch_space()
+    return [space.default_config()] + space.sample(np.random.default_rng(seed), n)
+
+
+# --------------------------------------------------------------------------
+# EnvShift composition
+# --------------------------------------------------------------------------
+
+def test_env_shift_applies_scales_and_overrides():
+    s = EnvShift(name="s", mxu_scale=0.5, hbm_scale=2.0, seq_scale=2.0,
+                 batch_scale=0.25, vmem_scale=0.5,
+                 launch_overhead_scale=3.0, noise_scale=2.0,
+                 workload_update={"heads": 16})
+    w, hw = s.apply(SERVE, HardwareSpec())
+    assert w.seq_len == SERVE.seq_len * 2
+    assert w.batch == SERVE.batch // 4
+    assert w.vmem_limit == SERVE.vmem_limit // 2
+    assert w.launch_overhead_us == SERVE.launch_overhead_us * 3
+    assert w.noise == SERVE.noise * 2
+    assert w.heads == 16
+    assert hw.mxu_flops_per_us == HardwareSpec().mxu_flops_per_us * 0.5
+    assert hw.hbm_bytes_per_us == HardwareSpec().hbm_bytes_per_us * 2.0
+    # identity shift is a no-op returning the same objects
+    w2, hw2 = EnvShift().apply(SERVE, HardwareSpec())
+    assert w2 is SERVE and hw2.mxu_flops_per_us == HardwareSpec().mxu_flops_per_us
+
+
+def test_shifts_compose_left_to_right():
+    a = EnvShift(name="a", seq_scale=2.0)
+    b = EnvShift(name="b", seq_scale=2.0, mxu_scale=0.5)
+    w, hw = SERVE, HardwareSpec()
+    for s in (a, b):
+        w, hw = s.apply(w, hw)
+    assert w.seq_len == SERVE.seq_len * 4
+    assert hw.mxu_flops_per_us == HardwareSpec().mxu_flops_per_us * 0.5
+
+
+def test_shift_registry():
+    assert set(shift_kinds()) >= {"hardware", "workload", "noise",
+                                  "feasibility", "severe"}
+    assert shifts_for("severe") == (SHIFT_KINDS["hardware"]
+                                    + SHIFT_KINDS["workload"]
+                                    + SHIFT_KINDS["feasibility"]
+                                    + SHIFT_KINDS["noise"])
+    with pytest.raises(ValueError, match="unknown shift kind"):
+        shifts_for("bogus")
+
+
+# --------------------------------------------------------------------------
+# ShiftedAnalyticBackend
+# --------------------------------------------------------------------------
+
+def test_no_shifts_is_bit_identical_to_analytic():
+    a = AnalyticBackend(SERVE, _fams(), seed=0)
+    s = ShiftedAnalyticBackend(SERVE, _fams(), seed=0, shifts=())
+    for cfg in _grid():
+        ca, ya = a.measure(cfg)
+        cs, ys = s.measure(cfg)
+        assert ca == cs
+        assert ya == ys or (np.isinf(ya) and np.isinf(ys))
+
+
+def test_shifted_backend_deterministic_per_seed():
+    for kind in shift_kinds():
+        runs = []
+        for _ in range(2):
+            b = ShiftedAnalyticBackend(SERVE, _fams(), seed=7, shifts=kind)
+            runs.append([b.measure(c)[1] for c in _grid(8)])
+        assert runs[0] == runs[1], kind
+
+
+def test_every_kind_opens_a_fidelity_gap():
+    # each registered shift kind must CHANGE the measurement somewhere on the
+    # grid — a shift that measures identically to the source is not a shift
+    base = AnalyticBackend(SERVE, _fams(), seed=0)
+    base_ys = [base.measure(c)[1] for c in _grid()]
+    for kind in shift_kinds():
+        b = ShiftedAnalyticBackend(SERVE, _fams(), seed=0, shifts=kind)
+        ys = [b.measure(c)[1] for c in _grid()]
+        assert ys != base_ys, kind
+
+
+def test_feasibility_shift_tightens_the_gate():
+    base = AnalyticBackend(SERVE, _fams(), seed=0)
+    tight = ShiftedAnalyticBackend(SERVE, _fams(), seed=0,
+                                   shifts="feasibility")
+    grid = _grid(60)
+    inf_base = sum(np.isinf(base.measure(c)[1]) for c in grid)
+    inf_tight = sum(np.isinf(tight.measure(c)[1]) for c in grid)
+    assert inf_tight > inf_base
+    # source-feasible default config is infeasible in the shifted target:
+    # the transfer case where blindly deploying the source optimum fails
+    assert np.isfinite(base.measure(grid[0])[1])
+    assert np.isinf(tight.measure(grid[0])[1])
+
+
+def test_hetero_noise_grows_with_latency():
+    b = ShiftedAnalyticBackend(SERVE, _fams(), seed=0, shifts="noise")
+    lo, hi = b._sigma(10.0), b._sigma(1e6)
+    assert hi > lo > b.base_workload.noise
+    # analytic sigma is constant
+    a = AnalyticBackend(SERVE, _fams(), seed=0)
+    assert a._sigma(10.0) == a._sigma(1e6) == SERVE.noise
+
+
+def test_workload_shift_changes_counters_not_just_latency():
+    cfg = dispatch.launch_space().default_config()
+    base_counters, _ = AnalyticBackend(SERVE, _fams(), 0).measure(cfg)
+    w_counters, _ = ShiftedAnalyticBackend(SERVE, _fams(), 0,
+                                           shifts="workload").measure(cfg)
+    assert w_counters != base_counters
+
+
+# --------------------------------------------------------------------------
+# selection plumbing
+# --------------------------------------------------------------------------
+
+def test_shifted_backend_name_resolution(monkeypatch):
+    assert resolve_backend_name("shifted:hardware") == "shifted:hardware"
+    monkeypatch.setenv(MEASURE_BACKEND_ENV, "shifted:noise")
+    assert resolve_backend_name(None) == "shifted:noise"
+    b = make_backend(None, SERVE, _fams())
+    assert isinstance(b, ShiftedAnalyticBackend)
+    assert b.shift_names == ("noise",)
+    env = KernelLaunchEnv(SERVE)
+    assert isinstance(env.backend, ShiftedAnalyticBackend)
+    with pytest.raises(ValueError):
+        resolve_backend_name("shifted:bogus")
+    monkeypatch.setenv(MEASURE_BACKEND_ENV, "shifted:bogus")
+    with pytest.raises(ValueError):
+        resolve_backend_name(None)
+
+
+def test_env_accepts_shifted_instance():
+    inst = ShiftedAnalyticBackend(SERVE, _fams(), seed=0, shifts="hardware")
+    env = KernelLaunchEnv(SERVE, backend=inst)
+    assert env.backend is inst
+    assert env.families == list(_fams())
+    _, y = env.intervene(env.space.default_config())
+    assert np.isfinite(y)
+
+
+# --------------------------------------------------------------------------
+# transfer benchmark runner
+# --------------------------------------------------------------------------
+
+TINY_CELL = BenchCell(
+    "tiny", KernelWorkload(name="tiny", batch=1, seq_len=128, heads=2,
+                           kv_heads=1, head_dim=16, d_model=64, channels=64,
+                           scan_state=4, ssm_heads=2, ssm_head_dim=16,
+                           ssm_state=8))
+
+
+def test_make_shifted_pair_shares_the_space():
+    src, tgt = make_shifted_pair(TINY_CELL, "hardware", seed=0)
+    assert src.space.names == tgt.space.names
+    assert isinstance(tgt.backend, ShiftedAnalyticBackend)
+    assert not isinstance(src.backend, ShiftedAnalyticBackend)
+
+
+def test_cell_by_name():
+    assert cell_by_name("serve-8b").workload == KernelWorkload()
+    with pytest.raises(ValueError, match="unknown bench cell"):
+        cell_by_name("nope")
+
+
+def test_transfer_bench_document_shape_and_gate():
+    doc = run_transfer_bench(
+        cells=(TINY_CELL,), shifts=("hardware", "noise", "workload"),
+        methods=("cameo", "random"), budget=4, n_source=24,
+        n_target_init=2, seeds=(0,), pool=48)
+    # JSON-clean (no inf/nan): this is the BENCH_transfer.json document
+    json.dumps(doc)
+    assert doc["meta"]["budget"] == 4
+    assert len(doc["cells"]) == 3  # 1 cell x 3 shift kinds
+    for cell in doc["cells"]:
+        assert cell["y_opt"] > 0
+        assert set(cell["methods"]) == {"cameo", "random"}
+        for stats in cell["methods"].values():
+            assert len(stats["runs"]) == 1
+            run = stats["runs"][0]
+            assert len(run["regret"]) == len(run["best_y_trace"]) == 4
+            finite = [r for r in run["regret"] if r is not None]
+            assert all(r >= 0 for r in finite)
+            assert run["n_target_init"] == 2
+            # regret is monotone non-increasing over finite suffix
+            tail = [r for r in run["regret"] if r is not None]
+            assert all(a >= b - 1e-12 for a, b in zip(tail, tail[1:]))
+    gate = doc["gate"]
+    assert gate["checked"] and {"champion_mean_final_regret",
+                                "reference_mean_final_regret"} <= set(gate)
+
+
+def test_gate_summary_orders_and_vacuous_pass():
+    doc = {"cells": [{"cell": "c", "shift": "s", "methods": {
+        "cameo": {"runs": [{"final_regret": 0.1}]},
+        "random": {"runs": [{"final_regret": 0.5}]}}}]}
+    g = gate_summary(doc)
+    assert g["checked"] and g["passed"]
+    g2 = gate_summary({"cells": [{"methods": {
+        "cameo": {"runs": [{"final_regret": 0.9}]},
+        "random": {"runs": [{"final_regret": 0.2}]}}}]})
+    assert g2["checked"] and not g2["passed"]
+    assert gate_summary({"cells": []}) == {
+        "checked": False, "passed": True, "champion": "cameo",
+        "reference": "random"}
+
+
+def test_target_optimum_is_finite_and_beats_default():
+    y_opt = target_optimum(TINY_CELL, "hardware", pool=64)
+    assert np.isfinite(y_opt) and y_opt > 0
+
+
+# --------------------------------------------------------------------------
+# launcher wiring: tuned config reaches the train step (mirrors serve)
+# --------------------------------------------------------------------------
+
+def test_tune_launch_config_deploys_into_train_step():
+    import jax
+    import jax.numpy as jnp
+
+    from conftest import tiny_model_config
+    from repro.launch.tune import launch_workload_for, tune_launch_config
+    from repro.models.model import build_model
+    from repro.train.optimizer import make_optimizer
+    from repro.train.train_step import init_train_state, make_train_step
+    from repro.utils.config import RunConfig, ShapeConfig
+
+    cfg = tiny_model_config()
+    w = launch_workload_for(cfg, batch=2, seq_len=16, kind="train")
+    assert w.name == f"train-{cfg.name}" and w.d_model == cfg.d_model
+
+    lc = tune_launch_config(cfg, 2, 16, budget=2,
+                            backend="shifted:hardware", kind="train", seed=0)
+    assert lc and all("." in k for k in lc)
+    assert {k.split(".")[0] for k in lc} == {"rmsnorm", "flash_attention"}
+
+    run = RunConfig(model=cfg, shape=ShapeConfig("t", 16, 2, "train"))
+    model = build_model(cfg)
+    opt = make_optimizer(run.train)
+    step = jax.jit(make_train_step(model, run, opt, launch_config=lc))
+    state = init_train_state(model, run, opt, jax.random.PRNGKey(0))
+    batch = {"inputs": jnp.zeros((2, 16), jnp.int32),
+             "targets": jnp.zeros((2, 16), jnp.int32)}
+    with dispatch.record_resolutions() as rec:
+        state, metrics = step(state, batch)
+    attn = [r.launch for r in rec if r.family == "flash_attention"]
+    assert attn, "no flash_attention dispatch recorded in train step"
+    for launch in attn:
+        assert launch["q_block"] == lc["flash_attention.q_block"]
+        assert launch["kv_block"] == lc["flash_attention.kv_block"]
+    norm = [r.launch for r in rec if r.family == "rmsnorm"]
+    assert norm and all(
+        l["row_block"] == lc["rmsnorm.row_block"] for l in norm)
+    assert np.isfinite(float(metrics["loss"]))
+
+
+def test_measure_backend_arg_validates():
+    import argparse
+
+    from repro.launch.tune import measure_backend_arg
+
+    assert measure_backend_arg("analytic") == "analytic"
+    assert measure_backend_arg("shifted:severe") == "shifted:severe"
+    with pytest.raises(argparse.ArgumentTypeError):
+        measure_backend_arg("bogus")
