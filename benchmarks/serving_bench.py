@@ -1,0 +1,120 @@
+"""Serving-workload transfer benchmark CLI -> BENCH_serving.json.
+
+Sweeps (served-model cell x target workload trace x method) over the full
+serving stack — scheduler knobs + kernel launch geometry — with the
+environment change being a workload swap: a calm Poisson source trace vs a
+bursty / heavy-tailed / diurnal target (see ``repro.tuner.bench.
+run_serving_bench`` and the ``repro.workloads`` registry).
+
+    PYTHONPATH=src python benchmarks/serving_bench.py --smoke
+    PYTHONPATH=src python benchmarks/serving_bench.py \
+        --targets "bursty:rate=3000,burst=8;heavy_tail:rate=2000" \
+        --methods cameo,random,smac --budget 20
+
+(``--targets`` is ``;``-separated — workload specs use commas for their own
+parameters.)
+
+``--smoke`` is the CI configuration: small budget, the default target
+traces, cameo vs random, exits non-zero when the gate fails (CAMEO's mean
+final regret worse than random search).  See ``benchmarks/README.md`` for
+the JSON layout.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.tuner.bench import (
+    DEFAULT_METHODS, DEFAULT_SERVING_CELLS, DEFAULT_TARGET_TRACES,
+    run_serving_bench, serving_cell_by_name)
+from repro.workloads import workload_kinds
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="small-budget CI sweep; non-zero exit on gate fail")
+    ap.add_argument("--budget", type=int, default=None)
+    ap.add_argument("--n-source", type=int, default=None)
+    ap.add_argument("--n-target-init", type=int, default=None)
+    ap.add_argument("--pool", type=int, default=None,
+                    help="ground-truth pool size per (cell, target)")
+    ap.add_argument("--seeds", default=None, help="comma-separated ints")
+    ap.add_argument("--cells", default=None,
+                    help=f"comma-separated subset of "
+                         f"{[c.name for c in DEFAULT_SERVING_CELLS]}")
+    ap.add_argument("--targets", default=None,
+                    help=f"semicolon-separated workload specs — specs use "
+                         f"commas for parameters (registered kinds: "
+                         f"{list(workload_kinds())})")
+    ap.add_argument("--methods", default=None,
+                    help="comma-separated tuner names (cameo, random, smac, "
+                         "restune, restune-w/o-ml, cello, unicorn)")
+    ap.add_argument("--out", default="BENCH_serving.json")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        budget, n_source, n_target_init = 8, 40, 4
+        pool, seeds = 128, (0, 1, 2)
+        targets, methods = DEFAULT_TARGET_TRACES, DEFAULT_METHODS
+    else:
+        budget, n_source, n_target_init = 20, 96, 4
+        pool, seeds = 256, (0, 1, 2, 3)
+        targets = DEFAULT_TARGET_TRACES
+        methods = ("cameo", "random", "smac", "restune")
+    cells = DEFAULT_SERVING_CELLS
+    if args.budget is not None:
+        budget = args.budget
+    if args.n_source is not None:
+        n_source = args.n_source
+    if args.n_target_init is not None:
+        n_target_init = args.n_target_init
+    if args.pool is not None:
+        pool = args.pool
+    if args.seeds:
+        seeds = tuple(int(s) for s in args.seeds.split(","))
+    if args.cells:
+        cells = tuple(serving_cell_by_name(n) for n in args.cells.split(","))
+    if args.targets:
+        targets = tuple(filter(None, (s.strip()
+                                      for s in args.targets.split(";"))))
+    if args.methods:
+        methods = tuple(args.methods.split(","))
+
+    doc = run_serving_bench(cells=cells, targets=targets, methods=methods,
+                            budget=budget, n_source=n_source,
+                            n_target_init=n_target_init, seeds=seeds,
+                            pool=pool)
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=2)
+
+    for cell in doc["cells"]:
+        dflt = cell["y_default"]
+        dflt_s = f"{dflt:.0f}" if dflt is not None else "infeasible"
+        print(f"\n== {cell['cell']} / {cell['source']} -> {cell['target']} "
+              f"(y_opt={cell['y_opt']:.0f} us, default={dflt_s}) ==")
+        ranked = sorted(cell["methods"].items(),
+                        key=lambda kv: kv[1]["mean_final_regret"])
+        for method, stats in ranked:
+            print(f"  {method:16s} mean final regret = "
+                  f"{stats['mean_final_regret']*100:7.2f}%")
+    gate = doc["gate"]
+    print(f"\n[serving_bench] wrote {args.out} "
+          f"({doc['meta']['wall_s']:.1f}s)")
+    if gate["checked"]:
+        print(f"[serving_bench] gate: {gate['champion']}="
+              f"{gate['champion_mean_final_regret']*100:.2f}% vs "
+              f"{gate['reference']}="
+              f"{gate['reference_mean_final_regret']*100:.2f}% -> "
+              f"{'PASS' if gate['passed'] else 'FAIL'}")
+    if args.smoke and not gate["passed"]:
+        print("[serving_bench] FAIL: champion regret exceeds reference",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

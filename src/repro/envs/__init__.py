@@ -6,4 +6,20 @@ from repro.envs.kernel_launch import (  # noqa: F401
 from repro.envs.measure import (  # noqa: F401
     SHIFT_KINDS, AnalyticBackend, EnvShift, FakeClock, HardwareSpec,
     LaunchGeometry, MeasurementBackend, ShiftedAnalyticBackend, TimingResult,
-    WallClockBackend, make_backend, shift_kinds, shifts_for, timeit)
+    WallClockBackend, backend_names, make_backend, register_backend,
+    shift_kinds, shifts_for, timeit)
+
+
+# ServingEnv sits above the workloads subsystem, which itself measures
+# through repro.envs.measure — importing it eagerly here would close an
+# import cycle (workloads.sim -> repro.envs -> serving_env -> workloads.sim),
+# so the re-export is lazy (PEP 562).
+_SERVING_EXPORTS = ("ServingEnv", "make_serving_pair")
+
+
+def __getattr__(name):
+    if name in _SERVING_EXPORTS:
+        from repro.envs import serving_env
+
+        return getattr(serving_env, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

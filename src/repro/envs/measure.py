@@ -42,7 +42,6 @@ MEASURE_BACKEND_ENV = "REPRO_MEASURE_BACKEND"
 ANALYTIC = "analytic"
 WALLCLOCK = "wallclock"
 SHIFTED_PREFIX = "shifted:"
-BACKENDS = (ANALYTIC, WALLCLOCK)
 
 LANE = 128
 VMEM_LIMIT_BYTES = 12 * 2 ** 20   # per-core block budget the model enforces
@@ -611,26 +610,51 @@ class WallClockBackend:
 # selection
 # --------------------------------------------------------------------------
 
+#: name -> backend class; :func:`register_backend` extends it.  The
+#: ``shifted:<kind>`` family is prefix-routed on top of these keys.
+BACKEND_FACTORIES: Dict[str, Callable[..., MeasurementBackend]] = {
+    ANALYTIC: AnalyticBackend,
+    WALLCLOCK: WallClockBackend,
+}
+
+
+def register_backend(name: str,
+                     factory: Callable[..., MeasurementBackend]) -> None:
+    """Register a backend class under ``name`` — it becomes selectable
+    everywhere a backend name is accepted (constructor args, CLI flags, the
+    ``REPRO_MEASURE_BACKEND`` env var)."""
+    if name in BACKEND_FACTORIES or name.startswith(SHIFTED_PREFIX):
+        raise ValueError(f"measurement backend {name!r} already registered")
+    BACKEND_FACTORIES[name] = factory
+
+
+def backend_names() -> Tuple[str, ...]:
+    """Every valid backend spelling: registry keys plus the registered
+    ``shifted:<kind>`` forms."""
+    return tuple(sorted(BACKEND_FACTORIES)
+                 + [SHIFTED_PREFIX + k for k in sorted(SHIFT_KINDS)])
+
+
 def resolve_backend_name(explicit: Optional[str] = None) -> str:
     """Backend precedence: explicit argument > env var > analytic.
 
     ``shifted:<kind>`` (e.g. ``shifted:hardware``) names a
     :class:`ShiftedAnalyticBackend` with that registered shift kind, so an
     environment-shifted target is selectable through the same
-    ``REPRO_MEASURE_BACKEND`` plumbing as the real backends."""
+    ``REPRO_MEASURE_BACKEND`` plumbing as the real backends.  Unknown names
+    (including unknown shift kinds) raise ``ValueError`` carrying the full
+    list of valid spellings."""
     name = explicit or os.environ.get(MEASURE_BACKEND_ENV, "") or ANALYTIC
     if name.startswith(SHIFTED_PREFIX):
         kind = name[len(SHIFTED_PREFIX):]
         if kind in SHIFT_KINDS:
             return name
-    if name not in BACKENDS:
-        source = ("argument" if explicit
-                  else f"{MEASURE_BACKEND_ENV} env var")
-        raise ValueError(
-            f"measurement backend {name!r} (from {source}) is not one of "
-            f"{BACKENDS} or shifted:<kind> with kind in "
-            f"{sorted(SHIFT_KINDS)}")
-    return name
+    elif name in BACKEND_FACTORIES:
+        return name
+    source = "argument" if explicit else f"{MEASURE_BACKEND_ENV} env var"
+    raise ValueError(
+        f"unknown measurement backend {name!r} (from {source}); "
+        f"valid: {list(backend_names())}")
 
 
 def make_backend(name: Optional[str], workload: KernelWorkload,
@@ -643,5 +667,4 @@ def make_backend(name: Optional[str], workload: KernelWorkload,
         return ShiftedAnalyticBackend(
             workload, families, seed,
             shifts=resolved[len(SHIFTED_PREFIX):], **kw)
-    cls = AnalyticBackend if resolved == ANALYTIC else WallClockBackend
-    return cls(workload, families, seed, **kw)
+    return BACKEND_FACTORIES[resolved](workload, families, seed, **kw)

@@ -1,0 +1,141 @@
+"""Serving-stack tuning environment: the whole serving configuration —
+scheduler knobs joined with kernel launch geometry — as a CAMEO PerfEnv
+whose environment axis is the request workload.
+
+The configuration space is :func:`repro.workloads.sim.serving_space`:
+``serving.*`` scheduler options (decode slots, admission chunk, cache
+length, interleave policy) plus the ``family.param`` launch options of the
+dispatch registry.  Measurement runs the deterministic continuous-batching
+simulator (:class:`repro.workloads.sim.ServingSimulator`) over ONE fixed
+trace realization per environment instance, so configurations are compared
+under the identical arrival process and the paper's environment change is a
+*workload swap*: two ``ServingEnv`` with different trace specs are a
+source→target transfer pair (see :func:`make_serving_pair` and
+``repro.tuner.bench.run_serving_bench``).
+
+Objectives:
+
+- ``latency`` (default): minimize the p99 request latency (modeled us);
+- ``throughput``: maximize completed requests per modeled second, under the
+  SLO as a constraint — ``query_text`` emits "maximize throughput for which
+  latency is less than <slo_us> ...", exercising the direction-aware
+  infeasibility path end-to-end.
+
+Infeasible configurations (VMEM-overflowing launch blocks, a cache_len the
+trace does not fit in) measure as ``inf`` in the minimize direction and
+``-inf`` in the maximize direction.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Iterable, Optional, Tuple, Union
+
+import numpy as np
+
+from repro.envs import measure as measure_mod
+from repro.envs.base import PooledEnv
+from repro.envs.measure import HardwareSpec, KernelWorkload
+from repro.kernels import dispatch
+from repro.workloads.sim import (SIM_COUNTER_NAMES, ServingPlan,
+                                 ServingSimulator, SimReport, serving_space)
+from repro.workloads.traces import Trace, TraceWorkload, make_workload
+
+OBJECTIVES = ("latency", "throughput")
+
+
+class ServingEnv(PooledEnv):
+    """PerfEnv over the serving stack for one workload trace.
+
+    ``workload`` is a spec string (``make_workload`` grammar), a bound
+    :class:`TraceWorkload`, or an already-generated :class:`Trace`.  ``cell``
+    fixes the served model's kernel dimensions; ``families`` the kernel
+    families it dispatches (default: every modeled registered family).  The
+    trace realization is drawn once at construction from ``trace_seed``
+    (default ``seed``) — every measurement replays the same arrivals.
+    """
+
+    def __init__(self, workload: Union[str, TraceWorkload, Trace] = "poisson",
+                 cell: Optional[KernelWorkload] = None,
+                 families: Optional[Iterable[str]] = None, seed: int = 0,
+                 *, objective: str = "latency", slo_us: float = 2_000.0,
+                 hardware: Optional[HardwareSpec] = None,
+                 trace_seed: Optional[int] = None):
+        if objective not in OBJECTIVES:
+            raise ValueError(f"unknown serving objective {objective!r}; "
+                             f"known: {sorted(OBJECTIVES)}")
+        self.cell = cell or KernelWorkload()
+        if families is None:
+            modeled = measure_mod.modeled_families()
+            families = [f for f in dispatch.families() if f in modeled]
+        self.families = tuple(sorted(families))
+        if isinstance(workload, str):
+            workload = make_workload(workload)
+        if isinstance(workload, Trace):
+            self.trace = workload
+            self.workload_spec = workload.spec
+        else:
+            self.trace = workload.generate(
+                seed if trace_seed is None else trace_seed)
+            self.workload_spec = workload.spec
+        self.objective = objective
+        self.maximize = objective == "throughput"
+        self.slo_us = float(slo_us)
+        self.sim = ServingSimulator(self.cell, self.families,
+                                    hardware=hardware, slo_us=self.slo_us)
+        self._noise_rng = np.random.default_rng(seed + 13)
+        super().__init__(serving_space(self.families), SIM_COUNTER_NAMES,
+                         seed=seed)
+
+    @property
+    def query_text(self) -> str:
+        """The query ``transfer_tune`` should run this environment under
+        (``{budget}`` left for the runner to fill)."""
+        if self.maximize:
+            return (f"maximize throughput for which latency is less than "
+                    f"{self.slo_us:g} within {{budget}} samples")
+        return "minimize latency within {budget} samples"
+
+    def simulate(self, config: Dict[str, Any]) -> SimReport:
+        """The raw (noise-free) simulator report for one configuration."""
+        return self.sim.run(self.trace, ServingPlan.from_config(config),
+                            config)
+
+    def _measure(self, config: Dict[str, Any]
+                 ) -> Tuple[Dict[str, float], float]:
+        report = self.simulate(config)
+        counters = report.counters()
+        if not report.feasible:
+            return counters, float("-inf" if self.maximize else "inf")
+        y = (report.throughput_rps if self.maximize
+             else report.p99_latency_us)
+        y *= 1.0 + self.cell.noise * float(self._noise_rng.standard_normal())
+        return counters, y
+
+    # -- deployment -----------------------------------------------------
+
+    @staticmethod
+    def plan_of(config: Dict[str, Any]) -> ServingPlan:
+        """The scheduler half of a tuned configuration — feed its fields to
+        :class:`repro.serving.scheduler.ContinuousBatcher`."""
+        return ServingPlan.from_config(config)
+
+    def apply(self, config: Dict[str, Any]):
+        """Context manager installing the kernel-launch half on the dispatch
+        registry (the scheduler half deploys via :meth:`plan_of`)."""
+        from repro.tuner.space import launch_config_of
+
+        return dispatch.use_launch_config(launch_config_of(config))
+
+
+def make_serving_pair(source: Union[str, TraceWorkload],
+                      target: Union[str, TraceWorkload],
+                      cell: Optional[KernelWorkload] = None,
+                      families: Optional[Iterable[str]] = None,
+                      seed: int = 0, **kw: Any
+                      ) -> Tuple[ServingEnv, ServingEnv]:
+    """(source, target) serving environments differing ONLY in workload —
+    the paper's workload-fluctuation environment change.  Identical
+    configuration space; independent measurement-noise streams."""
+    src = ServingEnv(source, cell, families, seed=seed + 1, **kw)
+    tgt = ServingEnv(target, cell, src.families, seed=seed + 2, **kw)
+    return src, tgt

@@ -8,6 +8,17 @@ architecture.
 run (analytic source, ``--measure-backend`` target) over the kernel-launch
 space picks block sizes / chunk lengths for this serving shape, and the
 winning configuration is baked into the jitted prefill/decode steps.
+
+``--workload <spec>`` switches to trace-driven continuous batching: a
+seeded request trace (``repro.workloads`` grammar, e.g.
+``bursty:rate=2000``) is replayed through the real ``ContinuousBatcher``.
+With ``--tune-serving N`` the full serving stack — scheduler knobs AND
+kernel launch geometry — is transfer-tuned against that trace in the
+workload simulator first, and the winning plan + launch config drive the
+batcher:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
+        --workload "bursty:rate=2000,horizon=0.03" --tune-serving 10
 """
 
 from __future__ import annotations
@@ -21,10 +32,52 @@ import numpy as np
 
 from repro.configs.registry import get_smoke_config, get_model_config, list_archs
 from repro.data.pipeline import make_data
-from repro.launch.tune import measure_backend_arg, tune_launch_config
+from repro.launch.tune import (measure_backend_arg, tune_launch_config,
+                               tune_serving_config)
 from repro.models.model import build_model
 from repro.train.serve_step import jitted_steps, sample_token
 from repro.utils.config import MeshConfig, RunConfig, ShapeConfig
+
+
+def serve_workload(model, run, params, workload_spec: str, *,
+                   tune_budget: int = 0, seed: int = 0,
+                   ticks_per_s=None, method: str = "cameo"):
+    """Trace-driven serving: generate the trace, optionally transfer-tune
+    the serving stack against it in the simulator, then replay it through
+    the real ``ContinuousBatcher`` under the tuned plan.  Returns
+    ``(plan, launch_config, replay_report)`` so callers (and tests) can
+    audit exactly what was deployed."""
+    from repro.envs.serving_env import ServingEnv
+    from repro.serving.replay import replay_trace
+    from repro.serving.scheduler import ContinuousBatcher
+    from repro.workloads import ServingPlan, make_workload
+
+    workload = make_workload(workload_spec)
+    trace = workload.generate(seed)
+    print(f"[serve] workload {workload.spec}: {len(trace)} requests, "
+          f"max context {trace.max_context}, "
+          f"~{trace.mean_rate():.0f} req/s modeled")
+
+    launch_config = None
+    plan = ServingPlan()
+    if tune_budget > 0:
+        result = tune_serving_config(model.cfg, workload_spec, tune_budget,
+                                     method=method, seed=seed)
+        plan = ServingPlan.from_config(result.best_config or {})
+        launch_config = result.launch_config
+    batcher = ContinuousBatcher(model, run, params,
+                                num_slots=plan.num_slots,
+                                cache_len=plan.cache_len,
+                                launch_config=launch_config)
+    report = replay_trace(batcher, trace, admit_chunk=plan.admit_chunk,
+                          ticks_per_s=ticks_per_s, seed=seed)
+    print(f"[serve] replay: {report.completed} completed "
+          f"({report.rejected} rejected), {report.ticks} ticks, "
+          f"{report.tokens} tokens in {report.wall_s:.2f}s wall, "
+          f"occupancy {report.mean_occupancy:.2f}, "
+          f"latency p50={report.p50_latency_ms:.1f} ms "
+          f"p99={report.p99_latency_ms:.1f} ms")
+    return plan, launch_config, report
 
 
 def main() -> int:
@@ -43,6 +96,14 @@ def main() -> int:
                     help="target measurement backend for --tune-launch: "
                          "analytic, wallclock, or shifted:<kind> "
                          "(default: REPRO_MEASURE_BACKEND, then analytic)")
+    ap.add_argument("--workload", default=None, metavar="SPEC",
+                    help="request-trace spec (repro.workloads grammar, e.g. "
+                         "'bursty:rate=2000'): replay it through the real "
+                         "continuous batcher instead of a fixed batch")
+    ap.add_argument("--tune-serving", type=int, default=0, metavar="BUDGET",
+                    help="with --workload: intervention budget for a "
+                         "serving-stack tuning run in the workload simulator "
+                         "(0 = serve with the default plan)")
     args = ap.parse_args()
 
     cfg = (get_model_config(args.arch) if args.full_config
@@ -56,6 +117,11 @@ def main() -> int:
     params = model.init(jax.random.PRNGKey(0))
     print(f"[serve] {cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
           f"batch={args.batch}")
+
+    if args.workload:
+        serve_workload(model, run, params, args.workload,
+                       tune_budget=args.tune_serving)
+        return 0
 
     data = make_data(cfg, run.shape, seed=0)
     raw = data.batch_at(0)

@@ -59,6 +59,35 @@ def tune_launch_config(cfg, batch: int, seq_len: int, budget: int,
     return result.launch_config
 
 
+def tune_serving_config(cfg, workload: str, budget: int, *,
+                        source_workload: Optional[str] = None,
+                        n_source: int = 48, n_target_init: int = 3,
+                        method: str = "cameo", seed: int = 0):
+    """Transfer-tune the full serving stack (scheduler knobs + kernel launch
+    geometry) for one workload trace: cheap ``source_workload`` trace
+    (default: the benchmark's canonical calm-Poisson source) as the
+    observational source, the requested ``workload`` as the target.  Returns
+    the :class:`TuneResult`; deploy with ``ServingEnv.plan_of(best_config)``
+    + ``TuneResult.launch_config``."""
+    from repro.envs.serving_env import make_serving_pair
+    from repro.tuner.bench import DEFAULT_SOURCE_TRACE
+    from repro.tuner.runner import transfer_tune
+    from repro.tuner.space import launch_families_for
+
+    source_workload = source_workload or DEFAULT_SOURCE_TRACE
+
+    cell = launch_workload_for(cfg, batch=1, seq_len=512, kind="serve")
+    src, tgt = make_serving_pair(source_workload, workload, cell,
+                                 families=launch_families_for(cfg),
+                                 seed=seed)
+    result = transfer_tune(method, src, tgt, budget=budget,
+                           n_source=n_source, n_target_init=n_target_init,
+                           query_text=tgt.query_text, seed=seed)
+    print(f"[serve] tuned serving config ({result.method}, budget={budget}, "
+          f"p99={result.best_y:.0f} us modeled): {result.best_config}")
+    return result
+
+
 def measure_backend_arg(name: str) -> str:
     """argparse ``type=`` validator for ``--measure-backend``: any name
     ``resolve_backend_name`` accepts (analytic, wallclock, shifted:<kind>)."""

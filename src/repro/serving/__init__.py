@@ -1,2 +1,4 @@
 from repro.serving.scheduler import (  # noqa: F401
-    ContinuousBatcher, Request, RequestState)
+    ContinuousBatcher, DrainStall, Request, RequestState)
+from repro.serving.replay import (  # noqa: F401
+    ReplayReport, replay_trace, trace_requests)

@@ -1,0 +1,121 @@
+"""Drive the real :class:`ContinuousBatcher` from a generated request trace.
+
+This is the deployment end of the serving-workload loop: the simulator
+(:mod:`repro.workloads.sim`) tunes the serving stack against a trace, and
+this module replays the same trace through the actual jitted prefill/decode
+steps under the tuned plan.  Trace arrival times (seconds of modeled time)
+map onto batcher ticks through ``ticks_per_s``; by default the span of the
+trace maps to roughly the number of decode ticks its tokens need, so the
+offered load is preserved.
+
+The admission chunk is honored here — at most ``admit_chunk`` requests are
+released into the batcher's queue per tick — because the batcher itself
+admits greedily into every free slot.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from time import perf_counter
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.serving.scheduler import ContinuousBatcher, DrainStall, Request
+from repro.workloads.traces import Trace
+
+
+@dataclass(frozen=True)
+class ReplayReport:
+    """Wall-clock statistics from one real-batcher trace replay."""
+
+    completed: int
+    rejected: int                  # did not fit prompt+output in the cache
+    ticks: int
+    wall_s: float
+    tokens: int
+    mean_occupancy: float
+    p50_latency_ms: float          # submit -> finish, wall clock
+    p99_latency_ms: float
+
+
+def default_ticks_per_s(trace: Trace, num_slots: int) -> float:
+    """Map the trace span onto roughly the decode ticks its tokens need, so
+    the replayed arrival process keeps the trace's load shape."""
+    est_ticks = max(trace.total_output_tokens / max(num_slots, 1), 1.0)
+    span = max(trace.span_s, 1e-9)
+    return est_ticks / span
+
+
+def trace_requests(trace: Trace, vocab_size: int, cache_len: int,
+                   seed: Optional[int] = None) -> List[Request]:
+    """Materialize the trace as batcher ``Request``s with seeded random
+    token prompts.  Requests that cannot fit (prompt + output > cache_len)
+    are dropped here — the simulator calls such a plan infeasible; the
+    replay counts them as rejected."""
+    rng = np.random.default_rng(trace.seed if seed is None else seed)
+    out: List[Request] = []
+    for r in trace.requests:
+        if r.prompt_len + r.output_len > cache_len:
+            continue
+        prompt = rng.integers(0, vocab_size, size=r.prompt_len,
+                              dtype=np.int32)
+        out.append(Request(uid=r.uid, prompt=prompt,
+                           max_new_tokens=r.output_len))
+    return out
+
+
+def replay_trace(batcher: ContinuousBatcher, trace: Trace, *,
+                 admit_chunk: int = 4, ticks_per_s: Optional[float] = None,
+                 seed: Optional[int] = None,
+                 max_ticks: int = 100_000) -> ReplayReport:
+    """Feed ``trace`` through ``batcher`` tick by tick and drain it.
+
+    Deterministic given (batcher state, trace, seed): arrivals release in
+    trace order at their mapped tick, at most ``admit_chunk`` per tick.
+    Raises :class:`DrainStall` if the trace does not finish in ``max_ticks``.
+    """
+    if ticks_per_s is None:
+        ticks_per_s = default_ticks_per_s(trace, batcher.num_slots)
+    requests = trace_requests(trace, batcher.model.cfg.vocab_size,
+                              batcher.cache_len, seed=seed)
+    rejected = len(trace.requests) - len(requests)
+    fitting = {r.uid for r in requests}
+    arrival_tick = {r.uid: int(r.arrival_s * ticks_per_s)
+                    for r in trace.requests if r.uid in fitting}
+
+    t0 = perf_counter()
+    submit_wall: Dict[int, float] = {}
+    i, tick, start_ticks = 0, 0, batcher.ticks
+    while i < len(requests) or batcher.queue or any(
+            s is not None for s in batcher._slots):
+        released = 0
+        while (i < len(requests) and released < admit_chunk
+               and arrival_tick[requests[i].uid] <= tick):
+            submit_wall[requests[i].uid] = perf_counter()
+            batcher.submit(requests[i])
+            i += 1
+            released += 1
+        stepped = batcher.tick()
+        tick += 1
+        if stepped == 0 and not batcher.queue and i < len(requests):
+            # idle: jump to the next arrival instead of spinning
+            tick = max(tick, arrival_tick[requests[i].uid])
+        if tick > max_ticks:
+            pending = (len(requests) - i + len(batcher.queue)
+                       + sum(s is not None for s in batcher._slots))
+            raise DrainStall(
+                f"trace replay not drained after {max_ticks} ticks "
+                f"({len(batcher.completed)} completed, {pending} pending)",
+                completed=len(batcher.completed), pending=pending)
+
+    lat_ms = np.asarray(
+        [(rs.finished_at - submit_wall[rs.request.uid]) * 1e3
+         for rs in batcher.completed if rs.request.uid in submit_wall])
+    tokens = sum(len(rs.generated) for rs in batcher.completed)
+    return ReplayReport(
+        completed=len(batcher.completed), rejected=rejected,
+        ticks=batcher.ticks - start_ticks, wall_s=perf_counter() - t0,
+        tokens=tokens, mean_occupancy=batcher.mean_occupancy,
+        p50_latency_ms=float(np.percentile(lat_ms, 50)) if len(lat_ms) else 0.0,
+        p99_latency_ms=float(np.percentile(lat_ms, 99)) if len(lat_ms) else 0.0)

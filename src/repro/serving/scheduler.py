@@ -24,6 +24,7 @@ batch-row update — O(cache_row) per admission, no recompile.
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -34,6 +35,17 @@ import numpy as np
 from repro.models.model import Model
 from repro.train.serve_step import ServeState, jitted_steps, sample_token
 from repro.utils.config import RunConfig
+
+
+class DrainStall(RuntimeError):
+    """A drain loop (real scheduler or the workload simulator) hit its tick
+    budget with requests still queued or resident — a stall, not a completed
+    run.  Carries the progress made so callers can report it."""
+
+    def __init__(self, msg: str, *, completed: int, pending: int):
+        super().__init__(msg)
+        self.completed = completed
+        self.pending = pending
 
 
 @dataclass
@@ -108,6 +120,7 @@ class ContinuousBatcher:
         self.queue: List[Request] = []
         self.completed: List[RequestState] = []
         self.ticks = 0
+        self.stalled = False
         self._occupancy_sum = 0
 
     # -- admission ----------------------------------------------------------
@@ -174,8 +187,30 @@ class ContinuousBatcher:
             self._maybe_finish(rs, tok)
         return len(live)
 
-    def run_until_drained(self, max_ticks: int = 10_000) -> List[RequestState]:
-        while (self.queue or any(self._slots)) and self.ticks < max_ticks:
+    def run_until_drained(self, max_ticks: int = 10_000,
+                          on_limit: str = "raise") -> List[RequestState]:
+        """Tick until every submitted request finishes or ``max_ticks`` ticks
+        (counted from this call) elapse.  Hitting the limit with work still
+        pending is a stall, never silently partial results: ``on_limit`` is
+        ``"raise"`` (:class:`DrainStall`, the default) or ``"warn"`` (emit a
+        ``RuntimeWarning``, set :attr:`stalled`, return what completed)."""
+        if on_limit not in ("raise", "warn"):
+            raise ValueError(f"on_limit must be 'raise' or 'warn', "
+                             f"got {on_limit!r}")
+        self.stalled = False
+        start = self.ticks
+        while self.queue or any(s is not None for s in self._slots):
+            if self.ticks - start >= max_ticks:
+                pending = len(self.queue) + sum(
+                    s is not None for s in self._slots)
+                msg = (f"batcher not drained after {max_ticks} ticks: "
+                       f"{len(self.completed)} completed, {pending} pending")
+                if on_limit == "raise":
+                    raise DrainStall(msg, completed=len(self.completed),
+                                     pending=pending)
+                warnings.warn(msg, RuntimeWarning, stacklevel=2)
+                self.stalled = True
+                break
             if self.tick() == 0 and not self.queue:
                 break
         return self.completed

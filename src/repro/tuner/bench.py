@@ -1,19 +1,29 @@
-"""Environment-shift transfer benchmark over the kernel-launch space.
+"""Environment-shift transfer benchmarks: kernel-launch space under
+``shifted:<kind>`` backends, and the serving stack under workload swaps.
 
 The paper's central claim is that causal transfer survives *environmental
 changes*.  This module measures exactly that on CPU-reproducible
-environments: the source is the unshifted analytic launch-geometry model,
-the target is a :class:`~repro.envs.measure.ShiftedAnalyticBackend` a fixed
-distance away (scaled hardware constants, workload-shape changes,
-heteroscedastic noise, tightened VMEM feasibility).  For every
-(workload cell x shift kind x method) tuple the sweep runs
-``transfer_tune`` under a fixed intervention budget and records the best-y
-and regret-vs-round trajectories against a pooled ground-truth optimum of
-the shifted target.
+environments, along two axes:
 
-``benchmarks/transfer_bench.py`` is the CLI wrapper that writes
-``BENCH_transfer.json``; the ``gate`` block is what CI asserts on (CAMEO's
-mean final regret must not exceed random search on the shifted cells).
+- **Kernel-launch sweep** (:func:`run_transfer_bench`): the source is the
+  unshifted analytic launch-geometry model, the target is a
+  :class:`~repro.envs.measure.ShiftedAnalyticBackend` a fixed distance away
+  (scaled hardware constants, workload-shape changes, heteroscedastic
+  noise, tightened VMEM feasibility).
+- **Serving sweep** (:func:`run_serving_bench`): the tuned surface is the
+  whole serving stack (scheduler knobs + launch geometry,
+  :class:`~repro.envs.serving_env.ServingEnv`) and the environment change
+  is a *workload-trace swap* — source trace → target trace, the paper's
+  workload-fluctuation axis (``repro.workloads`` registry kinds).
+
+For every cell x change x method tuple the sweep runs ``transfer_tune``
+under a fixed intervention budget and records best-y and regret-vs-round
+trajectories against a pooled ground-truth optimum of the target.
+
+``benchmarks/transfer_bench.py`` / ``benchmarks/serving_bench.py`` are the
+CLI wrappers writing ``BENCH_transfer.json`` / ``BENCH_serving.json``; the
+``gate`` block is what CI asserts on (CAMEO's mean final regret must not
+exceed random search).
 """
 
 from __future__ import annotations
@@ -169,6 +179,170 @@ def run_transfer_bench(
             "pool": int(pool),
             "cells": [c.name for c in cells],
             "shifts": list(shifts),
+            "methods": list(methods),
+            "wall_s": None,  # filled below
+        },
+        "cells": out_cells,
+    }
+    doc["gate"] = gate_summary(doc)
+    doc["meta"]["wall_s"] = round(time.time() - t_start, 2)
+    return doc
+
+
+# --------------------------------------------------------------------------
+# serving sweep: source trace -> target trace
+# --------------------------------------------------------------------------
+
+#: the default cheap observational source — a calm memoryless arrival
+#: process staging can always produce
+DEFAULT_SOURCE_TRACE = "poisson:rate=2500"
+
+#: target workload swaps the smoke sweep exercises: a burst regime, a
+#: heavy-tailed length mixture (loaded enough that its y_opt is not tiny —
+#: tiny optima amplify relative regret into gate noise), and a diurnal
+#: rate cycle
+DEFAULT_TARGET_TRACES: Tuple[str, ...] = (
+    "bursty:rate=2500,burst=6",
+    "heavy_tail:rate=2600",
+    "diurnal:rate=2500",
+)
+
+
+@dataclass(frozen=True)
+class ServingCell:
+    """One served-model cell of the serving sweep: kernel dimensions plus
+    the families the model dispatches and the source arrival process."""
+
+    name: str
+    cell: KernelWorkload
+    families: Tuple[str, ...] = ("flash_attention", "rmsnorm")
+    source: str = DEFAULT_SOURCE_TRACE
+
+
+DEFAULT_SERVING_CELLS: Tuple[ServingCell, ...] = (
+    ServingCell("serve-8b", KernelWorkload()),
+)
+
+
+def serving_cell_by_name(name: str,
+                         cells: Sequence[ServingCell] = DEFAULT_SERVING_CELLS
+                         ) -> ServingCell:
+    for c in cells:
+        if c.name == name:
+            return c
+    raise ValueError(f"unknown serving cell {name!r}; "
+                     f"known: {[c.name for c in cells]}")
+
+
+#: the trace realization every (cell, target) sweep point shares.  Unlike
+#: the shifted kernel backends (where the seed only drives noise), a
+#: ServingEnv's seed would otherwise pick the trace itself — and y_opt,
+#: y_default, and every method run must score against the SAME arrival
+#: process or regret compares different environments.
+BENCH_TRACE_SEED = 0
+
+
+def make_serving_bench_pair(cell: ServingCell, target: str, seed: int = 0):
+    """(source, target) ServingEnv pair for one cell and one target trace.
+    ``seed`` varies only the measurement-noise streams; the trace
+    realization is pinned to ``BENCH_TRACE_SEED``."""
+    from repro.envs.serving_env import make_serving_pair
+
+    return make_serving_pair(cell.source, target, cell.cell,
+                             families=cell.families, seed=seed,
+                             trace_seed=BENCH_TRACE_SEED)
+
+
+def serving_target_optimum(cell: ServingCell, target: str, pool: int = 256,
+                           seed: int = 99
+                           ) -> Tuple[float, Optional[float]]:
+    """(Y_opt, y_default) of the target serving environment: best measured
+    value over a random pool plus the default configuration's measurement —
+    the deploy-nothing baseline the tuned config must beat."""
+    _, tgt = make_serving_bench_pair(cell, target, seed=seed)
+    rng = np.random.default_rng(seed)
+    _, y_default = tgt.intervene(tgt.space.default_config())
+    best = y_default if np.isfinite(y_default) else np.inf
+    for cfg in tgt.space.sample(rng, pool):
+        _, y = tgt.intervene(cfg)
+        if np.isfinite(y) and y < best:
+            best = float(y)
+    if not np.isfinite(best):
+        raise RuntimeError(
+            f"no feasible configuration in a {pool}-sample pool for "
+            f"cell={cell.name} target={target}")
+    return best, (float(y_default) if np.isfinite(y_default) else None)
+
+
+def run_serving_bench(
+    *,
+    cells: Sequence[ServingCell] = DEFAULT_SERVING_CELLS,
+    targets: Sequence[str] = DEFAULT_TARGET_TRACES,
+    methods: Sequence[str] = DEFAULT_METHODS,
+    budget: int = 12,
+    n_source: int = 48,
+    n_target_init: int = 3,
+    seeds: Sequence[int] = (0, 1),
+    pool: int = 256,
+) -> Dict[str, Any]:
+    """The serving-stack sweep (cell x target trace x method); returns the
+    ``BENCH_serving.json`` document.  Shape mirrors the kernel-launch sweep
+    with ``source``/``target`` trace specs instead of a shift kind, plus a
+    per-cell ``y_default`` so 'tuned beats the default plan' is auditable."""
+    t_start = time.time()
+    out_cells: List[Dict[str, Any]] = []
+    for cell in cells:
+        for target in targets:
+            y_opt, y_default = serving_target_optimum(cell, target,
+                                                      pool=pool)
+            per_method: Dict[str, Any] = {}
+            for method in methods:
+                runs = []
+                for seed in seeds:
+                    src, tgt = make_serving_bench_pair(cell, target,
+                                                       seed=seed)
+                    res = transfer_tune(method, src, tgt, budget=budget,
+                                        n_source=n_source,
+                                        n_target_init=n_target_init,
+                                        query_text=tgt.query_text,
+                                        seed=seed)
+                    trace = [float(y) for y in res.trace_best_y]
+                    runs.append({
+                        "seed": int(seed),
+                        "best_y": (float(res.best_y)
+                                   if np.isfinite(res.best_y) else None),
+                        "best_config": res.best_config,
+                        "final_regret": _final_regret(trace, y_opt),
+                        "regret": [_regret(y, y_opt) for y in trace],
+                        "best_y_trace": [
+                            float(y) if np.isfinite(y) else None
+                            for y in trace],
+                        "wall_s": float(res.wall_s),
+                        "n_target_init": res.extras.get("n_target_init"),
+                    })
+                per_method[method] = {
+                    "runs": runs,
+                    "mean_final_regret": float(np.mean(
+                        [r["final_regret"] for r in runs])),
+                }
+            out_cells.append({
+                "cell": cell.name,
+                "source": cell.source,
+                "target": target,
+                "y_opt": y_opt,
+                "y_default": y_default,
+                "methods": per_method,
+            })
+    doc = {
+        "meta": {
+            "budget": int(budget),
+            "n_source": int(n_source),
+            "n_target_init": int(n_target_init),
+            "seeds": [int(s) for s in seeds],
+            "pool": int(pool),
+            "cells": [c.name for c in cells],
+            "sources": [c.source for c in cells],
+            "targets": list(targets),
             "methods": list(methods),
             "wall_s": None,  # filled below
         },

@@ -1,0 +1,15 @@
+"""Serving-workload scenarios: seeded request-trace generators + the
+deterministic continuous-batching simulator they drive.
+
+``make_workload("bursty:rate=2000")`` mirrors ``measure.make_backend`` —
+trace kinds register in ``WORKLOAD_KINDS`` and are selectable by spec
+string anywhere a workload is accepted (``ServingEnv``, the serving
+benchmark, ``repro.launch.serve --workload``).
+"""
+
+from repro.workloads.sim import (  # noqa: F401
+    SCHEDULER_OPTIONS, SERVING_PREFIX, SIM_COUNTER_NAMES, DrainStall,
+    ServingPlan, ServingSimulator, SimReport, serving_space)
+from repro.workloads.traces import (  # noqa: F401
+    WORKLOAD_KINDS, RequestSpec, Trace, TraceWorkload, Workload,
+    make_workload, register_workload, workload_kinds)

@@ -1,0 +1,280 @@
+"""ServingEnv: the serving stack as a CAMEO environment under workload
+swaps — space composition, objective directions, transfer end-to-end
+(tuned beats default on the target trace), the serving benchmark document +
+gate, and the deployment path: a spy-verified tuned serving config reaching
+both the simulator and the real ContinuousBatcher via the serve launcher."""
+
+import numpy as np
+import pytest
+
+from repro.envs.measure import KernelWorkload, backend_names, make_backend
+from repro.envs.serving_env import ServingEnv, make_serving_pair
+from repro.tuner.bench import (
+    DEFAULT_TARGET_TRACES, ServingCell, make_serving_bench_pair,
+    run_serving_bench, serving_cell_by_name, serving_target_optimum)
+from repro.tuner.runner import transfer_tune
+from repro.workloads import ServingPlan, make_workload
+
+TINY_CELL = KernelWorkload(name="tiny", batch=1, seq_len=128, heads=2,
+                           kv_heads=1, head_dim=16, d_model=64, channels=64,
+                           scan_state=4, ssm_heads=2, ssm_head_dim=16,
+                           ssm_state=8)
+FAMS = ("flash_attention", "rmsnorm")
+SRC = "poisson:rate=2500,horizon=0.02,mean_prompt=32,mean_output=16,max_len=96"
+TGT = ("bursty:rate=2500,burst=6,horizon=0.02,mean_prompt=32,"
+       "mean_output=16,max_len=96")
+
+
+def _env(workload=SRC, **kw):
+    kw.setdefault("cell", TINY_CELL)
+    kw.setdefault("families", FAMS)
+    return ServingEnv(workload, **kw)
+
+
+# --------------------------------------------------------------------------
+# environment basics
+# --------------------------------------------------------------------------
+
+def test_space_and_counters():
+    env = _env()
+    assert {"serving.num_slots", "serving.cache_len",
+            "flash_attention.q_block"} <= set(env.space.names)
+    counters, y = env.intervene(env.space.default_config())
+    assert np.isfinite(y) and y > 0
+    assert set(env.counter_names) <= set(counters)
+    # objective-metric copies stay OUT of the causal-discovery counters
+    # (an objective clone in the graph collapses the ACE ranking) but IN
+    # the metrics dict, where query constraints bind on them
+    assert {"latency", "throughput"} <= set(counters)
+    assert not {"latency", "throughput"} & set(env.counter_names)
+    assert env.query_text == "minimize latency within {budget} samples"
+
+
+def test_env_accepts_spec_workload_or_trace():
+    w = make_workload(SRC)
+    tr = w.generate(0)
+    assert _env(SRC, seed=0).trace == _env(w, seed=0).trace == \
+        _env(tr, seed=0).trace
+    # trace_seed pins the realization independently of the noise seed
+    assert _env(SRC, seed=1, trace_seed=0).trace == _env(SRC, seed=0).trace
+
+
+def test_env_deterministic_per_seed():
+    cfgs = _env().space.sample(np.random.default_rng(0), 6)
+    ys1 = [_env(seed=3).intervene(c)[1] for c in cfgs]
+    ys2 = [_env(seed=3).intervene(c)[1] for c in cfgs]
+    assert ys1 == ys2
+
+
+LONG = ("poisson:rate=2000,horizon=0.02,mean_prompt=180,mean_output=40,"
+        "max_len=384")
+
+
+def test_infeasible_direction_aware():
+    bad = {"serving.cache_len": 128}   # trace max_context exceeds it
+    env = _env(LONG)
+    big = dict(env.space.default_config(), **bad)
+    assert env.trace.max_context > 128
+    _, y = env.intervene(big)
+    assert y == float("inf")
+    envT = _env(LONG, objective="throughput")
+    _, yT = envT.intervene(big)
+    assert yT == float("-inf")
+    assert "maximize throughput" in envT.query_text
+    with pytest.raises(ValueError, match="unknown serving objective"):
+        _env(objective="energy")
+
+
+def test_workload_swap_changes_measurement_not_space():
+    src, tgt = make_serving_pair(SRC, TGT, TINY_CELL, families=FAMS, seed=0)
+    assert src.space.names == tgt.space.names
+    assert src.workload_spec != tgt.workload_spec
+    cfg = src.space.default_config()
+    assert src.simulate(cfg) != tgt.simulate(cfg)
+
+
+def test_plan_of_and_apply_split_the_config():
+    from repro.kernels import dispatch
+    from repro.tuner.space import launch_config_of
+
+    env = _env()
+    cfg = dict(env.space.default_config())
+    cfg.update({"serving.num_slots": 16, "flash_attention.q_block": 128})
+    assert ServingEnv.plan_of(cfg).num_slots == 16
+    launch = launch_config_of(cfg)
+    assert "serving.num_slots" not in launch
+    assert launch["flash_attention.q_block"] == 128
+    with env.apply(cfg):
+        assert dispatch.launch_params("flash_attention")["q_block"] == 128
+
+
+# --------------------------------------------------------------------------
+# transfer end-to-end: poisson source -> bursty target
+# --------------------------------------------------------------------------
+
+def test_transfer_tune_beats_default_on_target():
+    src, tgt = make_serving_pair(SRC, TGT, TINY_CELL, families=FAMS, seed=0)
+    default = tgt.space.default_config()
+    y_default = tgt.simulate(default).p99_latency_us
+    res = transfer_tune("cameo", src, tgt, budget=10, n_source=48,
+                        n_target_init=3, query_text=tgt.query_text, seed=0)
+    assert res.best_config is not None and np.isfinite(res.best_y)
+    tuned = tgt.simulate(res.best_config)
+    assert tuned.feasible
+    assert tuned.p99_latency_us < y_default
+    # the launch half of the winner is deployable as-is
+    assert all(not k.startswith("serving.") for k in res.launch_config)
+
+
+def test_throughput_objective_under_slo_constraint():
+    src, tgt = make_serving_pair(SRC, TGT, TINY_CELL, families=FAMS,
+                                 objective="throughput", slo_us=5e4, seed=0)
+    res = transfer_tune("cameo", src, tgt, budget=6, n_source=32,
+                        n_target_init=3, query_text=tgt.query_text, seed=0)
+    assert np.isfinite(res.best_y) and res.best_y > 0
+    rep = tgt.simulate(res.best_config)
+    assert rep.p99_latency_us < 5e4  # the winner satisfies the SLO
+
+
+# --------------------------------------------------------------------------
+# serving benchmark sweep
+# --------------------------------------------------------------------------
+
+TINY_SERVING_CELL = ServingCell("tiny", TINY_CELL, families=FAMS, source=SRC)
+
+
+def test_serving_bench_document_shape_and_gate():
+    import json
+
+    doc = run_serving_bench(cells=(TINY_SERVING_CELL,), targets=(TGT,),
+                            methods=("cameo", "random"), budget=4,
+                            n_source=24, n_target_init=2, seeds=(0,),
+                            pool=32)
+    json.dumps(doc)  # JSON-clean
+    assert doc["meta"]["targets"] == [TGT]
+    (cell,) = doc["cells"]
+    assert cell["source"] == SRC and cell["target"] == TGT
+    assert cell["y_opt"] > 0
+    assert cell["y_default"] is None or cell["y_default"] >= cell["y_opt"]
+    for stats in cell["methods"].values():
+        (run,) = stats["runs"]
+        assert len(run["regret"]) == len(run["best_y_trace"]) == 4
+        tail = [r for r in run["regret"] if r is not None]
+        assert all(r >= 0 for r in tail)
+        assert all(a >= b - 1e-12 for a, b in zip(tail, tail[1:]))
+    assert doc["gate"]["checked"]
+
+
+def test_serving_target_optimum_finite_and_below_default():
+    y_opt, y_default = serving_target_optimum(TINY_SERVING_CELL, TGT,
+                                              pool=32)
+    assert np.isfinite(y_opt) and y_opt > 0
+    assert y_default is None or y_opt <= y_default
+
+
+def test_serving_cell_lookup():
+    assert serving_cell_by_name("serve-8b").cell == KernelWorkload()
+    with pytest.raises(ValueError, match="unknown serving cell"):
+        serving_cell_by_name("nope")
+    assert len(DEFAULT_TARGET_TRACES) >= 3
+    src, tgt = make_serving_bench_pair(TINY_SERVING_CELL, TGT, seed=0)
+    assert src.space.names == tgt.space.names
+
+
+# --------------------------------------------------------------------------
+# make_backend registry errors (and the workload registry mirror)
+# --------------------------------------------------------------------------
+
+def test_make_backend_unknown_names_list_registry_keys():
+    with pytest.raises(ValueError) as e:
+        make_backend("bogus", TINY_CELL, FAMS)
+    msg = str(e.value)
+    for name in ("analytic", "wallclock", "shifted:hardware",
+                 "shifted:severe"):
+        assert name in msg
+    with pytest.raises(ValueError) as e2:
+        make_backend("shifted:bogus", TINY_CELL, FAMS)
+    assert "shifted:noise" in str(e2.value)
+    assert set(backend_names()) >= {"analytic", "wallclock",
+                                    "shifted:hardware"}
+
+
+def test_register_backend_extends_selection():
+    from repro.envs import measure
+
+    class NullBackend(measure.AnalyticBackend):
+        pass
+
+    measure.register_backend("null-test", NullBackend)
+    try:
+        assert isinstance(make_backend("null-test", TINY_CELL, FAMS),
+                          NullBackend)
+        assert "null-test" in backend_names()
+        with pytest.raises(ValueError, match="already registered"):
+            measure.register_backend("null-test", NullBackend)
+        with pytest.raises(ValueError, match="already registered"):
+            measure.register_backend("shifted:custom", NullBackend)
+    finally:
+        del measure.BACKEND_FACTORIES["null-test"]
+
+
+# --------------------------------------------------------------------------
+# deployment: tuned serving config reaches simulator AND real batcher
+# --------------------------------------------------------------------------
+
+def test_tuned_config_reaches_sim_and_real_batcher():
+    import jax
+    from conftest import tiny_model_config
+    from repro.kernels import dispatch
+    from repro.launch.serve import serve_workload
+    from repro.launch import tune as tune_mod
+    from repro.models.model import build_model
+    from repro.utils.config import RunConfig, ShapeConfig
+
+    cfg = tiny_model_config()
+    run = RunConfig(model=cfg, shape=ShapeConfig("s", 64, 4, "decode"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    spec = ("poisson:rate=2000,horizon=0.005,mean_prompt=5,"
+            "mean_output=3,max_len=12")
+    captured = {}
+    real_tune = tune_mod.tune_serving_config
+
+    def spy_tune(*a, **kw):
+        res = real_tune(*a, **kw)
+        captured["result"] = res
+        return res
+
+    tune_mod.tune_serving_config = spy_tune
+    # serve_workload resolved tune_serving_config at import time
+    import repro.launch.serve as serve_mod
+    serve_mod.tune_serving_config = spy_tune
+    try:
+        with dispatch.record_resolutions() as rec:
+            plan, launch_config, report = serve_workload(
+                model, run, params, spec, tune_budget=2, seed=0)
+    finally:
+        tune_mod.tune_serving_config = real_tune
+        serve_mod.tune_serving_config = real_tune
+
+    res = captured["result"]
+    # 1) the tuned plan is the one the batcher ran under
+    assert plan == ServingPlan.from_config(res.best_config)
+    assert launch_config == res.launch_config and launch_config
+    # 2) the simulator side priced exactly these launch params
+    src, tgt = make_serving_pair("poisson", spec, cell=TINY_CELL,
+                                 families=FAMS, seed=0)
+    resolved = tgt.sim.resolved_launch(res.best_config)
+    for key, val in launch_config.items():
+        fam, pname = key.split(".")
+        if fam in resolved:
+            assert resolved[fam][pname] == val
+    # 3) the real batcher's traced kernels saw the tuned launch params
+    attn = [r.launch for r in rec if r.family == "flash_attention"]
+    assert attn, "no flash_attention dispatch recorded in the replay"
+    for launch in attn:
+        assert launch["q_block"] == launch_config["flash_attention.q_block"]
+        assert launch["kv_block"] == \
+            launch_config["flash_attention.kv_block"]
+    assert report.completed > 0 and report.rejected == 0

@@ -1,5 +1,6 @@
 """Continuous-batching scheduler: correctness vs the single-request
-generate() path, slot reuse, EOS/max-token stopping, occupancy."""
+generate() path, slot reuse, EOS/max-token stopping, occupancy, admission
+edge cases, and drain-stall detection."""
 
 import jax
 import jax.numpy as jnp
@@ -8,7 +9,7 @@ import pytest
 
 from conftest import tiny_model_config
 from repro.models.model import build_model
-from repro.serving.scheduler import ContinuousBatcher, Request
+from repro.serving.scheduler import ContinuousBatcher, DrainStall, Request
 from repro.train.serve_step import generate
 from repro.utils.config import RunConfig, ShapeConfig
 
@@ -77,3 +78,77 @@ def test_occupancy_tracked(served):
     b.run_until_drained()
     assert 1.0 <= b.mean_occupancy <= 2.0
     assert len(b.completed) == 4
+
+
+# --------------------------------------------------------------------------
+# admission edge cases
+# --------------------------------------------------------------------------
+
+def test_submit_while_full_queues_until_slot_frees(served):
+    cfg, run, model, params = served
+    b = ContinuousBatcher(model, run, params, num_slots=1, cache_len=32)
+    b.submit(Request(uid=0, prompt=np.asarray([1, 2]), max_new_tokens=4))
+    b.tick()  # admits uid 0; the only slot is now busy
+    b.submit(Request(uid=1, prompt=np.asarray([3, 4]), max_new_tokens=2))
+    b.tick()
+    # uid 1 stays queued while uid 0 holds the slot
+    assert [r.uid for r in b.queue] == [1]
+    assert b._slots[0] is not None and b._slots[0].request.uid == 0
+    done = b.run_until_drained()
+    assert {d.request.uid for d in done} == {0, 1}
+    assert not b.queue
+
+
+def test_zero_free_slots_after_maybe_finish(served):
+    # both requests finish on the same tick: _maybe_finish frees both slots
+    # and the next tick admits from the queue into the freed slots
+    cfg, run, model, params = served
+    b = ContinuousBatcher(model, run, params, num_slots=2, cache_len=32)
+    for i in range(2):
+        b.submit(Request(uid=i, prompt=np.asarray([1, 2]),
+                         max_new_tokens=3))
+    b.submit(Request(uid=2, prompt=np.asarray([5, 6]), max_new_tokens=3))
+    b.tick()   # admit 0, 1 (token 1 from prefill, token 2 decoded)
+    assert b._free_slots() == [] and [r.uid for r in b.queue] == [2]
+    b.tick()   # token 3 for both -> both finish, both slots free
+    assert len(b._free_slots()) == 2
+    assert len(b.completed) == 2
+    done = b.run_until_drained()
+    assert {d.request.uid for d in done} == {0, 1, 2}
+
+
+def test_mean_occupancy_of_empty_run(served):
+    cfg, run, model, params = served
+    b = ContinuousBatcher(model, run, params, num_slots=2, cache_len=32)
+    assert b.run_until_drained() == []
+    assert b.mean_occupancy == 0.0   # no div-by-zero on zero ticks
+    assert b.ticks == 0 and not b.stalled
+
+
+# --------------------------------------------------------------------------
+# drain-stall detection
+# --------------------------------------------------------------------------
+
+def test_run_until_drained_raises_on_tick_budget(served):
+    cfg, run, model, params = served
+    b = ContinuousBatcher(model, run, params, num_slots=1, cache_len=32)
+    b.submit(Request(uid=0, prompt=np.asarray([1, 2]), max_new_tokens=8))
+    b.submit(Request(uid=1, prompt=np.asarray([3, 4]), max_new_tokens=8))
+    with pytest.raises(DrainStall, match="not drained after 2 ticks") as e:
+        b.run_until_drained(max_ticks=2)
+    assert e.value.pending > 0
+    # the budget is per call, not cumulative: a fresh call finishes the work
+    done = b.run_until_drained(max_ticks=100)
+    assert {d.request.uid for d in done} == {0, 1}
+    assert not b.stalled
+
+
+def test_run_until_drained_warn_flags_partial(served):
+    cfg, run, model, params = served
+    b = ContinuousBatcher(model, run, params, num_slots=1, cache_len=32)
+    b.submit(Request(uid=0, prompt=np.asarray([1, 2]), max_new_tokens=8))
+    with pytest.warns(RuntimeWarning, match="not drained"):
+        done = b.run_until_drained(max_ticks=1, on_limit="warn")
+    assert b.stalled and done == []
+    with pytest.raises(ValueError, match="on_limit"):
+        b.run_until_drained(on_limit="bogus")

@@ -1,0 +1,272 @@
+"""Workload subsystem: trace-generator determinism/properties, the spec
+registry, JSONL replay round-trip, and the discrete-event serving
+simulator's conservation/feasibility/counter behavior."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.envs.measure import HardwareSpec, KernelWorkload
+from repro.serving.scheduler import DrainStall
+from repro.workloads import (
+    WORKLOAD_KINDS, RequestSpec, ServingPlan, ServingSimulator, Trace,
+    make_workload, register_workload, serving_space, workload_kinds)
+
+GENERATED_KINDS = ("poisson", "bursty", "diurnal", "heavy_tail")
+TINY_CELL = KernelWorkload(name="tiny", batch=1, seq_len=128, heads=2,
+                           kv_heads=1, head_dim=16, d_model=64, channels=64,
+                           scan_state=4, ssm_heads=2, ssm_head_dim=16,
+                           ssm_state=8)
+FAMS = ("flash_attention", "rmsnorm")
+
+
+def _sim(**kw):
+    return ServingSimulator(TINY_CELL, FAMS, **kw)
+
+
+# --------------------------------------------------------------------------
+# registry / spec grammar
+# --------------------------------------------------------------------------
+
+def test_at_least_five_kinds_registered():
+    assert set(workload_kinds()) >= {"poisson", "bursty", "diurnal",
+                                     "heavy_tail", "replay"}
+    assert len(workload_kinds()) >= 5
+
+
+def test_spec_round_trips_and_overrides():
+    w = make_workload("poisson:rate=123.5,mean_prompt=7")
+    assert dict(w.params)["rate"] == 123.5
+    assert dict(w.params)["mean_prompt"] == 7
+    # canonical spec re-parses to the same workload
+    assert make_workload(w.spec) == w
+
+
+def test_unknown_kind_and_param_raise_with_names():
+    with pytest.raises(ValueError, match=r"unknown workload kind 'bogus'"):
+        make_workload("bogus")
+    with pytest.raises(ValueError) as e:
+        make_workload("bogus:rate=1")
+    for kind in workload_kinds():
+        assert kind in str(e.value)
+    with pytest.raises(ValueError, match=r"no parameter 'nope'.*valid"):
+        make_workload("poisson:nope=3")
+    with pytest.raises(ValueError, match="not 'param=value'"):
+        make_workload("poisson:rate")
+
+
+def test_register_workload_rejects_duplicates():
+    with pytest.raises(ValueError, match="already registered"):
+        register_workload("poisson")(lambda rng: [])
+
+
+# --------------------------------------------------------------------------
+# generator determinism + properties
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", GENERATED_KINDS)
+def test_same_spec_same_seed_identical_trace(kind):
+    w = make_workload(kind)
+    assert w.generate(5) == w.generate(5)
+    assert w.generate(5) != w.generate(6)
+
+
+@pytest.mark.parametrize("kind", GENERATED_KINDS)
+def test_trace_well_formed(kind):
+    tr = make_workload(kind).generate(0)
+    assert len(tr) > 0
+    times = [r.arrival_s for r in tr.requests]
+    assert times == sorted(times)
+    assert all(t >= 0 for t in times)
+    assert all(r.prompt_len >= 1 and r.output_len >= 1 for r in tr.requests)
+    assert [r.uid for r in tr.requests] == list(range(len(tr)))
+    assert tr.max_context == max(r.prompt_len + r.output_len
+                                 for r in tr.requests)
+
+
+def test_different_specs_differ_under_same_seed():
+    a = make_workload("poisson:rate=2000").generate(0)
+    b = make_workload("poisson:rate=2001").generate(0)
+    assert [r.arrival_s for r in a.requests] != [r.arrival_s
+                                                 for r in b.requests]
+
+
+def test_poisson_rate_approximately_holds():
+    tr = make_workload("poisson:rate=3000,horizon=0.2").generate(1)
+    assert tr.mean_rate() == pytest.approx(3000, rel=0.2)
+
+
+def test_bursty_is_burstier_than_poisson():
+    # coefficient of variation of inter-arrival gaps: the MMPP must exceed
+    # the memoryless process (CV ~ 1)
+    def cv(spec):
+        t = np.asarray([r.arrival_s
+                        for r in make_workload(spec).generate(2).requests])
+        gaps = np.diff(t)
+        return gaps.std() / gaps.mean()
+
+    assert cv("bursty:rate=2000,burst=8,horizon=0.2") > \
+        cv("poisson:rate=2000,horizon=0.2") + 0.2
+
+
+def test_heavy_tail_is_heavier_than_poisson():
+    thin = make_workload("poisson:horizon=0.2").generate(3)
+    heavy = make_workload("heavy_tail:horizon=0.2").generate(3)
+    assert max(r.prompt_len for r in heavy.requests) > \
+        2 * max(r.prompt_len for r in thin.requests)
+
+
+def test_diurnal_rate_varies_over_period():
+    tr = make_workload(
+        "diurnal:rate=4000,amplitude=1.0,period=0.1,horizon=0.1").generate(4)
+    t = np.asarray([r.arrival_s for r in tr.requests])
+    # first half-period is the crest, second the trough
+    assert (t < 0.05).sum() > 2 * (t >= 0.05).sum()
+
+
+def test_replay_round_trip(tmp_path):
+    path = str(tmp_path / "trace.jsonl")
+    orig = make_workload("bursty:horizon=0.02").generate(7)
+    orig.save(path)
+    replayed = make_workload(f"replay:path={path}").generate(123)
+    assert [(r.arrival_s, r.prompt_len, r.output_len)
+            for r in replayed.requests] == \
+        [(r.arrival_s, r.prompt_len, r.output_len) for r in orig.requests]
+    with pytest.raises(ValueError, match="needs path"):
+        make_workload("replay").generate(0)
+
+
+def test_trace_rejects_malformed():
+    good = RequestSpec(0, 0.0, 4, 4)
+    with pytest.raises(ValueError, match="sorted"):
+        Trace("k", "k", 0, (RequestSpec(0, 1.0, 4, 4),
+                            RequestSpec(1, 0.5, 4, 4)))
+    with pytest.raises(ValueError, match="malformed"):
+        Trace("k", "k", 0, (good, RequestSpec(1, 2.0, 0, 4)))
+
+
+# --------------------------------------------------------------------------
+# serving plan / space
+# --------------------------------------------------------------------------
+
+def test_serving_space_joins_scheduler_and_launch_options():
+    space = serving_space(FAMS)
+    names = set(space.names)
+    assert {"serving.num_slots", "serving.admit_chunk", "serving.cache_len",
+            "serving.interleave"} <= names
+    assert {"flash_attention.q_block", "flash_attention.kv_block",
+            "rmsnorm.row_block"} <= names
+    assert "mamba_scan.chunk" not in names  # families restrict the surface
+
+
+def test_serving_plan_from_config_and_validation():
+    plan = ServingPlan.from_config({"serving.num_slots": 4,
+                                    "serving.cache_len": 256,
+                                    "serving.interleave": "drain",
+                                    "flash_attention.q_block": 128})
+    assert plan == ServingPlan(num_slots=4, admit_chunk=4, cache_len=256,
+                               interleave="drain")
+    with pytest.raises(ValueError, match="interleave"):
+        ServingPlan(interleave="bogus")
+    with pytest.raises(ValueError, match="malformed"):
+        ServingPlan(num_slots=0)
+
+
+# --------------------------------------------------------------------------
+# simulator
+# --------------------------------------------------------------------------
+
+def _trace(spec="poisson:rate=2000,horizon=0.02,mean_prompt=32,"
+                "mean_output=16,max_len=96", seed=0):
+    return make_workload(spec).generate(seed)
+
+
+def test_sim_deterministic_and_conserves_requests():
+    tr = _trace()
+    sim = _sim()
+    plan = ServingPlan()
+    r1 = sim.run(tr, plan, {})
+    r2 = _sim().run(tr, plan, {})
+    assert r1 == r2
+    assert r1.feasible and r1.completed == len(tr)
+    assert r1.p99_latency_us >= r1.p50_latency_us > 0
+    assert r1.throughput_rps > 0 and r1.tokens_per_s > 0
+    assert 0 < r1.occupancy_mean <= plan.num_slots
+    assert set(r1.counters()) == {
+        "queue_depth_mean", "queue_depth_max", "occupancy_mean",
+        "prefill_decode_ratio", "latency", "throughput",
+        "slo_violation_rate"}
+
+
+def test_sim_cache_too_small_is_infeasible():
+    tr = _trace()
+    plan = ServingPlan(cache_len=max(tr.max_context - 1, 1))
+    rep = _sim().run(tr, plan, {})
+    assert not rep.feasible and rep.reason == "cache_len"
+    assert rep.completed == 0
+
+
+def test_sim_vmem_overflow_is_infeasible():
+    cell = dataclasses.replace(TINY_CELL, vmem_limit=1)
+    rep = ServingSimulator(cell, FAMS).run(_trace(), ServingPlan(), {})
+    assert not rep.feasible and rep.reason == "vmem"
+
+
+def test_sim_launch_config_changes_price():
+    tr = _trace()
+    sim = _sim()
+    a = sim.run(tr, ServingPlan(), {"flash_attention.q_block": 128,
+                                    "flash_attention.kv_block": 256})
+    b = sim.run(tr, ServingPlan(), {"flash_attention.q_block": 1024,
+                                    "flash_attention.kv_block": 2048})
+    assert a.p99_latency_us != b.p99_latency_us
+    resolved = sim.resolved_launch({"flash_attention.q_block": 128})
+    assert resolved["flash_attention"]["q_block"] == 128
+
+
+def test_sim_fewer_slots_queues_more():
+    tr = _trace("bursty:rate=4000,burst=6,horizon=0.02,mean_prompt=32,"
+                "mean_output=16,max_len=96")
+    sim = _sim()
+    narrow = sim.run(tr, ServingPlan(num_slots=2), {})
+    wide = sim.run(tr, ServingPlan(num_slots=16), {})
+    assert narrow.queue_depth_mean > wide.queue_depth_mean
+
+
+def test_sim_drain_policy_differs_from_eager():
+    tr = _trace("bursty:rate=4000,burst=6,horizon=0.02,mean_prompt=32,"
+                "mean_output=16,max_len=96")
+    sim = _sim()
+    eager = sim.run(tr, ServingPlan(interleave="eager"), {})
+    drain = sim.run(tr, ServingPlan(interleave="drain"), {})
+    assert eager != drain
+
+
+def test_sim_slo_violation_rate_tracks_threshold():
+    tr = _trace()
+    tight = _sim(slo_us=1.0).run(tr, ServingPlan(), {})
+    loose = _sim(slo_us=1e9).run(tr, ServingPlan(), {})
+    assert tight.slo_violation_rate == 1.0
+    assert loose.slo_violation_rate == 0.0
+
+
+def test_sim_tick_budget_raises_drain_stall():
+    with pytest.raises(DrainStall) as e:
+        _sim(max_ticks=3).run(_trace(), ServingPlan(), {})
+    assert e.value.pending > 0
+
+
+def test_sim_empty_trace_rejected():
+    with pytest.raises(ValueError, match="empty trace"):
+        _sim().run(Trace("k", "k", 0, ()), ServingPlan(), {})
+
+
+def test_sim_hardware_scales_latency():
+    tr = _trace()
+    base = _sim().run(tr, ServingPlan(), {})
+    slow = ServingSimulator(
+        TINY_CELL, FAMS,
+        hardware=HardwareSpec().scaled(mxu=0.5, hbm=0.5)).run(
+            tr, ServingPlan(), {})
+    assert slow.p99_latency_us > base.p99_latency_us
