@@ -1,0 +1,128 @@
+"""Sim-to-real serving benchmark CLI -> BENCH_sim2real.json.
+
+Sweeps (cell x method) over the full serving stack with the environment
+change being the *sim-to-real gap itself*: the source is the deterministic
+continuous-batching simulator, the target is the real ``ContinuousBatcher``
+replaying the identical trace realization through actual jitted
+prefill/decode steps (see ``repro.envs.replay_env.make_sim2real_pair`` and
+``repro.tuner.bench.run_sim2real_bench``).  Regret is measured in the
+REPLAY environment (wall-clock ms), so the gate asserts causal transfer
+survives deployment, not just a second simulator.
+
+    PYTHONPATH=src python benchmarks/sim2real_bench.py --smoke
+    PYTHONPATH=src python benchmarks/sim2real_bench.py \
+        --workloads "poisson:rate=1500,horizon=0.004;bursty:rate=1500" \
+        --methods cameo,random --budget 8
+
+(``--workloads`` is ``;``-separated — workload specs use commas for their
+own parameters; each spec becomes one cell named ``w<i>``.)
+
+``--smoke`` is the CI configuration: small budget and pool (every target
+measurement is a real replay), cameo vs random, exits non-zero when the
+gate fails.  CI runs it under ``REPRO_KERNEL_MODE=pallas_interpret`` so the
+replayed kernels are the real Pallas bodies.  See ``benchmarks/README.md``
+for the JSON layout.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.tuner.bench import (
+    DEFAULT_METHODS, DEFAULT_SIM2REAL_CELLS, Sim2RealCell,
+    run_sim2real_bench, sim2real_cell_by_name)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="small-budget CI sweep; non-zero exit on gate fail")
+    ap.add_argument("--budget", type=int, default=None)
+    ap.add_argument("--n-source", type=int, default=None)
+    ap.add_argument("--n-target-init", type=int, default=None)
+    ap.add_argument("--pool", type=int, default=None,
+                    help="ground-truth pool size per cell (each entry is a "
+                         "real replay — keep it small)")
+    ap.add_argument("--repeats", type=int, default=None,
+                    help="median-of-k replays per target measurement")
+    ap.add_argument("--seeds", default=None, help="comma-separated ints")
+    ap.add_argument("--cells", default=None,
+                    help=f"comma-separated subset of "
+                         f"{[c.name for c in DEFAULT_SIM2REAL_CELLS]}")
+    ap.add_argument("--workloads", default=None,
+                    help="semicolon-separated workload specs replacing the "
+                         "default cells (specs use commas for parameters)")
+    ap.add_argument("--methods", default=None,
+                    help="comma-separated tuner names (cameo, random, smac, "
+                         "restune, restune-w/o-ml, cello, unicorn)")
+    ap.add_argument("--out", default="BENCH_sim2real.json")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        budget, n_source, n_target_init = 5, 32, 2
+        pool, seeds, repeats = 10, (0,), 3
+    else:
+        budget, n_source, n_target_init = 10, 64, 3
+        pool, seeds, repeats = 24, (0, 1), 3
+    methods = DEFAULT_METHODS
+    cells = DEFAULT_SIM2REAL_CELLS
+    if args.budget is not None:
+        budget = args.budget
+    if args.n_source is not None:
+        n_source = args.n_source
+    if args.n_target_init is not None:
+        n_target_init = args.n_target_init
+    if args.pool is not None:
+        pool = args.pool
+    if args.repeats is not None:
+        repeats = args.repeats
+    if args.seeds:
+        seeds = tuple(int(s) for s in args.seeds.split(","))
+    if args.cells:
+        cells = tuple(sim2real_cell_by_name(n)
+                      for n in args.cells.split(","))
+    if args.workloads:
+        specs = tuple(filter(None, (s.strip()
+                                    for s in args.workloads.split(";"))))
+        cells = tuple(Sim2RealCell(f"w{i}", spec)
+                      for i, spec in enumerate(specs))
+    if args.methods:
+        methods = tuple(args.methods.split(","))
+
+    doc = run_sim2real_bench(cells=cells, methods=methods, budget=budget,
+                             n_source=n_source,
+                             n_target_init=n_target_init, seeds=seeds,
+                             pool=pool, repeats=repeats)
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=2)
+
+    for cell in doc["cells"]:
+        dflt = cell["y_default"]
+        dflt_s = f"{dflt:.1f}" if dflt is not None else "infeasible"
+        print(f"\n== {cell['cell']} ({cell['workload']}) "
+              f"(y_opt={cell['y_opt']:.1f} ms, default={dflt_s}) ==")
+        ranked = sorted(cell["methods"].items(),
+                        key=lambda kv: kv[1]["mean_final_regret"])
+        for method, stats in ranked:
+            print(f"  {method:16s} mean final regret = "
+                  f"{stats['mean_final_regret']*100:7.2f}%")
+    gate = doc["gate"]
+    print(f"\n[sim2real_bench] wrote {args.out} "
+          f"({doc['meta']['wall_s']:.1f}s)")
+    if gate["checked"]:
+        print(f"[sim2real_bench] gate: {gate['champion']}="
+              f"{gate['champion_mean_final_regret']*100:.2f}% vs "
+              f"{gate['reference']}="
+              f"{gate['reference_mean_final_regret']*100:.2f}% -> "
+              f"{'PASS' if gate['passed'] else 'FAIL'}")
+    if args.smoke and not gate["passed"]:
+        print("[sim2real_bench] FAIL: champion regret exceeds reference",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -10,16 +10,22 @@ from repro.envs.measure import (  # noqa: F401
     shift_kinds, shifts_for, timeit)
 
 
-# ServingEnv sits above the workloads subsystem, which itself measures
-# through repro.envs.measure — importing it eagerly here would close an
-# import cycle (workloads.sim -> repro.envs -> serving_env -> workloads.sim),
-# so the re-export is lazy (PEP 562).
-_SERVING_EXPORTS = ("ServingEnv", "make_serving_pair")
+# ServingEnv / ReplayServingEnv sit above the workloads subsystem, which
+# itself measures through repro.envs.measure — importing them eagerly here
+# would close an import cycle (workloads.sim -> repro.envs -> serving_env ->
+# workloads.sim), so the re-exports are lazy (PEP 562).
+_SERVING_EXPORTS = {
+    "ServingEnv": "serving_env",
+    "make_serving_pair": "serving_env",
+    "ReplayServingEnv": "replay_env",
+    "make_sim2real_pair": "replay_env",
+}
 
 
 def __getattr__(name):
-    if name in _SERVING_EXPORTS:
-        from repro.envs import serving_env
+    module = _SERVING_EXPORTS.get(name)
+    if module is not None:
+        import importlib
 
-        return getattr(serving_env, name)
+        return getattr(importlib.import_module(f"repro.envs.{module}"), name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,270 @@
+"""Replay-backed serving environment: the real ``ContinuousBatcher`` as the
+*target* half of a sim-to-real transfer pair.
+
+CAMEO's premise is that the source environment is a cheap stand-in for a
+target where intervention is costly — and the paper validates against the
+real deployment, not a second simulator.  :class:`ReplayServingEnv` closes
+that loop for the serving stack: it exposes the SAME configuration surface
+as :class:`repro.envs.serving_env.ServingEnv` (``serving.*`` scheduler knobs
+joined with the ``family.param`` kernel-launch options), but each
+measurement *deploys* the candidate — scheduler half via
+``ServingEnv.plan_of``, launch half baked into the jitted steps through
+``dispatch.use_launch_config`` inside the step factories — onto a freshly
+constructed tiny-model batcher and replays the pinned trace through
+:func:`repro.serving.replay.replay_trace`.  ``y`` is the replay's wall-clock
+p99 latency (ms) or throughput (completed req/s), and the replay counters
+(queue depth, occupancy, prefill/decode wall-time split, rejections) are the
+discovery variables, name-compatible with the simulator's so a causal model
+extracted from simulator observations transfers onto replay measurements.
+
+Feasibility mirrors the simulator: a ``cache_len`` the trace does not fit
+in, or a launch config whose modeled VMEM footprint overflows, measures as
+``inf``/``-inf`` direction-aware *without* running the batcher (the same
+"counters and the VMEM gate stay analytic" convention ``WallClockBackend``
+uses for kernels).  A replay that stalls past the tick budget also measures
+infeasible — a deployment that cannot drain its own trace is not a usable
+configuration.
+
+:func:`make_sim2real_pair` builds the canonical transfer pair: a
+``ServingEnv`` (simulator = source) and a ``ReplayServingEnv`` (real batcher
+= target) over the *identical* trace realization, with the simulator priced
+at the kernel dimensions of the very model the batcher runs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Iterable, Optional, Tuple, Union
+
+from repro.envs import measure as measure_mod
+from repro.envs.base import PooledEnv
+from repro.envs.measure import HardwareSpec, KernelWorkload, LaunchGeometry
+from repro.envs.serving_env import OBJECTIVES, ServingEnv
+from repro.workloads.sim import SIM_COUNTER_NAMES, ServingPlan, serving_space
+from repro.workloads.traces import Trace, TraceWorkload, make_workload
+
+#: the simulator's discovery counters plus the replay-only rejection signal
+REPLAY_COUNTER_NAMES: Tuple[str, ...] = SIM_COUNTER_NAMES + ("rejected_rate",)
+
+
+def default_replay_model():
+    """A tiny dense ``ModelConfig`` cheap enough to replay traces through on
+    CPU CI — the deployment stand-in :func:`make_sim2real_pair` uses unless
+    the caller brings a real assignment."""
+    from repro.utils.config import ModelConfig
+
+    return ModelConfig(name="sim2real-tiny", vocab_size=64, d_model=32,
+                       num_heads=4, num_kv_heads=2, d_ff=64, num_layers=2,
+                       dtype="float32")
+
+
+@functools.lru_cache(maxsize=4)
+def _built_model(model_cfg, model_seed: int):
+    """(model, run, params) shared across every env instance with the same
+    deployment — one ``Model`` identity keeps the ``jitted_steps`` compile
+    cache warm across bench pairs instead of retracing per environment."""
+    import jax
+
+    from repro.models.model import build_model
+    from repro.utils.config import RunConfig, ShapeConfig
+
+    run = RunConfig(model=model_cfg,
+                    shape=ShapeConfig("sim2real", 64, 4, "decode"))
+    model = build_model(model_cfg, run.parallel)
+    params = model.init(jax.random.PRNGKey(model_seed))
+    return model, run, params
+
+
+class ReplayServingEnv(PooledEnv):
+    """PerfEnv measuring serving configurations on the real batcher.
+
+    ``workload`` is a spec string, bound :class:`TraceWorkload`, or
+    already-generated :class:`Trace` — identical grammar to ``ServingEnv``;
+    the realization is drawn once at construction (``trace_seed``, default
+    ``seed``) and every measurement replays the same arrivals.  The model is
+    the *deployment* and stays fixed across seeds (``model_seed``), so two
+    envs differing only in ``seed`` measure the same system.
+
+    ``ticks_per_s`` is pinned at construction against the DEFAULT plan's
+    slot count: the arrival schedule is part of the environment, so it must
+    not drift with the candidate configuration's ``num_slots``.
+    """
+
+    def __init__(self, workload: Union[str, TraceWorkload, Trace],
+                 model_cfg=None, *, families: Optional[Iterable[str]] = None,
+                 cell: Optional[KernelWorkload] = None, seed: int = 0,
+                 objective: str = "latency", slo_ms: float = 1_000.0,
+                 hardware: Optional[HardwareSpec] = None,
+                 trace_seed: Optional[int] = None,
+                 ticks_per_s: Optional[float] = None,
+                 max_ticks: int = 100_000, model_seed: int = 0,
+                 replay_seed: int = 0, warmup: int = 1, repeats: int = 1):
+        from repro.launch.tune import launch_workload_for
+        from repro.serving.replay import default_ticks_per_s
+        from repro.tuner.space import launch_families_for
+
+        if objective not in OBJECTIVES:
+            raise ValueError(f"unknown serving objective {objective!r}; "
+                             f"known: {sorted(OBJECTIVES)}")
+        self.model_cfg = model_cfg or default_replay_model()
+        if families is None:
+            modeled = measure_mod.modeled_families()
+            families = [f for f in launch_families_for(self.model_cfg)
+                        if f in modeled]
+        self.families = tuple(sorted(families))
+        if isinstance(workload, str):
+            workload = make_workload(workload)
+        if isinstance(workload, Trace):
+            self.trace = workload
+            self.workload_spec = workload.spec
+        else:
+            self.trace = workload.generate(
+                seed if trace_seed is None else trace_seed)
+            self.workload_spec = workload.spec
+        self.objective = objective
+        self.maximize = objective == "throughput"
+        self.slo_ms = float(slo_ms)
+        # the analytic cell the VMEM feasibility gate prices with — derived
+        # from the deployed model unless pinned, like launch tuning does
+        self.cell = cell or launch_workload_for(self.model_cfg, batch=1,
+                                                seq_len=512, kind="serve")
+        self.hardware = hardware or HardwareSpec()
+        self.max_ticks = int(max_ticks)
+        self.ticks_per_s = ticks_per_s or default_ticks_per_s(
+            self.trace, ServingPlan().num_slots)
+        self._replay_seed = int(replay_seed)
+        self.warmup = int(warmup)
+        self.repeats = max(int(repeats), 1)
+        self.model, self.run, self.params = _built_model(self.model_cfg,
+                                                         model_seed)
+        super().__init__(serving_space(self.families), REPLAY_COUNTER_NAMES,
+                         seed=seed)
+
+    @property
+    def query_text(self) -> str:
+        """The query ``transfer_tune`` should run this environment under
+        (``{budget}`` left for the runner to fill).  Latency binds in wall
+        milliseconds — the replay's unit, not the simulator's."""
+        if self.maximize:
+            return (f"maximize throughput for which latency is less than "
+                    f"{self.slo_ms:g} within {{budget}} samples")
+        return "minimize latency within {budget} samples"
+
+    # -- feasibility (analytic, like WallClockBackend's gate) ------------
+
+    def infeasible_reason(self, config: Dict[str, Any]) -> str:
+        """"" when deployable; otherwise why not (``cache_len``/``vmem``),
+        decided analytically so undeployable configs never reach the
+        batcher."""
+        plan = ServingPlan.from_config(config)
+        if self.trace.max_context > plan.cache_len:
+            return "cache_len"
+        w = dataclasses.replace(self.cell, batch=plan.num_slots,
+                                seq_len=plan.cache_len)
+        _, _, feasible = LaunchGeometry(w, self.hardware).totals(
+            self.families, config)
+        return "" if feasible else "vmem"
+
+    def _infeasible_counters(self) -> Dict[str, float]:
+        n = float(len(self.trace.requests))
+        return {"queue_depth_mean": n, "queue_depth_max": n,
+                "occupancy_mean": 0.0, "prefill_decode_ratio": 0.0,
+                "slo_violation_rate": 1.0, "rejected_rate": 1.0,
+                "latency": 0.0, "throughput": 0.0}
+
+    # -- measurement ----------------------------------------------------
+
+    def replay(self, config: Dict[str, Any]):
+        """Deploy ``config`` on a FRESH batcher and replay the pinned trace;
+        returns the :class:`repro.serving.replay.ReplayReport`.  The launch
+        half is baked into the jitted steps (the step factories run under an
+        exclusive ``dispatch.use_launch_config``); the scheduler half is the
+        batcher's geometry."""
+        from repro.serving.replay import replay_trace
+        from repro.serving.scheduler import ContinuousBatcher
+        from repro.tuner.space import launch_config_of
+
+        plan = ServingPlan.from_config(config)
+        batcher = ContinuousBatcher(
+            self.model, self.run, self.params, num_slots=plan.num_slots,
+            cache_len=plan.cache_len, interleave=plan.interleave,
+            launch_config=launch_config_of(config), seed=self._replay_seed)
+        # warmup replays trigger every jit compile this deployment needs
+        # (each distinct prompt length traces prefill once) so the measured
+        # replay times execution, not compilation — the per-replay delta
+        # accounting of replay_trace is what makes reuse sound here
+        def one():
+            return replay_trace(batcher, self.trace,
+                                admit_chunk=plan.admit_chunk,
+                                ticks_per_s=self.ticks_per_s,
+                                seed=self._replay_seed,
+                                max_ticks=self.max_ticks)
+
+        for _ in range(self.warmup):
+            one()
+        # median-of-k on the objective metric, the WallClockBackend recipe
+        # against wall-clock jitter; the whole median report is returned so
+        # counters stay internally consistent
+        reports = sorted((one() for _ in range(self.repeats)),
+                         key=lambda r: (r.throughput_rps if self.maximize
+                                        else r.p99_latency_ms))
+        return reports[len(reports) // 2]
+
+    def _measure(self, config: Dict[str, Any]
+                 ) -> Tuple[Dict[str, float], float]:
+        from repro.serving.scheduler import DrainStall
+
+        bad = float("-inf" if self.maximize else "inf")
+        if self.infeasible_reason(config):
+            return self._infeasible_counters(), bad
+        try:
+            report = self.replay(config)
+        except DrainStall:
+            return self._infeasible_counters(), bad
+        counters = report.counters(self.slo_ms)
+        y = (report.throughput_rps if self.maximize
+             else report.p99_latency_ms)
+        return counters, y
+
+    # -- deployment -----------------------------------------------------
+
+    plan_of = staticmethod(ServingEnv.plan_of)
+    apply = ServingEnv.apply
+
+
+def make_sim2real_pair(workload: Union[str, TraceWorkload, Trace],
+                       model_cfg=None, *,
+                       families: Optional[Iterable[str]] = None,
+                       seed: int = 0, trace_seed: Optional[int] = None,
+                       objective: str = "latency", slo_us: float = 2_000.0,
+                       slo_ms: float = 1_000.0,
+                       hardware: Optional[HardwareSpec] = None,
+                       **replay_kw: Any
+                       ) -> Tuple[ServingEnv, ReplayServingEnv]:
+    """(source, target) over the IDENTICAL trace realization: the simulator
+    prices the trace analytically at the deployed model's kernel dimensions
+    (cheap staging), the replay environment measures the real batcher (the
+    deployment).  Identical configuration space; the paper's sim-to-real
+    environment change with everything else held fixed."""
+    from repro.launch.tune import launch_workload_for
+    from repro.tuner.space import launch_families_for
+
+    model_cfg = model_cfg or default_replay_model()
+    if families is None:
+        modeled = measure_mod.modeled_families()
+        families = [f for f in launch_families_for(model_cfg)
+                    if f in modeled]
+    families = tuple(sorted(families))
+    cell = launch_workload_for(model_cfg, batch=1, seq_len=512, kind="serve")
+    if isinstance(workload, str):
+        workload = make_workload(workload)
+    if not isinstance(workload, Trace):
+        workload = workload.generate(seed if trace_seed is None
+                                     else trace_seed)
+    src = ServingEnv(workload, cell, families, seed=seed + 1,
+                     objective=objective, slo_us=slo_us, hardware=hardware)
+    tgt = ReplayServingEnv(workload, model_cfg, families=families, cell=cell,
+                           seed=seed + 2, objective=objective, slo_ms=slo_ms,
+                           hardware=hardware, **replay_kw)
+    return src, tgt

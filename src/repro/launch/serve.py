@@ -19,6 +19,10 @@ batcher:
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
         --workload "bursty:rate=2000,horizon=0.03" --tune-serving 10
+
+``--sim2real-eval`` additionally prices the deployed plan in the simulator
+and prints sim-predicted vs replayed-actual — the single-deployment view of
+the gap ``benchmarks/sim2real_bench.py`` sweeps.
 """
 
 from __future__ import annotations
@@ -41,13 +45,18 @@ from repro.utils.config import MeshConfig, RunConfig, ShapeConfig
 
 def serve_workload(model, run, params, workload_spec: str, *,
                    tune_budget: int = 0, seed: int = 0,
-                   ticks_per_s=None, method: str = "cameo"):
+                   ticks_per_s=None, method: str = "cameo",
+                   sim2real_eval: bool = False):
     """Trace-driven serving: generate the trace, optionally transfer-tune
     the serving stack against it in the simulator, then replay it through
     the real ``ContinuousBatcher`` under the tuned plan.  Returns
     ``(plan, launch_config, replay_report)`` so callers (and tests) can
-    audit exactly what was deployed."""
+    audit exactly what was deployed.  ``sim2real_eval`` additionally prices
+    the deployed configuration in the simulator and prints sim-predicted vs
+    replayed-actual — the per-deployment view of the sim-to-real gap the
+    ``sim2real`` benchmark sweeps."""
     from repro.envs.serving_env import ServingEnv
+    from repro.launch.tune import predicted_serving_report
     from repro.serving.replay import replay_trace
     from repro.serving.scheduler import ContinuousBatcher
     from repro.workloads import ServingPlan, make_workload
@@ -59,15 +68,18 @@ def serve_workload(model, run, params, workload_spec: str, *,
           f"~{trace.mean_rate():.0f} req/s modeled")
 
     launch_config = None
+    best_config = None
     plan = ServingPlan()
     if tune_budget > 0:
         result = tune_serving_config(model.cfg, workload_spec, tune_budget,
                                      method=method, seed=seed)
-        plan = ServingPlan.from_config(result.best_config or {})
+        best_config = result.best_config or {}
+        plan = ServingPlan.from_config(best_config)
         launch_config = result.launch_config
     batcher = ContinuousBatcher(model, run, params,
                                 num_slots=plan.num_slots,
                                 cache_len=plan.cache_len,
+                                interleave=plan.interleave,
                                 launch_config=launch_config)
     report = replay_trace(batcher, trace, admit_chunk=plan.admit_chunk,
                           ticks_per_s=ticks_per_s, seed=seed)
@@ -77,6 +89,30 @@ def serve_workload(model, run, params, workload_spec: str, *,
           f"occupancy {report.mean_occupancy:.2f}, "
           f"latency p50={report.p50_latency_ms:.1f} ms "
           f"p99={report.p99_latency_ms:.1f} ms")
+    if sim2real_eval:
+        from repro.serving.scheduler import DrainStall
+
+        try:
+            pred = predicted_serving_report(model.cfg, trace, best_config)
+        except DrainStall as e:
+            # the replay above already drained — a simulator that cannot is
+            # itself a sim-to-real finding, not a crash
+            print(f"[serve] sim2real: simulator stalled pricing the "
+                  f"deployed plan ({e}) while the replay drained — a "
+                  f"fidelity gap worth investigating")
+            return plan, launch_config, report
+        if not pred.feasible:
+            print(f"[serve] sim2real: simulator calls the deployed plan "
+                  f"infeasible ({pred.reason}) — the replay measured it "
+                  f"anyway, a fidelity gap worth investigating")
+        else:
+            print(f"[serve] sim2real: sim-predicted p99="
+                  f"{pred.p99_latency_us:.0f} us modeled, occupancy "
+                  f"{pred.occupancy_mean:.2f}, queue depth "
+                  f"{pred.queue_depth_mean:.2f} | replayed-actual p99="
+                  f"{report.p99_latency_ms:.1f} ms wall, occupancy "
+                  f"{report.mean_occupancy:.2f}, queue depth "
+                  f"{report.queue_depth_mean:.2f}")
     return plan, launch_config, report
 
 
@@ -104,6 +140,10 @@ def main() -> int:
                     help="with --workload: intervention budget for a "
                          "serving-stack tuning run in the workload simulator "
                          "(0 = serve with the default plan)")
+    ap.add_argument("--sim2real-eval", action="store_true",
+                    help="with --workload: after the replay, price the "
+                         "deployed configuration in the simulator too and "
+                         "report sim-predicted vs replayed-actual")
     args = ap.parse_args()
 
     cfg = (get_model_config(args.arch) if args.full_config
@@ -120,7 +160,8 @@ def main() -> int:
 
     if args.workload:
         serve_workload(model, run, params, args.workload,
-                       tune_budget=args.tune_serving)
+                       tune_budget=args.tune_serving,
+                       sim2real_eval=args.sim2real_eval)
         return 0
 
     data = make_data(cfg, run.shape, seed=0)

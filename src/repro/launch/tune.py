@@ -88,6 +88,24 @@ def tune_serving_config(cfg, workload: str, budget: int, *,
     return result
 
 
+def predicted_serving_report(cfg, trace, config: Optional[Dict[str, Any]]):
+    """Price a serving configuration on ``trace`` in the deterministic
+    simulator — the sim-predicted half of ``--sim2real-eval`` (the replayed
+    half comes from ``serving/replay.py``).  Uses the same cell derivation
+    and family gating as serving tuning, so the prediction is for the model
+    the batcher actually deploys."""
+    from repro.envs import measure as measure_mod
+    from repro.tuner.space import launch_families_for
+    from repro.workloads import ServingPlan, ServingSimulator
+
+    config = config or {}
+    cell = launch_workload_for(cfg, batch=1, seq_len=512, kind="serve")
+    modeled = measure_mod.modeled_families()
+    families = [f for f in launch_families_for(cfg) if f in modeled]
+    sim = ServingSimulator(cell, families)
+    return sim.run(trace, ServingPlan.from_config(config), config)
+
+
 def measure_backend_arg(name: str) -> str:
     """argparse ``type=`` validator for ``--measure-backend``: any name
     ``resolve_backend_name`` accepts (analytic, wallclock, shifted:<kind>)."""

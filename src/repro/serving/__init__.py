@@ -1,4 +1,4 @@
 from repro.serving.scheduler import (  # noqa: F401
     ContinuousBatcher, DrainStall, Request, RequestState)
 from repro.serving.replay import (  # noqa: F401
-    ReplayReport, replay_trace, trace_requests)
+    ReplayReport, default_ticks_per_s, replay_trace, trace_requests)

@@ -11,13 +11,19 @@ offered load is preserved.
 The admission chunk is honored here — at most ``admit_chunk`` requests are
 released into the batcher's queue per tick — because the batcher itself
 admits greedily into every free slot.
+
+All statistics are **per replay**: counters snapshot the batcher's lifetime
+state (``completed``, ticks, occupancy, prefill/decode wall time) at entry
+and report only this replay's deltas, so a reused batcher (e.g. a
+default-vs-tuned comparison on one deployment) never counts pre-replay
+completions.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
 from time import perf_counter
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -27,7 +33,11 @@ from repro.workloads.traces import Trace
 
 @dataclass(frozen=True)
 class ReplayReport:
-    """Wall-clock statistics from one real-batcher trace replay."""
+    """Wall-clock statistics from one real-batcher trace replay.
+
+    Every field covers only the replay that produced the report — a batcher
+    that already served other traffic contributes nothing to these counts.
+    """
 
     completed: int
     rejected: int                  # did not fit prompt+output in the cache
@@ -37,6 +47,46 @@ class ReplayReport:
     mean_occupancy: float
     p50_latency_ms: float          # submit -> finish, wall clock
     p99_latency_ms: float
+    queue_depth_mean: float = 0.0  # batcher queue depth sampled per tick
+    queue_depth_max: float = 0.0
+    prefill_s: float = 0.0         # wall time inside prefill launches
+    decode_s: float = 0.0          # wall time inside decode launches
+    latencies_ms: Tuple[float, ...] = ()  # per-request, completion order
+
+    @property
+    def prefill_decode_ratio(self) -> float:
+        return self.prefill_s / max(self.decode_s, 1e-9)
+
+    @property
+    def throughput_rps(self) -> float:
+        """Completed requests per wall-clock second of this replay."""
+        return self.completed / max(self.wall_s, 1e-9)
+
+    @property
+    def rejected_rate(self) -> float:
+        return self.rejected / max(self.rejected + self.completed, 1)
+
+    def slo_violation_rate(self, slo_ms: float) -> float:
+        if not self.latencies_ms:
+            return 0.0
+        return float(np.mean(np.asarray(self.latencies_ms) > slo_ms))
+
+    def counters(self, slo_ms: float = float("inf")) -> Dict[str, float]:
+        """The measurement's metrics dict, name-compatible with
+        :meth:`repro.workloads.sim.SimReport.counters` so a simulator-trained
+        causal model transfers onto replay measurements.  ``latency`` /
+        ``throughput`` are objective clones for query constraints — like the
+        simulator's they stay OUT of the discovery counter names."""
+        return {
+            "queue_depth_mean": self.queue_depth_mean,
+            "queue_depth_max": self.queue_depth_max,
+            "occupancy_mean": self.mean_occupancy,
+            "prefill_decode_ratio": self.prefill_decode_ratio,
+            "slo_violation_rate": self.slo_violation_rate(slo_ms),
+            "rejected_rate": self.rejected_rate,
+            "latency": self.p99_latency_ms,
+            "throughput": self.throughput_rps,
+        }
 
 
 def default_ticks_per_s(trace: Trace, num_slots: int) -> float:
@@ -73,7 +123,8 @@ def replay_trace(batcher: ContinuousBatcher, trace: Trace, *,
 
     Deterministic given (batcher state, trace, seed): arrivals release in
     trace order at their mapped tick, at most ``admit_chunk`` per tick.
-    Raises :class:`DrainStall` if the trace does not finish in ``max_ticks``.
+    Raises :class:`DrainStall` if the trace does not finish in ``max_ticks``;
+    the stall's ``completed``/``pending`` count only this replay's requests.
     """
     if ticks_per_s is None:
         ticks_per_s = default_ticks_per_s(trace, batcher.num_slots)
@@ -84,9 +135,18 @@ def replay_trace(batcher: ContinuousBatcher, trace: Trace, *,
     arrival_tick = {r.uid: int(r.arrival_s * ticks_per_s)
                     for r in trace.requests if r.uid in fitting}
 
+    # entry snapshots: everything reported below is a delta against these,
+    # so a reused batcher's earlier traffic never leaks into this report
+    start_completed = len(batcher.completed)
+    start_ticks = batcher.ticks
+    start_occupancy = batcher._occupancy_sum
+    start_prefill_s = batcher.prefill_s
+    start_decode_s = batcher.decode_s
+
     t0 = perf_counter()
     submit_wall: Dict[int, float] = {}
-    i, tick, start_ticks = 0, 0, batcher.ticks
+    qd_sum, qd_max = 0.0, 0.0
+    i, tick = 0, 0
     while i < len(requests) or batcher.queue or any(
             s is not None for s in batcher._slots):
         released = 0
@@ -98,24 +158,38 @@ def replay_trace(batcher: ContinuousBatcher, trace: Trace, *,
             released += 1
         stepped = batcher.tick()
         tick += 1
-        if stepped == 0 and not batcher.queue and i < len(requests):
+        if stepped:
+            qd_sum += len(batcher.queue)
+            qd_max = max(qd_max, float(len(batcher.queue)))
+        elif not batcher.queue and i < len(requests):
             # idle: jump to the next arrival instead of spinning
             tick = max(tick, arrival_tick[requests[i].uid])
         if tick > max_ticks:
+            done_here = len(batcher.completed) - start_completed
             pending = (len(requests) - i + len(batcher.queue)
                        + sum(s is not None for s in batcher._slots))
             raise DrainStall(
                 f"trace replay not drained after {max_ticks} ticks "
-                f"({len(batcher.completed)} completed, {pending} pending)",
-                completed=len(batcher.completed), pending=pending)
+                f"({done_here} completed, {pending} pending)",
+                completed=done_here, pending=pending)
 
-    lat_ms = np.asarray(
-        [(rs.finished_at - submit_wall[rs.request.uid]) * 1e3
-         for rs in batcher.completed if rs.request.uid in submit_wall])
-    tokens = sum(len(rs.generated) for rs in batcher.completed)
+    done = batcher.completed[start_completed:]
+    ticks_replay = batcher.ticks - start_ticks
+    lat_ms = tuple(
+        float((rs.finished_at - submit_wall[rs.request.uid]) * 1e3)
+        for rs in done if rs.request.uid in submit_wall)
+    lat = np.asarray(lat_ms)
+    tokens = sum(len(rs.generated) for rs in done)
     return ReplayReport(
-        completed=len(batcher.completed), rejected=rejected,
-        ticks=batcher.ticks - start_ticks, wall_s=perf_counter() - t0,
-        tokens=tokens, mean_occupancy=batcher.mean_occupancy,
-        p50_latency_ms=float(np.percentile(lat_ms, 50)) if len(lat_ms) else 0.0,
-        p99_latency_ms=float(np.percentile(lat_ms, 99)) if len(lat_ms) else 0.0)
+        completed=len(done), rejected=rejected,
+        ticks=ticks_replay, wall_s=perf_counter() - t0,
+        tokens=tokens,
+        mean_occupancy=((batcher._occupancy_sum - start_occupancy)
+                        / max(ticks_replay, 1)),
+        p50_latency_ms=float(np.percentile(lat, 50)) if len(lat) else 0.0,
+        p99_latency_ms=float(np.percentile(lat, 99)) if len(lat) else 0.0,
+        queue_depth_mean=qd_sum / max(ticks_replay, 1),
+        queue_depth_max=qd_max,
+        prefill_s=batcher.prefill_s - start_prefill_s,
+        decode_s=batcher.decode_s - start_decode_s,
+        latencies_ms=lat_ms)

@@ -95,13 +95,19 @@ class ContinuousBatcher:
     def __init__(self, model: Model, run: RunConfig, params, *,
                  num_slots: int = 8, cache_len: int = 512,
                  eos_token: Optional[int] = None, seed: int = 0,
-                 launch_config: Optional[Dict[str, Any]] = None):
+                 launch_config: Optional[Dict[str, Any]] = None,
+                 interleave: str = "eager"):
+        if interleave not in ("eager", "drain"):
+            raise ValueError(
+                f"unknown interleave policy {interleave!r}; "
+                f"known: ['drain', 'eager']")
         self.model = model
         self.run = run
         self.params = params
         self.num_slots = num_slots
         self.cache_len = cache_len
         self.eos_token = eos_token
+        self.interleave = interleave
         self._key = jax.random.PRNGKey(seed)
 
         # a tuned kernel-launch optimum (e.g. TuneResult.launch_config) is
@@ -122,6 +128,10 @@ class ContinuousBatcher:
         self.ticks = 0
         self.stalled = False
         self._occupancy_sum = 0
+        # lifetime wall time inside prefill vs decode launches — replay
+        # reports diff these to get a per-replay prefill/decode split
+        self.prefill_s = 0.0
+        self.decode_s = 0.0
 
     # -- admission ----------------------------------------------------------
 
@@ -132,6 +142,11 @@ class ContinuousBatcher:
         return [i for i, s in enumerate(self._slots) if s is None]
 
     def _admit(self) -> None:
+        if self.interleave == "drain" and \
+                any(s is not None for s in self._slots):
+            # drain policy: only refill once the resident batch empties —
+            # the same admission gate the workload simulator prices
+            return
         for slot in self._free_slots():
             if not self.queue:
                 break
@@ -140,7 +155,10 @@ class ContinuousBatcher:
             batch = {"tokens": prompt}
             for k, v in req.extras.items():
                 batch[k] = jnp.asarray(v)[None]
+            t0 = time.perf_counter()
             one_state, logits = self._prefill(self.params, batch)
+            jax.block_until_ready(logits)
+            self.prefill_s += time.perf_counter() - t0
             self.state = ServeState(
                 caches=_scatter_rows(self.state.caches, one_state.caches,
                                      slot),
@@ -175,11 +193,25 @@ class ContinuousBatcher:
             return 0
         self.ticks += 1
         self._occupancy_sum += len(live)
+        t0 = time.perf_counter()
         new_state, logits = self._decode(self.params, self.state,
                                          self._tokens[:, None])
+        jax.block_until_ready(logits)
+        self.decode_s += time.perf_counter() - t0
         self.state = new_state
         self._key, sub = jax.random.split(self._key)
-        toks = sample_token(logits, sub, live[0].request.temperature)
+        # per-slot temperatures: requests with different sampling settings
+        # share one decode step, so each resident row decodes at its own
+        # temperature (empty slots sample greedily into ignored outputs);
+        # the all-greedy batch — the common replay case — keeps the scalar
+        # argmax-only fast path
+        if any(rs.request.temperature > 0.0 for rs in live):
+            temps = np.zeros((self.num_slots,), np.float32)
+            for rs in live:
+                temps[rs.slot] = rs.request.temperature
+            toks = sample_token(logits, sub, jnp.asarray(temps))
+        else:
+            toks = sample_token(logits, sub, 0.0)
         for rs in list(live):
             tok = int(toks[rs.slot])
             rs.generated.append(tok)

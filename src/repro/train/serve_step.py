@@ -153,12 +153,25 @@ def jitted_steps(model: Model, run: RunConfig,
 # generation loop (examples / integration tests)
 # --------------------------------------------------------------------------
 
-def sample_token(logits: jax.Array, key: jax.Array, temperature: float = 0.0
-                 ) -> jax.Array:
-    """logits (B, V) -> (B,) int32. temperature 0 = greedy."""
-    if temperature <= 0.0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    return jax.random.categorical(key, logits / temperature, axis=-1).astype(jnp.int32)
+def sample_token(logits: jax.Array, key: jax.Array,
+                 temperature: Any = 0.0) -> jax.Array:
+    """logits (B, V) -> (B,) int32. temperature 0 = greedy.
+
+    A scalar temperature applies to every row; an array of shape (B,) samples
+    each row at its own temperature (0 rows decode greedily) — the mixed
+    temperature case a continuous batcher hits when requests with different
+    sampling settings share one decode step."""
+    if jnp.ndim(temperature) == 0:
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(key, logits / temperature,
+                                      axis=-1).astype(jnp.int32)
+    temps = jnp.asarray(temperature, logits.dtype)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    safe = jnp.where(temps > 0.0, temps, 1.0)
+    sampled = jax.random.categorical(key, logits / safe[:, None],
+                                     axis=-1).astype(jnp.int32)
+    return jnp.where(temps > 0.0, sampled, greedy)
 
 
 def generate(model: Model, run: RunConfig, params, batch: Dict, *,

@@ -117,6 +117,57 @@ def _final_regret(trace: Sequence[float], y_opt: float) -> float:
     return _regret(min(finite), y_opt)
 
 
+def _method_runs(make_pair, y_opt: float, *, methods: Sequence[str],
+                 seeds: Sequence[int], budget: int, n_source: int,
+                 n_target_init: int, use_env_query: bool = False,
+                 include_best_config: bool = False) -> Dict[str, Any]:
+    """The per-method x per-seed run records every sweep shares: one
+    ``transfer_tune`` per (method, seed) against a FRESH env pair from
+    ``make_pair(seed)`` (backends' noise RNGs are stateful, so sharing a
+    pair across methods would make results depend on run order), scored as
+    regret trajectories against ``y_opt``."""
+    per_method: Dict[str, Any] = {}
+    for method in methods:
+        runs = []
+        for seed in seeds:
+            src, tgt = make_pair(seed)
+            kw = {"query_text": tgt.query_text} if use_env_query else {}
+            res = transfer_tune(method, src, tgt, budget=budget,
+                                n_source=n_source,
+                                n_target_init=n_target_init, seed=seed,
+                                **kw)
+            trace = [float(y) for y in res.trace_best_y]
+            run = {
+                "seed": int(seed),
+                "best_y": (float(res.best_y)
+                           if np.isfinite(res.best_y) else None),
+                "final_regret": _final_regret(trace, y_opt),
+                "regret": [_regret(y, y_opt) for y in trace],
+                "best_y_trace": [float(y) if np.isfinite(y) else None
+                                 for y in trace],
+                "wall_s": float(res.wall_s),
+                "n_target_init": res.extras.get("n_target_init"),
+            }
+            if include_best_config:
+                run["best_config"] = res.best_config
+            runs.append(run)
+        per_method[method] = {
+            "runs": runs,
+            "mean_final_regret": float(np.mean(
+                [r["final_regret"] for r in runs])),
+        }
+    return per_method
+
+
+def _finalize_doc(meta: Dict[str, Any], cells: List[Dict[str, Any]],
+                  t_start: float) -> Dict[str, Any]:
+    """Common document epilogue: meta + cells + the CI gate + wall time."""
+    doc = {"meta": {**meta, "wall_s": None}, "cells": cells}
+    doc["gate"] = gate_summary(doc)
+    doc["meta"]["wall_s"] = round(time.time() - t_start, 2)
+    return doc
+
+
 def run_transfer_bench(
     *,
     cells: Sequence[BenchCell] = DEFAULT_CELLS,
@@ -134,59 +185,25 @@ def run_transfer_bench(
     for cell in cells:
         for shift in shifts:
             y_opt = target_optimum(cell, shift, pool=pool)
-            per_method: Dict[str, Any] = {}
-            for method in methods:
-                runs = []
-                for seed in seeds:
-                    # fresh env pair per (method, seed): the backends' noise
-                    # RNGs are stateful, so sharing one pair across methods
-                    # would make results depend on run order
-                    src, tgt = make_shifted_pair(cell, shift, seed=seed)
-                    res = transfer_tune(method, src, tgt, budget=budget,
-                                        n_source=n_source,
-                                        n_target_init=n_target_init,
-                                        seed=seed)
-                    trace = [float(y) for y in res.trace_best_y]
-                    runs.append({
-                        "seed": int(seed),
-                        "best_y": (float(res.best_y)
-                                   if np.isfinite(res.best_y) else None),
-                        "final_regret": _final_regret(trace, y_opt),
-                        "regret": [_regret(y, y_opt) for y in trace],
-                        "best_y_trace": [
-                            float(y) if np.isfinite(y) else None
-                            for y in trace],
-                        "wall_s": float(res.wall_s),
-                        "n_target_init": res.extras.get("n_target_init"),
-                    })
-                per_method[method] = {
-                    "runs": runs,
-                    "mean_final_regret": float(np.mean(
-                        [r["final_regret"] for r in runs])),
-                }
             out_cells.append({
                 "cell": cell.name,
                 "shift": shift,
                 "y_opt": y_opt,
-                "methods": per_method,
+                "methods": _method_runs(
+                    lambda seed: make_shifted_pair(cell, shift, seed=seed),
+                    y_opt, methods=methods, seeds=seeds, budget=budget,
+                    n_source=n_source, n_target_init=n_target_init),
             })
-    doc = {
-        "meta": {
-            "budget": int(budget),
-            "n_source": int(n_source),
-            "n_target_init": int(n_target_init),
-            "seeds": [int(s) for s in seeds],
-            "pool": int(pool),
-            "cells": [c.name for c in cells],
-            "shifts": list(shifts),
-            "methods": list(methods),
-            "wall_s": None,  # filled below
-        },
-        "cells": out_cells,
-    }
-    doc["gate"] = gate_summary(doc)
-    doc["meta"]["wall_s"] = round(time.time() - t_start, 2)
-    return doc
+    return _finalize_doc({
+        "budget": int(budget),
+        "n_source": int(n_source),
+        "n_target_init": int(n_target_init),
+        "seeds": [int(s) for s in seeds],
+        "pool": int(pool),
+        "cells": [c.name for c in cells],
+        "shifts": list(shifts),
+        "methods": list(methods),
+    }, out_cells, t_start)
 
 
 # --------------------------------------------------------------------------
@@ -295,62 +312,151 @@ def run_serving_bench(
         for target in targets:
             y_opt, y_default = serving_target_optimum(cell, target,
                                                       pool=pool)
-            per_method: Dict[str, Any] = {}
-            for method in methods:
-                runs = []
-                for seed in seeds:
-                    src, tgt = make_serving_bench_pair(cell, target,
-                                                       seed=seed)
-                    res = transfer_tune(method, src, tgt, budget=budget,
-                                        n_source=n_source,
-                                        n_target_init=n_target_init,
-                                        query_text=tgt.query_text,
-                                        seed=seed)
-                    trace = [float(y) for y in res.trace_best_y]
-                    runs.append({
-                        "seed": int(seed),
-                        "best_y": (float(res.best_y)
-                                   if np.isfinite(res.best_y) else None),
-                        "best_config": res.best_config,
-                        "final_regret": _final_regret(trace, y_opt),
-                        "regret": [_regret(y, y_opt) for y in trace],
-                        "best_y_trace": [
-                            float(y) if np.isfinite(y) else None
-                            for y in trace],
-                        "wall_s": float(res.wall_s),
-                        "n_target_init": res.extras.get("n_target_init"),
-                    })
-                per_method[method] = {
-                    "runs": runs,
-                    "mean_final_regret": float(np.mean(
-                        [r["final_regret"] for r in runs])),
-                }
             out_cells.append({
                 "cell": cell.name,
                 "source": cell.source,
                 "target": target,
                 "y_opt": y_opt,
                 "y_default": y_default,
-                "methods": per_method,
+                "methods": _method_runs(
+                    lambda seed: make_serving_bench_pair(cell, target,
+                                                         seed=seed),
+                    y_opt, methods=methods, seeds=seeds, budget=budget,
+                    n_source=n_source, n_target_init=n_target_init,
+                    use_env_query=True, include_best_config=True),
             })
-    doc = {
-        "meta": {
-            "budget": int(budget),
-            "n_source": int(n_source),
-            "n_target_init": int(n_target_init),
-            "seeds": [int(s) for s in seeds],
-            "pool": int(pool),
-            "cells": [c.name for c in cells],
-            "sources": [c.source for c in cells],
-            "targets": list(targets),
-            "methods": list(methods),
-            "wall_s": None,  # filled below
-        },
-        "cells": out_cells,
-    }
-    doc["gate"] = gate_summary(doc)
-    doc["meta"]["wall_s"] = round(time.time() - t_start, 2)
-    return doc
+    return _finalize_doc({
+        "budget": int(budget),
+        "n_source": int(n_source),
+        "n_target_init": int(n_target_init),
+        "seeds": [int(s) for s in seeds],
+        "pool": int(pool),
+        "cells": [c.name for c in cells],
+        "sources": [c.source for c in cells],
+        "targets": list(targets),
+        "methods": list(methods),
+    }, out_cells, t_start)
+
+
+# --------------------------------------------------------------------------
+# sim-to-real sweep: simulator source -> real-batcher replay target
+# --------------------------------------------------------------------------
+
+#: pinned tiny traces the sim2real smoke sweep replays — small enough that a
+#: real-batcher measurement (jit compile + replay) stays in CI budget
+DEFAULT_SIM2REAL_WORKLOADS: Tuple[str, ...] = (
+    "poisson:rate=1500,horizon=0.004,mean_prompt=6,mean_output=4,max_len=16",
+    ("bursty:rate=1500,burst=6,horizon=0.004,mean_prompt=6,mean_output=4,"
+     "max_len=16"),
+)
+
+
+@dataclass(frozen=True)
+class Sim2RealCell:
+    """One sim-to-real sweep point: a pinned trace replayed through the
+    default tiny deployment (``repro.envs.replay_env.default_replay_model``).
+    """
+
+    name: str
+    workload: str
+
+
+DEFAULT_SIM2REAL_CELLS: Tuple[Sim2RealCell, ...] = (
+    Sim2RealCell("tiny-poisson", DEFAULT_SIM2REAL_WORKLOADS[0]),
+    Sim2RealCell("tiny-bursty", DEFAULT_SIM2REAL_WORKLOADS[1]),
+)
+
+
+def sim2real_cell_by_name(name: str,
+                          cells: Sequence[Sim2RealCell] = DEFAULT_SIM2REAL_CELLS
+                          ) -> Sim2RealCell:
+    for c in cells:
+        if c.name == name:
+            return c
+    raise ValueError(f"unknown sim2real cell {name!r}; "
+                     f"known: {[c.name for c in cells]}")
+
+
+def make_sim2real_bench_pair(cell: Sim2RealCell, seed: int = 0,
+                             repeats: int = 3):
+    """(simulator source, replay target) for one cell over the pinned trace
+    realization (``BENCH_TRACE_SEED``, same convention as the serving
+    sweep).  ``seed`` varies the source's noise stream only — the deployment
+    (model weights, replay sampling) is part of the environment and stays
+    fixed, exactly like real hardware across tuning runs."""
+    from repro.envs.replay_env import make_sim2real_pair
+
+    return make_sim2real_pair(cell.workload, seed=seed,
+                              trace_seed=BENCH_TRACE_SEED, repeats=repeats)
+
+
+def sim2real_target_optimum(cell: Sim2RealCell, pool: int = 16,
+                            seed: int = 99, repeats: int = 3
+                            ) -> Tuple[float, Optional[float]]:
+    """(Y_opt, y_default) of the replay target over a random pool plus the
+    default configuration — each entry a real batcher replay, so pools stay
+    far smaller than the simulator sweeps'."""
+    _, tgt = make_sim2real_bench_pair(cell, seed=seed, repeats=repeats)
+    rng = np.random.default_rng(seed)
+    _, y_default = tgt.intervene(tgt.space.default_config())
+    best = y_default if np.isfinite(y_default) else np.inf
+    for cfg in tgt.space.sample(rng, pool):
+        _, y = tgt.intervene(cfg)
+        if np.isfinite(y) and y < best:
+            best = float(y)
+    if not np.isfinite(best):
+        raise RuntimeError(
+            f"no feasible configuration in a {pool}-sample pool for "
+            f"sim2real cell={cell.name}")
+    return best, (float(y_default) if np.isfinite(y_default) else None)
+
+
+def run_sim2real_bench(
+    *,
+    cells: Sequence[Sim2RealCell] = DEFAULT_SIM2REAL_CELLS,
+    methods: Sequence[str] = DEFAULT_METHODS,
+    budget: int = 6,
+    n_source: int = 32,
+    n_target_init: int = 2,
+    seeds: Sequence[int] = (0,),
+    pool: int = 16,
+    repeats: int = 3,
+) -> Dict[str, Any]:
+    """The sim-to-real sweep (cell x method); returns the
+    ``BENCH_sim2real.json`` document.  The source is the deterministic
+    serving simulator, the target is the real ``ContinuousBatcher`` replay —
+    regret is measured IN THE REPLAY ENVIRONMENT (wall-clock ms), so the
+    gate asserts that causal transfer survives the sim-to-real fidelity gap,
+    not just a second simulator.  Document shape mirrors the serving sweep
+    with a ``workload`` field per cell instead of ``source``/``target``."""
+    t_start = time.time()
+    out_cells: List[Dict[str, Any]] = []
+    for cell in cells:
+        y_opt, y_default = sim2real_target_optimum(cell, pool=pool,
+                                                   repeats=repeats)
+        out_cells.append({
+            "cell": cell.name,
+            "workload": cell.workload,
+            "y_opt": y_opt,
+            "y_default": y_default,
+            "methods": _method_runs(
+                lambda seed: make_sim2real_bench_pair(cell, seed=seed,
+                                                      repeats=repeats),
+                y_opt, methods=methods, seeds=seeds, budget=budget,
+                n_source=n_source, n_target_init=n_target_init,
+                use_env_query=True, include_best_config=True),
+        })
+    return _finalize_doc({
+        "budget": int(budget),
+        "n_source": int(n_source),
+        "n_target_init": int(n_target_init),
+        "seeds": [int(s) for s in seeds],
+        "pool": int(pool),
+        "repeats": int(repeats),
+        "cells": [c.name for c in cells],
+        "workloads": [c.workload for c in cells],
+        "methods": list(methods),
+    }, out_cells, t_start)
 
 
 def gate_summary(doc: Dict[str, Any], champion: str = "cameo",

@@ -254,12 +254,14 @@ class ServingSimulator:
                     else:
                         resident.append([idx, reqs[idx].output_len - 1])
             if resident:
-                ticks += 1
-                if ticks > self.max_ticks:
+                # >= mirrors ContinuousBatcher.run_until_drained: max_ticks
+                # decode ticks may run, the (max_ticks+1)-th is the stall
+                if ticks >= self.max_ticks:
                     raise DrainStall(
                         f"serving simulation exceeded {self.max_ticks} ticks "
                         f"({completed}/{n} requests completed)",
                         completed=completed, pending=n - completed)
+                ticks += 1
                 clock += decode_us
                 decode_total += decode_us
                 occ_sum += len(resident)
@@ -275,7 +277,11 @@ class ServingSimulator:
                         resident.remove(slot)
 
         makespan = max(clock - reqs[0].arrival_s * 1e6, 1e-9)
-        lat = done_latency
+        # guarded even though n >= 1 here: np.percentile/.mean on an empty
+        # array raise/NaN, and a zero-size latency vector must never escape
+        # as a poisoned report
+        lat = done_latency[:completed]
+        has_lat = lat.size > 0
         return SimReport(
             feasible=True, reason="", completed=n, ticks=ticks,
             makespan_us=makespan,
@@ -283,9 +289,10 @@ class ServingSimulator:
             queue_depth_max=qd_max,
             occupancy_mean=occ_sum / max(ticks, 1),
             prefill_us=prefill_total, decode_us=decode_total,
-            p50_latency_us=float(np.percentile(lat, 50)),
-            p99_latency_us=float(np.percentile(lat, 99)),
-            mean_latency_us=float(lat.mean()),
+            p50_latency_us=float(np.percentile(lat, 50)) if has_lat else 0.0,
+            p99_latency_us=float(np.percentile(lat, 99)) if has_lat else 0.0,
+            mean_latency_us=float(lat.mean()) if has_lat else 0.0,
             throughput_rps=n / (makespan * 1e-6),
             tokens_per_s=tokens / (makespan * 1e-6),
-            slo_violation_rate=float((lat > self.slo_us).mean()))
+            slo_violation_rate=(float((lat > self.slo_us).mean())
+                                if has_lat else 0.0))

@@ -1,0 +1,137 @@
+"""Trace replay through the real batcher: per-replay delta accounting on a
+reused batcher (the stale-state regression), single-request / all-rejected
+edge cases, and DrainStall progress reporting."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import tiny_model_config
+from repro.models.model import build_model
+from repro.serving.replay import (ReplayReport, default_ticks_per_s,
+                                  replay_trace, trace_requests)
+from repro.serving.scheduler import ContinuousBatcher, DrainStall
+from repro.utils.config import RunConfig, ShapeConfig
+from repro.workloads import Trace, RequestSpec, make_workload
+
+SPEC = ("poisson:rate=1500,horizon=0.004,mean_prompt=5,mean_output=3,"
+        "max_len=12")
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = tiny_model_config()
+    run = RunConfig(model=cfg, shape=ShapeConfig("s", 64, 4, "decode"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, run, model, params
+
+
+def _batcher(served, **kw):
+    cfg, run, model, params = served
+    kw.setdefault("num_slots", 2)
+    kw.setdefault("cache_len", 32)
+    return ContinuousBatcher(model, run, params, **kw)
+
+
+def _trace(spec=SPEC, seed=0):
+    return make_workload(spec).generate(seed)
+
+
+# --------------------------------------------------------------------------
+# the stale-state regression: a reused batcher must report per-replay deltas
+# --------------------------------------------------------------------------
+
+def test_replay_twice_on_one_batcher_reports_identical_deltas(served):
+    tr = _trace()
+    b = _batcher(served)
+    r1 = replay_trace(b, tr, seed=0)
+    r2 = replay_trace(b, tr, seed=0)
+    # lifetime state kept accumulating...
+    assert len(b.completed) == 2 * r1.completed
+    # ...but each report covers only its own replay: every deterministic
+    # field is identical (wall-clock fields naturally vary)
+    for f in ("completed", "rejected", "ticks", "tokens", "mean_occupancy",
+              "queue_depth_mean", "queue_depth_max"):
+        assert getattr(r1, f) == getattr(r2, f), f
+    assert r1.completed == len(tr) and r1.completed > 0
+    assert r1.p99_latency_ms > 0 and r2.p99_latency_ms > 0
+    assert len(r2.latencies_ms) == r2.completed
+
+
+def test_replay_wall_counters_are_per_replay(served):
+    tr = _trace()
+    b = _batcher(served)
+    r1 = replay_trace(b, tr, seed=0)
+    r2 = replay_trace(b, tr, seed=0)
+    # prefill/decode wall-time split diffs the batcher's lifetime counters;
+    # the second replay must not include the first's compile-heavy prefills
+    assert 0 < r2.prefill_s <= b.prefill_s - r1.prefill_s + 1e-9
+    assert 0 < r2.decode_s <= b.decode_s - r1.decode_s + 1e-9
+    assert r2.prefill_decode_ratio > 0
+    assert r2.throughput_rps == pytest.approx(
+        r2.completed / r2.wall_s, rel=1e-6)
+
+
+# --------------------------------------------------------------------------
+# edge cases
+# --------------------------------------------------------------------------
+
+def test_single_request_trace_zero_span(served):
+    tr = Trace("k", "k", 0, (RequestSpec(0, 0.0, 4, 3),))
+    assert tr.span_s == 0.0
+    # span 0 drives default_ticks_per_s through the 1e-9 clamp: a huge but
+    # finite rate that still maps the single arrival to tick 0
+    assert np.isfinite(default_ticks_per_s(tr, 2))
+    rep = replay_trace(_batcher(served), tr, seed=0)
+    assert rep.completed == 1 and rep.rejected == 0
+    assert rep.tokens == 3
+    assert rep.p99_latency_ms > 0
+
+
+def test_all_requests_rejected_empty_latencies(served):
+    # every request overflows prompt+output > cache_len -> nothing replays,
+    # and the empty latency vector must not NaN the percentiles
+    tr = Trace("k", "k", 0, (RequestSpec(0, 0.0, 40, 3),
+                             RequestSpec(1, 0.001, 41, 2)))
+    b = _batcher(served, cache_len=32)
+    rep = replay_trace(b, tr, seed=0)
+    assert rep.completed == 0 and rep.rejected == 2
+    assert rep.ticks == 0 and rep.tokens == 0
+    assert rep.p50_latency_ms == rep.p99_latency_ms == 0.0
+    assert rep.rejected_rate == 1.0
+    assert rep.latencies_ms == ()
+    assert not any(np.isnan(v) for v in rep.counters().values())
+
+
+def test_trace_requests_drops_only_oversized(served):
+    tr = Trace("k", "k", 0, (RequestSpec(0, 0.0, 4, 3),
+                             RequestSpec(1, 0.001, 40, 3)))
+    reqs = trace_requests(tr, vocab_size=64, cache_len=32)
+    assert [r.uid for r in reqs] == [0]
+    assert reqs[0].max_new_tokens == 3
+
+
+def test_drain_stall_counts_only_this_replay(served):
+    tr = _trace()
+    b = _batcher(served)
+    first = replay_trace(b, tr, seed=0)     # leaves completed history
+    assert first.completed == len(tr)
+    with pytest.raises(DrainStall) as e:
+        replay_trace(b, tr, seed=0, max_ticks=1)
+    # progress counters cover the stalled replay, not the batcher lifetime
+    assert e.value.completed < len(tr)
+    assert e.value.completed + e.value.pending >= len(tr)
+    assert e.value.pending > 0
+
+
+def test_replay_report_slo_violation_rate():
+    rep = ReplayReport(completed=3, rejected=0, ticks=3, wall_s=1.0,
+                       tokens=9, mean_occupancy=1.0, p50_latency_ms=20.0,
+                       p99_latency_ms=30.0, latencies_ms=(10.0, 20.0, 30.0))
+    assert rep.slo_violation_rate(15.0) == pytest.approx(2 / 3)
+    assert rep.slo_violation_rate(100.0) == 0.0
+    assert rep.counters(15.0)["slo_violation_rate"] == pytest.approx(2 / 3)
+    assert {"latency", "throughput", "rejected_rate"} <= set(rep.counters())

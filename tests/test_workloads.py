@@ -257,6 +257,25 @@ def test_sim_tick_budget_raises_drain_stall():
     assert e.value.pending > 0
 
 
+def test_sim_tick_budget_counts_like_run_until_drained():
+    # >= semantics, matching ContinuousBatcher.run_until_drained: a budget
+    # of exactly the ticks the trace needs succeeds; one less is a stall
+    tr = _trace()
+    need = _sim().run(tr, ServingPlan(), {}).ticks
+    assert _sim(max_ticks=need).run(tr, ServingPlan(), {}).ticks == need
+    with pytest.raises(DrainStall):
+        _sim(max_ticks=need - 1).run(tr, ServingPlan(), {})
+
+
+def test_sim_latency_stats_guarded():
+    # empty-trace rejection is owned by test_sim_empty_trace_rejected; here:
+    # the latency statistics of a completed run are always finite
+    rep = _sim().run(_trace(), ServingPlan(), {})
+    for v in (rep.p50_latency_us, rep.p99_latency_us, rep.mean_latency_us,
+              rep.slo_violation_rate):
+        assert np.isfinite(v)
+
+
 def test_sim_empty_trace_rejected():
     with pytest.raises(ValueError, match="empty trace"):
         _sim().run(Trace("k", "k", 0, ()), ServingPlan(), {})
