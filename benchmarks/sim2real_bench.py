@@ -57,6 +57,15 @@ def main(argv=None) -> int:
     ap.add_argument("--methods", default=None,
                     help="comma-separated tuner names (cameo, random, smac, "
                          "restune, restune-w/o-ml, cello, unicorn)")
+    ap.add_argument("--query-batch", type=int, default=1,
+                    help="measurements per ask/tell round — replay targets "
+                         "share one warmed deployment per compile key "
+                         "within a round (1 = the historical sequential "
+                         "loop)")
+    ap.add_argument("--rounds-out", default=None,
+                    help="also write a per-round timing artifact (one "
+                         "record per cell x method x seed x round) to this "
+                         "path")
     ap.add_argument("--out", default="BENCH_sim2real.json")
     args = ap.parse_args(argv)
 
@@ -94,9 +103,24 @@ def main(argv=None) -> int:
     doc = run_sim2real_bench(cells=cells, methods=methods, budget=budget,
                              n_source=n_source,
                              n_target_init=n_target_init, seeds=seeds,
-                             pool=pool, repeats=repeats)
+                             pool=pool, repeats=repeats,
+                             query_batch=args.query_batch)
     with open(args.out, "w") as f:
         json.dump(doc, f, indent=2)
+
+    if args.rounds_out:
+        rounds = [{"cell": cell["cell"], "method": method,
+                   "seed": run["seed"], "round": i,
+                   "size": rec["size"], "wall_s": rec["wall_s"]}
+                  for cell in doc["cells"]
+                  for method, stats in cell["methods"].items()
+                  for run in stats["runs"]
+                  for i, rec in enumerate(run.get("rounds") or [])]
+        with open(args.rounds_out, "w") as f:
+            json.dump({"query_batch": args.query_batch,
+                       "rounds": rounds}, f, indent=2)
+        print(f"[sim2real_bench] wrote {args.rounds_out} "
+              f"({len(rounds)} round records)")
 
     for cell in doc["cells"]:
         dflt = cell["y_default"]

@@ -43,6 +43,9 @@ def main(argv=None) -> int:
     ap.add_argument("--methods", default=None,
                     help="comma-separated tuner names (cameo, random, smac, "
                          "restune, restune-w/o-ml, cello, unicorn)")
+    ap.add_argument("--query-batch", type=int, default=1,
+                    help="measurements per ask/tell round (1 = the "
+                         "historical sequential loop)")
     ap.add_argument("--out", default="BENCH_transfer.json")
     args = ap.parse_args(argv)
 
@@ -77,7 +80,7 @@ def main(argv=None) -> int:
     doc = run_transfer_bench(cells=cells, shifts=shifts, methods=methods,
                              budget=budget, n_source=n_source,
                              n_target_init=n_target_init, seeds=seeds,
-                             pool=pool)
+                             pool=pool, query_batch=args.query_batch)
     with open(args.out, "w") as f:
         json.dump(doc, f, indent=2)
 

@@ -1,0 +1,94 @@
+"""Batched ask/tell tuning — q-batch proposal through batched replay.
+
+Same sim-to-real loop as ``examples/sim2real.py``, but driven explicitly
+through the round-structured interface ``Cameo.run`` wraps:
+``Cameo.ask(k)`` proposes a diverse batch of k candidates (acquisition
+argmax as the anchor, later slots repelled in the reduced causal
+subspace but pinned to the anchor's compile key),
+``ReplayServingEnv.intervene_batch`` measures them against one warmed
+deployment per compile-key group, and one ``tell`` refreshes the
+surrogate per round.  The budget counts measurements, so k=1 is the
+historical sequential loop and larger k trades surrogate freshness for
+wall-clock — on the replay environment the win is large because the
+expensive part is per-(cache_len, launch) jit compilation, not the
+replay itself.
+
+    PYTHONPATH=src python examples/batched_tuning.py
+    PYTHONPATH=src python examples/batched_tuning.py --query-batch 2 \
+        --workload "bursty:rate=1500,burst=6,horizon=0.004"
+"""
+
+import argparse
+import time
+
+from repro.core.cameo import Cameo
+from repro.core.query import parse_query
+from repro.envs.replay_env import ReplayServingEnv, make_sim2real_pair
+
+DEFAULT_WORKLOAD = ("poisson:rate=1500,horizon=0.004,mean_prompt=6,"
+                    "mean_output=4,max_len=16")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", default=DEFAULT_WORKLOAD)
+    ap.add_argument("--budget", type=int, default=8,
+                    help="real-replay intervention budget (measurements, "
+                         "not rounds)")
+    ap.add_argument("--query-batch", type=int, default=4, metavar="K",
+                    help="proposals measured per ask/tell round")
+    ap.add_argument("--n-source", type=int, default=32,
+                    help="cheap simulator observations")
+    args = ap.parse_args()
+
+    src, tgt = make_sim2real_pair(args.workload, seed=0, repeats=3)
+    print(f"trace: {len(tgt.trace)} requests ({tgt.workload_spec})")
+    print(f"compile-key dims (shared within a batch group): "
+          f"{list(tgt.batch_share_dims)}")
+
+    d_obs = src.dataset(args.n_source, seed=1)
+    d_init = tgt.dataset(2, seed=2, query_batch=args.query_batch)
+    query = parse_query(tgt.query_text.format(budget=args.budget))
+    cam = Cameo(tgt.space, query, d_obs,
+                counter_names=src.counter_names, seed=0)
+    cam.seed_target(d_init)
+
+    spent = 0
+    while spent < args.budget:
+        k = min(args.query_batch, args.budget - spent)
+        t0 = time.perf_counter()
+        props = cam.ask(k, share_dims=tgt.batch_share_dims)
+        configs, counters, ys, actions = [], [], [], []
+        pending = []
+        for p in props:
+            if p.kind == "observe":
+                cfg, cnt, y = tgt.observe(cam.rng)
+                configs.append(cfg)
+                counters.append(cnt)
+                ys.append(y)
+                actions.append("observe")
+            else:
+                pending.append(p.config)
+        for cfg, (cnt, y) in zip(pending, tgt.intervene_batch(pending)):
+            configs.append(cfg)
+            counters.append(cnt)
+            ys.append(y)
+            actions.append("intervene")
+        cam.tell(configs, counters, ys, actions)
+        spent += len(props)
+        wall = time.perf_counter() - t0
+        ys_s = ", ".join("inf" if y != y or y == float("inf")
+                         else f"{y:.1f}" for y in ys)
+        print(f"round of {len(props)}: [{ys_s}] ms in {wall:.1f}s "
+              f"({len(props) - len(pending)} observed, "
+              f"{len(pending)} replayed)")
+
+    best_cfg, best_y = cam.best
+    plan = ReplayServingEnv.plan_of(best_cfg or {})
+    print(f"\nbest replayed p99: {best_y:.1f} ms wall")
+    print(f"  plan: slots={plan.num_slots} admit={plan.admit_chunk} "
+          f"cache={plan.cache_len} interleave={plan.interleave}")
+
+
+if __name__ == "__main__":
+    main()

@@ -25,6 +25,7 @@ shared through the environment/query, as in the paper).
 from __future__ import annotations
 
 import math
+import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -80,11 +81,24 @@ class BaseTuner:
     def _score(self, xq: np.ndarray, best: float) -> np.ndarray:
         raise NotImplementedError
 
-    # -- shared loop --------------------------------------------------------
+    # -- shared ask/tell loop ---------------------------------------------
 
-    def propose(self) -> Dict:
+    def _config_key(self, config: Dict) -> tuple:
+        return tuple(config.get(o.name, o.default)
+                     for o in self.space.options)
+
+    def ask(self, k: int = 1) -> List[Dict]:
+        """Propose a q-batch of ``k`` configurations for one round.
+
+        ``ask(1)`` is the historical :meth:`propose` exactly (same RNG
+        stream, same argmax winner).  For ``k > 1`` the surrogate is fit
+        ONCE and the candidate pool scored ONCE; the round is the top-k
+        distinct candidates by acquisition — the measurements are where
+        baselines pay, not proposal diversity, so a simple truncated
+        ranking is the faithful batched analogue of their greedy argmax.
+        """
         if len(self.ys) < self.init_random:
-            return self.space.sample(self.rng, 1)[0]
+            return self.space.sample(self.rng, k)
         x = np.stack([self.space.encode(c) for c in self.xs])
         y = _clean(np.asarray(self.ys))
         self._fit(x, y)
@@ -93,22 +107,59 @@ class BaseTuner:
             i = int(np.argmin(_clean(np.asarray(self.ys))))
             cands.extend(self.space.neighbors(self.xs[i], self.rng, 16))
         xq = np.stack([self.space.encode(c) for c in cands])
-        scores = self._score(xq, _finite_best(np.asarray(self.ys)))
-        return cands[int(np.argmax(scores))]
+        scores = np.asarray(
+            self._score(xq, _finite_best(np.asarray(self.ys))))
+        # stable descending sort: the top-1 is np.argmax's first-max winner,
+        # preserving k=1 parity with the historical propose()
+        order = np.argsort(-scores, kind="stable")
+        picks: List[Dict] = []
+        seen = set()
+        for idx in order:
+            key = self._config_key(cands[int(idx)])
+            if key in seen:
+                continue
+            seen.add(key)
+            picks.append(cands[int(idx)])
+            if len(picks) >= k:
+                break
+        return picks
+
+    def propose(self) -> Dict:
+        return self.ask(1)[0]
 
     def update(self, config: Dict, counters: Dict, y: float) -> None:
         self.xs.append(dict(config))
         self.ys.append(float(y))
 
-    def run(self, env, budget: float) -> Tuple[Dict, float]:
+    def tell(self, configs: Sequence[Dict], counters: Sequence[Dict],
+             ys: Sequence[float]) -> None:
+        """Absorb one round of measurements (the batched dual of ask)."""
+        for cfg, cnt, y in zip(configs, counters, ys):
+            self.update(cfg, cnt, y)
+
+    def run(self, env, budget: float, query_batch: int = 1,
+            round_log: Optional[List[Dict[str, Any]]] = None
+            ) -> Tuple[Dict, float]:
         spent = 0.0
         while spent < budget:
-            cfg = self.propose()
-            counters, y = env.intervene(cfg)
-            self.update(cfg, counters, y)
-            spent += 1.0
-            self.trace.best_y.append(_finite_best(np.asarray(self.ys)))
-            self.trace.spent.append(spent)
+            k = min(max(int(query_batch), 1),
+                    max(int(math.ceil(budget - spent)), 1))
+            t0 = time.perf_counter()
+            cfgs = self.ask(k)
+            if len(cfgs) > 1 and hasattr(env, "intervene_batch"):
+                results = env.intervene_batch(cfgs)
+            else:
+                results = [env.intervene(c) for c in cfgs]
+            for cfg, (counters, y) in zip(cfgs, results):
+                self.update(cfg, counters, y)
+                spent += 1.0
+                self.trace.best_y.append(_finite_best(np.asarray(self.ys)))
+                self.trace.spent.append(spent)
+            if round_log is not None:
+                round_log.append({
+                    "size": len(cfgs),
+                    "actions": ["intervene"] * len(cfgs),
+                    "wall_s": round(time.perf_counter() - t0, 4)})
         return self.best
 
     @property
@@ -123,8 +174,8 @@ class BaseTuner:
 class RandomSearch(BaseTuner):
     name = "random"
 
-    def propose(self) -> Dict:
-        return self.space.sample(self.rng, 1)[0]
+    def ask(self, k: int = 1) -> List[Dict]:
+        return self.space.sample(self.rng, k)
 
 
 class SMAC(BaseTuner):
@@ -206,9 +257,17 @@ class Cello(ResTuneWoML):
         self.terminate_z = terminate_z
         self.partial_cost = partial_cost
 
-    def run(self, env, budget: float) -> Tuple[Dict, float]:
+    def run(self, env, budget: float, query_batch: int = 1,
+            round_log: Optional[List[Dict[str, Any]]] = None
+            ) -> Tuple[Dict, float]:
+        if query_batch > 1:
+            # early termination is a per-measurement (sequential) mechanism:
+            # the surrogate must see each result before pricing the next.
+            # Batched rounds fall back to plain GP-BO at full cost.
+            return super().run(env, budget, query_batch, round_log)
         spent = 0.0
         while spent < budget:
+            t0 = time.perf_counter()
             cfg = self.propose()
             cost = 1.0
             if len(self.ys) >= self.init_random:
@@ -227,12 +286,20 @@ class Cello(ResTuneWoML):
                     spent += self.partial_cost
                     self.trace.best_y.append(_finite_best(np.asarray(self.ys)))
                     self.trace.spent.append(spent)
+                    if round_log is not None:
+                        round_log.append({
+                            "size": 1, "actions": ["intervene"],
+                            "wall_s": round(time.perf_counter() - t0, 4)})
                     continue
             counters, yy = env.intervene(cfg)
             self.update(cfg, counters, yy)
             spent += cost
             self.trace.best_y.append(_finite_best(np.asarray(self.ys)))
             self.trace.spent.append(spent)
+            if round_log is not None:
+                round_log.append({
+                    "size": 1, "actions": ["intervene"],
+                    "wall_s": round(time.perf_counter() - t0, 4)})
         return self.best
 
 

@@ -96,6 +96,20 @@ class CameoTrace:
     g_t_edges: List[int] = field(default_factory=list)
 
 
+@dataclass(frozen=True)
+class Proposal:
+    """One slot of a q-batch round.
+
+    ``kind`` is ``"observe"`` (resolve against the environment's
+    observational pool) or ``"intervene"`` (measure ``config``).  Observe
+    proposals carry no config — the pool draw happens at resolution time so
+    the tuner's RNG stream stays identical to the sequential loop's.
+    """
+
+    kind: str
+    config: Optional[Dict[str, Any]] = None
+
+
 class Cameo:
     """Causal multi-environment optimizer (Algorithm 1)."""
 
@@ -173,10 +187,29 @@ class Cameo:
             self.d_t.add(c, cnt, y)
         self._refresh_graph_t()
 
-    def run(self, env, budget: int) -> Tuple[Dict, float]:
-        """The active loop (lines 5-21). env: repro.envs.base.PerfEnv."""
-        for _ in range(budget):
-            self.step(env)
+    def run(self, env, budget: int, query_batch: int = 1,
+            round_log: Optional[List[Dict[str, Any]]] = None
+            ) -> Tuple[Dict, float]:
+        """The active loop (lines 5-21). env: repro.envs.base.PerfEnv.
+
+        ``query_batch`` restructures the budget as rounds of up to k
+        measurements each: one ``ask(k)`` proposal, one (batched)
+        measurement, one ``tell``.  ``query_batch=1`` reproduces the
+        sequential loop exactly — same RNG stream, same trajectory.
+        ``round_log``, when given, receives one ``{"size", "actions",
+        "wall_s"}`` record per round."""
+        share_dims = getattr(env, "batch_share_dims", None)
+        spent = 0
+        while spent < budget:
+            k = min(max(int(query_batch), 1), budget - spent)
+            t0 = time.perf_counter()
+            actions = self._round(env, k, share_dims=share_dims)
+            if round_log is not None:
+                round_log.append({"size": len(actions),
+                                  "actions": list(actions),
+                                  "wall_s": round(time.perf_counter() - t0,
+                                                  4)})
+            spent += len(actions)
         cfg, y = self.best
         return cfg or self.space.default_config(), y
 
@@ -221,27 +254,53 @@ class Cameo:
         self._fitted_at = len(self.d_t)
 
     def step(self, env) -> str:
-        """One round; returns the action taken ('observe' | 'intervene')."""
+        """One sequential round (one measurement); returns the action taken
+        ('observe' | 'intervene').  Implemented as an ``ask(1)``/``tell``
+        round — bit-identical to the historical sequential loop."""
+        return self._round(env, 1)[0]
+
+    # --------------------------------------------------------- ask / tell
+
+    def ask(self, k: int = 1, *, allow_observe: bool = True,
+            share_dims: Optional[Sequence[str]] = None) -> List[Proposal]:
+        """Propose a q-batch of ``k`` slots (lines 6-16, batched).
+
+        Per-slot ε-greedy mixing decides observe-vs-intervene for each slot
+        (eq. 8, one ``u`` draw per slot); all intervene slots are then
+        filled from ONE scored candidate set: the first pick is the
+        acquisition argmax (identical to the sequential loop, so ``k=1``
+        reproduces it exactly), later picks maximize acquisition × a
+        repulsion penalty in the reduced causal subspace while holding the
+        non-reduced dims at the anchor's values — dims outside the reduced
+        space carry no causal effect under the transferred model, so pinning
+        them costs nothing in expectation and lets batched environments
+        share expensive measurement infrastructure (one compiled deployment
+        serves the whole round).  ``share_dims`` (usually the environment's
+        ``batch_share_dims``) additionally discounts candidates that would
+        open another expensive measurement group within the round.
+        """
+        k = max(int(k), 1)
         if len(self.d_t) < 2:
             # cold start: must intervene to have any target signal
-            cfg = self.space.sample(self.rng, 1)[0]
-            self._measure(env, cfg)
-            return "intervene"
+            return [Proposal("intervene", c)
+                    for c in self.space.sample(self.rng, k)]
 
         t0 = time.perf_counter()
         if self._warm is None or self._fitted_at != len(self.d_t):
             self._fit_surrogates()
         self.trace.model_update_s.append(time.perf_counter() - t0)
 
-        # -- ε-greedy observation / intervention (eq. 8) --------------------
+        # -- ε-greedy observation / intervention (eq. 8), per slot ----------
         x_t = np.stack([self.space.encode(c) for c in self.d_t.configs])
         eps = observation_epsilon(x_t, len(self.d_t), self.n_max_obs)
-        u = float(self.rng.random())
-        if eps > u and hasattr(env, "observe"):
-            cfg, counters, y = env.observe(self.rng)
-            self.d_t.add(cfg, counters, self._maybe_constrain(counters, y))
-            self._post_round("observe")
-            return "observe"
+        kinds = []
+        for _ in range(k):
+            u = float(self.rng.random())
+            kinds.append("observe" if (eps > u and allow_observe)
+                         else "intervene")
+        n_int = sum(1 for kd in kinds if kd == "intervene")
+        if n_int == 0:
+            return [Proposal("observe") for _ in kinds]
 
         # -- intervention via the λ-combined acquisition -------------------
         t1 = time.perf_counter()
@@ -252,8 +311,8 @@ class Cameo:
         # source incumbents: the warm model's strongest transfer signal
         ys_s = np.asarray(self.d_s.ys) * self._sign
         for i in np.argsort(np.where(np.isfinite(ys_s), ys_s, np.inf))[:5]:
-            cands.append({k: v for k, v in self.d_s.configs[int(i)].items()
-                          if k in self.space.by_name})
+            cands.append({k2: v for k2, v in self.d_s.configs[int(i)].items()
+                          if k2 in self.space.by_name})
             cands.extend(self.space.neighbors(cands[-1], self.rng, 3))
         # never re-intervene on a configuration already measured infeasible
         infeasible = {self._key(c) for c, y in zip(self.d_t.configs,
@@ -265,28 +324,180 @@ class Cameo:
                     and self._key(c) not in measured]
         if filtered:
             cands = filtered
+        alpha, lam = self._score(cands)
+        self.trace.lam_fraction.append(float(lam.mean()))
+        picks = self._select_batch(cands, alpha, n_int,
+                                   measured | infeasible, share_dims)
+        self.trace.recommend_s.append(time.perf_counter() - t1)
+
+        out: List[Proposal] = []
+        it = iter(picks)
+        for kd in kinds:
+            out.append(Proposal("observe") if kd == "observe"
+                       else Proposal("intervene", next(it)))
+        return out
+
+    def tell(self, configs: Sequence[Dict], counters: Sequence[Dict],
+             ys: Sequence[float], actions: Optional[Sequence[str]] = None,
+             *, record: bool = True) -> None:
+        """Ingest one round of measurements: constraint handling per point,
+        trace bookkeeping per point, and ONE causal-graph / reduced-space
+        refresh per round — fired iff the round crossed a
+        ``rediscover_every`` boundary, which at ``k=1`` is exactly the
+        sequential per-point schedule.  (Surrogates refresh lazily on the
+        next ``ask``, also once per round.)  ``record=False`` skips trace
+        and rediscovery bookkeeping — the cold-start convention of the
+        sequential loop."""
+        actions = (list(actions) if actions is not None
+                   else ["intervene"] * len(configs))
+        n0 = len(self.d_t)
+        for cfg, cnt, y, act in zip(configs, counters, ys, actions):
+            self.d_t.add(cfg, cnt, self._maybe_constrain(cnt, y))
+            if record:
+                self.trace.action.append(act)
+                _, best_y = self.best
+                self.trace.best_y.append(best_y)
+        if record and (len(self.d_t) // self.rediscover_every
+                       > n0 // self.rediscover_every):
+            self._refresh_graph_t()
+            # refresh the reduced space with target evidence: union of the
+            # source blanket and any new strong target-side effects
+            if self.g_t is not None:
+                data_t, names_t = self.d_t.matrix(
+                    self.space, self.counter_names,
+                    maximize=self.query.maximize)
+                ranked_t = rank_by_ace(data_t, names_t, "__objective__",
+                                       self.g_t)
+                extra = [n for n, v in ranked_t[:self.k]
+                         if n in self.space.by_name
+                         and n not in self.reduced_names]
+                self.reduced_names.extend(extra)
+
+    def _round(self, env, k: int,
+               share_dims: Optional[Sequence[str]] = None) -> List[str]:
+        """One ask → measure → tell round; returns the actions taken."""
+        cold = len(self.d_t) < 2
+        props = self.ask(k, allow_observe=hasattr(env, "observe"),
+                         share_dims=share_dims)
+        configs: List[Dict] = []
+        counters: List[Dict] = []
+        ys: List[float] = []
+        actions: List[str] = []
+        pending: List[Dict] = []
+        for p in props:
+            if p.kind == "observe":
+                cfg, cnt, y = env.observe(self.rng)
+                configs.append(cfg)
+                counters.append(cnt)
+                ys.append(y)
+                actions.append("observe")
+            else:
+                pending.append(p.config)
+        if pending:
+            if len(pending) > 1 and hasattr(env, "intervene_batch"):
+                results = env.intervene_batch(pending)
+            else:
+                results = [env.intervene(c) for c in pending]
+            for cfg, (cnt, y) in zip(pending, results):
+                configs.append(cfg)
+                counters.append(cnt)
+                ys.append(y)
+                actions.append("intervene")
+        self.tell(configs, counters, ys, actions, record=not cold)
+        return actions
+
+    # ---------------------------------------------- acquisition / selection
+
+    def _score(self, cands: Sequence[Dict]) -> Tuple[np.ndarray, np.ndarray]:
+        """λ-combined acquisition over ``cands`` (eqs. 5-7); deterministic —
+        consumes no RNG, so re-scoring projected pools is parity-safe."""
         mu_w, sd_w = self._warm.predict(cands)
         mu_c, sd_c = self._cold.predict(cands)
         finite = self._ys_internal()[np.isfinite(self._ys_internal())]
         best_internal = float(np.min(finite)) if len(finite) else 0.0
         ei_w = expected_improvement(mu_w, sd_w, self._warm.best_observed)
         ei_c = expected_improvement(mu_c, sd_c, best_internal)
-        alpha, lam = combined_acquisition(ei_w, ei_c, self.l_alpha)
-        pick = int(np.argmax(alpha))
-        self.trace.lam_fraction.append(float(lam.mean()))
-        self.trace.recommend_s.append(time.perf_counter() - t1)
+        return combined_acquisition(ei_w, ei_c, self.l_alpha)
 
-        self._measure(env, cands[pick])
-        self._post_round("intervene")
-        return "intervene"
+    #: repulsion lengthscale in the normalized reduced subspace, and the
+    #: acquisition discount for opening another expensive measurement group
+    #: (``share_dims``) within one round
+    batch_repulsion_ell = 0.25
+    batch_new_group_discount = 0.25
+
+    def _select_batch(self, cands: Sequence[Dict], alpha: np.ndarray,
+                      n: int, taken_keys: Set[tuple],
+                      share_dims: Optional[Sequence[str]] = None
+                      ) -> List[Dict]:
+        """Diverse top-``n``: anchor = argmax acquisition (the sequential
+        pick), then greedy repulsion-penalized picks over the candidate set
+        PROJECTED onto the anchor's non-reduced dims."""
+        first = int(np.argmax(alpha))
+        anchor = {nm: cands[first].get(nm, self.space.by_name[nm].default)
+                  for nm in self.space.names}
+        picked = [anchor]
+        if n == 1:
+            return picked
+
+        reduced = [nm for nm in self.space.names if nm in self.reduced_names]
+        if not reduced:
+            reduced = list(self.space.names)
+        other = [nm for nm in self.space.names if nm not in reduced]
+        seen = set(taken_keys)
+        seen.add(self._key(anchor))
+        pool: List[Dict] = []
+        for c in cands:
+            pc = {nm: c.get(nm, self.space.by_name[nm].default)
+                  for nm in self.space.names}
+            for nm in other:
+                pc[nm] = anchor[nm]
+            key = self._key(pc)
+            if key in seen:
+                continue
+            seen.add(key)
+            pool.append(pc)
+        if not pool:
+            return picked
+
+        alpha_p, _ = self._score(pool)
+        alpha_p = np.maximum(np.asarray(alpha_p, np.float64), 1e-300)
+        idx = [self.space.names.index(nm) for nm in reduced]
+        xr = np.stack([self.space.encode(c) for c in pool])[:, idx]
+        picked_x = [self.space.encode(anchor)[idx]]
+
+        share = [nm for nm in (share_dims or ()) if nm in self.space.by_name]
+
+        def group_key(cfg: Dict) -> tuple:
+            return tuple(cfg[nm] for nm in share)
+
+        open_groups = {group_key(anchor)} if share else set()
+        alive = np.ones(len(pool), bool)
+        ell2 = 2.0 * self.batch_repulsion_ell ** 2
+        for _ in range(n - 1):
+            if not alive.any():
+                break
+            pen = np.ones(len(pool))
+            for px in picked_x:
+                d2 = ((xr - px) ** 2).mean(axis=1)
+                pen *= 1.0 - np.exp(-d2 / ell2)
+            score = alpha_p * np.maximum(pen, 1e-12)
+            if share:
+                fresh = np.asarray([group_key(c) not in open_groups
+                                    for c in pool])
+                score = score * np.where(fresh,
+                                         self.batch_new_group_discount, 1.0)
+            score = np.where(alive, score, -np.inf)
+            j = int(np.argmax(score))
+            picked.append(pool[j])
+            picked_x.append(xr[j])
+            alive[j] = False
+            if share:
+                open_groups.add(group_key(pool[j]))
+        return picked
 
     def _key(self, cfg: Dict) -> tuple:
         return tuple(cfg.get(n, self.space.by_name[n].default)
                      for n in self.space.names)
-
-    def _measure(self, env, cfg: Dict) -> None:
-        counters, y = env.intervene(cfg)
-        self.d_t.add(cfg, counters, self._maybe_constrain(counters, y))
 
     def _maybe_constrain(self, counters: Dict[str, float], y: float) -> float:
         """Constraint handling (lines 17-19): infeasible -> ∞ (internal)."""
@@ -295,20 +506,3 @@ class Cameo:
         if not self.query.satisfies(metrics):
             return float("inf") * (self._sign)
         return y
-
-    def _post_round(self, action: str) -> None:
-        self.trace.action.append(action)
-        _, best_y = self.best
-        self.trace.best_y.append(best_y)
-        if len(self.d_t) % self.rediscover_every == 0:
-            self._refresh_graph_t()
-            # refresh the reduced space with target evidence: union of the
-            # source blanket and any new strong target-side effects
-            if self.g_t is not None:
-                data_t, names_t = self.d_t.matrix(
-                    self.space, self.counter_names,
-                    maximize=self.query.maximize)
-                ranked_t = rank_by_ace(data_t, names_t, "__objective__", self.g_t)
-                extra = [n for n, v in ranked_t[:self.k]
-                         if n in self.space.by_name and n not in self.reduced_names]
-                self.reduced_names.extend(extra)

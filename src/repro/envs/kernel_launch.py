@@ -91,6 +91,18 @@ class KernelLaunchEnv(PooledEnv):
     def _measure(self, config: Dict[str, Any]) -> Tuple[Dict[str, float], float]:
         return self.backend.measure(config)
 
+    def intervene_batch(self, configs):
+        """Route a q-batch through the backend's ``measure_batch`` when it
+        has one (vectorized noise for analytic, shared jit cache + shared
+        timings for wallclock); otherwise the sequential default."""
+        batch = getattr(self.backend, "measure_batch", None)
+        if batch is None:
+            return super().intervene_batch(configs)
+        results = batch(list(configs))
+        for cfg, (counters, y) in zip(configs, results):
+            self._remember(cfg, counters, y)
+        return results
+
     # -- deployment -----------------------------------------------------
 
     def apply(self, config: Dict[str, Any]):

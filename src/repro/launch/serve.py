@@ -46,7 +46,7 @@ from repro.utils.config import MeshConfig, RunConfig, ShapeConfig
 def serve_workload(model, run, params, workload_spec: str, *,
                    tune_budget: int = 0, seed: int = 0,
                    ticks_per_s=None, method: str = "cameo",
-                   sim2real_eval: bool = False):
+                   query_batch: int = 1, sim2real_eval: bool = False):
     """Trace-driven serving: generate the trace, optionally transfer-tune
     the serving stack against it in the simulator, then replay it through
     the real ``ContinuousBatcher`` under the tuned plan.  Returns
@@ -72,7 +72,8 @@ def serve_workload(model, run, params, workload_spec: str, *,
     plan = ServingPlan()
     if tune_budget > 0:
         result = tune_serving_config(model.cfg, workload_spec, tune_budget,
-                                     method=method, seed=seed)
+                                     method=method, query_batch=query_batch,
+                                     seed=seed)
         best_config = result.best_config or {}
         plan = ServingPlan.from_config(best_config)
         launch_config = result.launch_config
@@ -140,6 +141,9 @@ def main() -> int:
                     help="with --workload: intervention budget for a "
                          "serving-stack tuning run in the workload simulator "
                          "(0 = serve with the default plan)")
+    ap.add_argument("--query-batch", type=int, default=1, metavar="K",
+                    help="measurements per ask/tell tuning round for "
+                         "--tune-launch / --tune-serving (1 = sequential)")
     ap.add_argument("--sim2real-eval", action="store_true",
                     help="with --workload: after the replay, price the "
                          "deployed configuration in the simulator too and "
@@ -161,6 +165,7 @@ def main() -> int:
     if args.workload:
         serve_workload(model, run, params, args.workload,
                        tune_budget=args.tune_serving,
+                       query_batch=args.query_batch,
                        sim2real_eval=args.sim2real_eval)
         return 0
 
@@ -177,7 +182,8 @@ def main() -> int:
     if args.tune_launch > 0:
         launch_config = tune_launch_config(cfg, args.batch, cache_len,
                                            args.tune_launch,
-                                           args.measure_backend)
+                                           args.measure_backend,
+                                           query_batch=args.query_batch)
     prefill, decode = jitted_steps(model, run, cache_len=cache_len,
                                    launch_config=launch_config)
 

@@ -56,6 +56,9 @@ def main() -> int:
                     help="target measurement backend for --tune-launch: "
                          "analytic, wallclock, or shifted:<kind> "
                          "(default: REPRO_MEASURE_BACKEND, then analytic)")
+    ap.add_argument("--query-batch", type=int, default=1, metavar="K",
+                    help="measurements per ask/tell tuning round for "
+                         "--tune-launch (1 = sequential)")
     args = ap.parse_args()
 
     cfg = (get_model_config(args.arch) if args.full_config
@@ -82,7 +85,8 @@ def main() -> int:
     if args.tune_launch > 0:
         launch_config = tune_launch_config(cfg, args.batch, args.seq,
                                            args.tune_launch,
-                                           args.measure_backend, kind="train")
+                                           args.measure_backend, kind="train",
+                                           query_batch=args.query_batch)
 
     def init_state():
         return init_train_state(model, run, optimizer,

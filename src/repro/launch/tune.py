@@ -43,7 +43,8 @@ def launch_workload_for(cfg, batch: int, seq_len: int, *,
 
 def tune_launch_config(cfg, batch: int, seq_len: int, budget: int,
                        backend: Optional[str], *, kind: str = "serve",
-                       seed: int = 0) -> Dict[str, Any]:
+                       query_batch: int = 1, seed: int = 0
+                       ) -> Dict[str, Any]:
     """One transfer-tuning run over this assignment's kernel-launch space;
     returns the winning ``family.param`` config for the step factories."""
     from repro.tuner.runner import tune_kernel_launch
@@ -52,7 +53,7 @@ def tune_launch_config(cfg, batch: int, seq_len: int, budget: int,
     result = tune_kernel_launch(
         launch_workload_for(cfg, batch, seq_len, kind=kind),
         families=launch_families_for(cfg), budget=budget,
-        target_backend=backend, seed=seed)
+        target_backend=backend, query_batch=query_batch, seed=seed)
     print(f"[{kind}] tuned launch config ({result.method}, "
           f"budget={budget}, y={result.best_y:.1f} us): "
           f"{result.launch_config}")
@@ -62,7 +63,8 @@ def tune_launch_config(cfg, batch: int, seq_len: int, budget: int,
 def tune_serving_config(cfg, workload: str, budget: int, *,
                         source_workload: Optional[str] = None,
                         n_source: int = 48, n_target_init: int = 3,
-                        method: str = "cameo", seed: int = 0):
+                        method: str = "cameo", query_batch: int = 1,
+                        seed: int = 0):
     """Transfer-tune the full serving stack (scheduler knobs + kernel launch
     geometry) for one workload trace: cheap ``source_workload`` trace
     (default: the benchmark's canonical calm-Poisson source) as the
@@ -82,6 +84,7 @@ def tune_serving_config(cfg, workload: str, budget: int, *,
                                  seed=seed)
     result = transfer_tune(method, src, tgt, budget=budget,
                            n_source=n_source, n_target_init=n_target_init,
+                           query_batch=query_batch,
                            query_text=tgt.query_text, seed=seed)
     print(f"[serve] tuned serving config ({result.method}, budget={budget}, "
           f"p99={result.best_y:.0f} us modeled): {result.best_config}")

@@ -119,13 +119,17 @@ def _final_regret(trace: Sequence[float], y_opt: float) -> float:
 
 def _method_runs(make_pair, y_opt: float, *, methods: Sequence[str],
                  seeds: Sequence[int], budget: int, n_source: int,
-                 n_target_init: int, use_env_query: bool = False,
+                 n_target_init: int, query_batch: int = 1,
+                 use_env_query: bool = False,
                  include_best_config: bool = False) -> Dict[str, Any]:
     """The per-method x per-seed run records every sweep shares: one
     ``transfer_tune`` per (method, seed) against a FRESH env pair from
     ``make_pair(seed)`` (backends' noise RNGs are stateful, so sharing a
     pair across methods would make results depend on run order), scored as
-    regret trajectories against ``y_opt``."""
+    regret trajectories against ``y_opt``.  ``query_batch`` restructures
+    each run into ask/tell rounds of that many measurements (the budget is
+    measurements either way); per-round sizes and wall-clock land in the
+    run record's ``rounds``."""
     per_method: Dict[str, Any] = {}
     for method in methods:
         runs = []
@@ -134,7 +138,8 @@ def _method_runs(make_pair, y_opt: float, *, methods: Sequence[str],
             kw = {"query_text": tgt.query_text} if use_env_query else {}
             res = transfer_tune(method, src, tgt, budget=budget,
                                 n_source=n_source,
-                                n_target_init=n_target_init, seed=seed,
+                                n_target_init=n_target_init,
+                                query_batch=query_batch, seed=seed,
                                 **kw)
             trace = [float(y) for y in res.trace_best_y]
             run = {
@@ -147,6 +152,8 @@ def _method_runs(make_pair, y_opt: float, *, methods: Sequence[str],
                                  for y in trace],
                 "wall_s": float(res.wall_s),
                 "n_target_init": res.extras.get("n_target_init"),
+                "rounds": [{"size": r["size"], "wall_s": r["wall_s"]}
+                           for r in res.rounds],
             }
             if include_best_config:
                 run["best_config"] = res.best_config
@@ -178,6 +185,7 @@ def run_transfer_bench(
     n_target_init: int = 4,
     seeds: Sequence[int] = (0, 1),
     pool: int = 512,
+    query_batch: int = 1,
 ) -> Dict[str, Any]:
     """The full sweep; returns the ``BENCH_transfer.json`` document."""
     t_start = time.time()
@@ -192,7 +200,8 @@ def run_transfer_bench(
                 "methods": _method_runs(
                     lambda seed: make_shifted_pair(cell, shift, seed=seed),
                     y_opt, methods=methods, seeds=seeds, budget=budget,
-                    n_source=n_source, n_target_init=n_target_init),
+                    n_source=n_source, n_target_init=n_target_init,
+                    query_batch=query_batch),
             })
     return _finalize_doc({
         "budget": int(budget),
@@ -200,6 +209,7 @@ def run_transfer_bench(
         "n_target_init": int(n_target_init),
         "seeds": [int(s) for s in seeds],
         "pool": int(pool),
+        "query_batch": int(query_batch),
         "cells": [c.name for c in cells],
         "shifts": list(shifts),
         "methods": list(methods),
@@ -301,6 +311,7 @@ def run_serving_bench(
     n_target_init: int = 3,
     seeds: Sequence[int] = (0, 1),
     pool: int = 256,
+    query_batch: int = 1,
 ) -> Dict[str, Any]:
     """The serving-stack sweep (cell x target trace x method); returns the
     ``BENCH_serving.json`` document.  Shape mirrors the kernel-launch sweep
@@ -323,6 +334,7 @@ def run_serving_bench(
                                                          seed=seed),
                     y_opt, methods=methods, seeds=seeds, budget=budget,
                     n_source=n_source, n_target_init=n_target_init,
+                    query_batch=query_batch,
                     use_env_query=True, include_best_config=True),
             })
     return _finalize_doc({
@@ -331,6 +343,7 @@ def run_serving_bench(
         "n_target_init": int(n_target_init),
         "seeds": [int(s) for s in seeds],
         "pool": int(pool),
+        "query_batch": int(query_batch),
         "cells": [c.name for c in cells],
         "sources": [c.source for c in cells],
         "targets": list(targets),
@@ -391,19 +404,39 @@ def make_sim2real_bench_pair(cell: Sim2RealCell, seed: int = 0,
 
 
 def sim2real_target_optimum(cell: Sim2RealCell, pool: int = 16,
-                            seed: int = 99, repeats: int = 3
+                            seed: int = 99, repeats: int = 3,
+                            query_batch: int = 1
                             ) -> Tuple[float, Optional[float]]:
     """(Y_opt, y_default) of the replay target over a random pool plus the
     default configuration — each entry a real batcher replay, so pools stay
-    far smaller than the simulator sweeps'."""
+    far smaller than the simulator sweeps'.
+
+    ``query_batch > 1`` collects the pool in compile-key-sharing groups
+    through ``intervene_batch`` (the first group anchored on the DEFAULT
+    configuration's shared dims, so the default's deployment serves it
+    too) — the dominant cost of the sim2real sweep is this pool's jit
+    compiles, and grouping collapses them to one per group."""
     _, tgt = make_sim2real_bench_pair(cell, seed=seed, repeats=repeats)
     rng = np.random.default_rng(seed)
-    _, y_default = tgt.intervene(tgt.space.default_config())
-    best = y_default if np.isfinite(y_default) else np.inf
-    for cfg in tgt.space.sample(rng, pool):
-        _, y = tgt.intervene(cfg)
-        if np.isfinite(y) and y < best:
-            best = float(y)
+    default = tgt.space.default_config()
+    if query_batch > 1:
+        cfgs = tgt._grouped_sample(rng, pool, query_batch)
+        share = [nm for nm in (tgt.batch_share_dims or ())
+                 if nm in tgt.space.by_name]
+        for c in cfgs[:query_batch]:
+            for nm in share:
+                c[nm] = default[nm]
+        results = tgt.intervene_batch([default] + cfgs)
+        y_default = results[0][1]
+        ys = [y for _, y in results if np.isfinite(y)]
+        best = min(ys) if ys else np.inf
+    else:
+        _, y_default = tgt.intervene(default)
+        best = y_default if np.isfinite(y_default) else np.inf
+        for cfg in tgt.space.sample(rng, pool):
+            _, y = tgt.intervene(cfg)
+            if np.isfinite(y) and y < best:
+                best = float(y)
     if not np.isfinite(best):
         raise RuntimeError(
             f"no feasible configuration in a {pool}-sample pool for "
@@ -421,6 +454,7 @@ def run_sim2real_bench(
     seeds: Sequence[int] = (0,),
     pool: int = 16,
     repeats: int = 3,
+    query_batch: int = 1,
 ) -> Dict[str, Any]:
     """The sim-to-real sweep (cell x method); returns the
     ``BENCH_sim2real.json`` document.  The source is the deterministic
@@ -433,7 +467,8 @@ def run_sim2real_bench(
     out_cells: List[Dict[str, Any]] = []
     for cell in cells:
         y_opt, y_default = sim2real_target_optimum(cell, pool=pool,
-                                                   repeats=repeats)
+                                                   repeats=repeats,
+                                                   query_batch=query_batch)
         out_cells.append({
             "cell": cell.name,
             "workload": cell.workload,
@@ -444,6 +479,7 @@ def run_sim2real_bench(
                                                       repeats=repeats),
                 y_opt, methods=methods, seeds=seeds, budget=budget,
                 n_source=n_source, n_target_init=n_target_init,
+                query_batch=query_batch,
                 use_env_query=True, include_best_config=True),
         })
     return _finalize_doc({
@@ -453,6 +489,7 @@ def run_sim2real_bench(
         "seeds": [int(s) for s in seeds],
         "pool": int(pool),
         "repeats": int(repeats),
+        "query_batch": int(query_batch),
         "cells": [c.name for c in cells],
         "workloads": [c.workload for c in cells],
         "methods": list(methods),

@@ -27,6 +27,9 @@ class TuneResult:
     trace_best_y: List[float]
     wall_s: float
     extras: Dict[str, Any] = field(default_factory=dict)
+    #: per-round history when tuning ran ask/tell rounds: one record per
+    #: round with ``size`` (measurements), ``actions``, and ``wall_s``
+    rounds: List[Dict[str, Any]] = field(default_factory=list)
 
     @property
     def launch_config(self) -> Dict[str, Any]:
@@ -56,18 +59,26 @@ def transfer_tune(
     budget: int = 50,
     n_source: int = 300,
     n_target_init: int = 5,
+    query_batch: int = 1,
     query_text: str = "minimize step_time within {budget} samples",
     l_alpha: float = 0.1,
     seed: int = 0,
 ) -> TuneResult:
+    """``budget`` counts MEASUREMENTS, not rounds: with ``query_batch=k``
+    the tuner runs ceil(budget / k) ask/tell rounds of (up to) k
+    measurements each, so methods stay comparable at any k.  k=1 reproduces
+    the historical sequential trajectories exactly."""
     t0 = time.time()
+    qb = max(int(query_batch), 1)
     d_s = source_env.dataset(n_source, seed=seed + 1)
     # every method starts from the IDENTICAL free initial target dataset —
     # giving it only to CAMEO (via seed_target) would bias each comparison
     # by n_target_init free target measurements
-    d_init = target_env.dataset(n_target_init, seed=seed + 2)
+    d_init = target_env.dataset(n_target_init, seed=seed + 2, query_batch=qb)
     init_record = {"n_target_init": len(d_init),
-                   "target_init_ys": [float(y) for y in d_init.ys]}
+                   "target_init_ys": [float(y) for y in d_init.ys],
+                   "query_batch": qb}
+    rounds: List[Dict[str, Any]] = []
 
     if method == "cameo":
         q = parse_query(query_text.format(budget=budget))
@@ -78,7 +89,8 @@ def transfer_tune(
                     counter_names=source_env.counter_names, seed=seed,
                     l_alpha=l_alpha)
         cam.seed_target(d_init)
-        cfg, y = cam.run(target_env, budget)
+        cfg, y = cam.run(target_env, budget, query_batch=qb,
+                         round_log=rounds)
         return TuneResult(
             method="cameo", best_config=cfg, best_y=y,
             trace_best_y=list(cam.trace.best_y), wall_s=time.time() - t0,
@@ -88,16 +100,18 @@ def transfer_tune(
                         cam.trace.model_update_s or [0.0])),
                     "recommend_s": float(np.mean(
                         cam.trace.recommend_s or [0.0])),
-                    **init_record})
+                    **init_record},
+            rounds=rounds)
 
     tuner = make_baseline(method, target_env.space, d_s,
                           counter_names=source_env.counter_names, seed=seed)
     for c, cnt, y in zip(d_init.configs, d_init.counters, d_init.ys):
         tuner.update(c, cnt, y)
-    cfg, y = tuner.run(target_env, budget)
+    cfg, y = tuner.run(target_env, budget, query_batch=qb, round_log=rounds)
     return TuneResult(method=method, best_config=cfg, best_y=y,
                       trace_best_y=list(tuner.trace.best_y),
-                      wall_s=time.time() - t0, extras=dict(init_record))
+                      wall_s=time.time() - t0, extras=dict(init_record),
+                      rounds=rounds)
 
 
 def tune_kernel_launch(target_workload, *, source_workload=None,
@@ -105,6 +119,7 @@ def tune_kernel_launch(target_workload, *, source_workload=None,
                        budget: int = 15, n_source: int = 64,
                        n_target_init: int = 4,
                        target_backend: Optional[str] = None,
+                       query_batch: int = 1,
                        seed: int = 0) -> TuneResult:
     """Transfer-tune the kernel-launch space for one workload cell.
 
@@ -125,4 +140,5 @@ def tune_kernel_launch(target_workload, *, source_workload=None,
     tgt = KernelLaunchEnv(target_workload, families=families, seed=seed + 2,
                           backend=target_backend)
     return transfer_tune(method, src, tgt, budget=budget, n_source=n_source,
-                         n_target_init=n_target_init, seed=seed)
+                         n_target_init=n_target_init,
+                         query_batch=query_batch, seed=seed)
