@@ -1,0 +1,130 @@
+"""Fleet-disruption transfer benchmark CLI -> BENCH_fleet.json.
+
+Sweeps (served-model cell x fleet disruption x method) over the FULL fleet
+surface — ``fleet.*`` router/replica knobs + ``serving.*`` scheduler knobs +
+kernel launch geometry — with the environment change being a fleet
+disruption: the source tunes a healthy N-device fleet, the target suffers
+``shifted:straggler`` (a fraction of devices running slow) or
+``shifted:resize`` (an elastic preemption shrinking the device budget).
+See ``repro.tuner.bench.run_fleet_bench`` and
+``repro.workloads.sim.FleetSimulator``.
+
+    PYTHONPATH=src python benchmarks/fleet_bench.py --smoke
+    PYTHONPATH=src python benchmarks/fleet_bench.py \
+        --shifts straggler --methods cameo,random,smac --budget 20
+
+``--smoke`` is the CI configuration: small budget, both disruption kinds,
+cameo vs random, exits non-zero when the gate fails (CAMEO's mean final
+regret worse than random search).  See ``benchmarks/README.md`` for the
+JSON layout.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.envs.measure import shift_kinds
+from repro.tuner.bench import (
+    DEFAULT_FLEET_CELLS, DEFAULT_FLEET_SHIFTS, DEFAULT_METHODS,
+    fleet_cell_by_name, run_fleet_bench)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="small-budget CI sweep; non-zero exit on gate fail")
+    ap.add_argument("--budget", type=int, default=None)
+    ap.add_argument("--n-source", type=int, default=None)
+    ap.add_argument("--n-target-init", type=int, default=None)
+    ap.add_argument("--pool", type=int, default=None,
+                    help="ground-truth pool size per (cell, shift)")
+    ap.add_argument("--seeds", default=None, help="comma-separated ints")
+    ap.add_argument("--cells", default=None,
+                    help=f"comma-separated subset of "
+                         f"{[c.name for c in DEFAULT_FLEET_CELLS]}")
+    ap.add_argument("--shifts", default=None,
+                    help=f"comma-separated shift kinds (registered: "
+                         f"{list(shift_kinds())})")
+    ap.add_argument("--methods", default=None,
+                    help="comma-separated tuner names (cameo, random, smac, "
+                         "restune, restune-w/o-ml, cello, unicorn)")
+    ap.add_argument("--query-batch", type=int, default=1,
+                    help="measurements per ask/tell round (1 = the "
+                         "historical sequential loop)")
+    ap.add_argument("--out", default="BENCH_fleet.json")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        budget, n_source, n_target_init = 8, 40, 4
+        pool, seeds = 128, (0, 1, 2)
+        shifts, methods = DEFAULT_FLEET_SHIFTS, DEFAULT_METHODS
+    else:
+        budget, n_source, n_target_init = 20, 96, 4
+        pool, seeds = 256, (0, 1, 2, 3)
+        shifts = DEFAULT_FLEET_SHIFTS
+        methods = ("cameo", "random", "smac", "restune")
+    cells = DEFAULT_FLEET_CELLS
+    if args.budget is not None:
+        budget = args.budget
+    if args.n_source is not None:
+        n_source = args.n_source
+    if args.n_target_init is not None:
+        n_target_init = args.n_target_init
+    if args.pool is not None:
+        pool = args.pool
+    if args.seeds:
+        seeds = tuple(int(s) for s in args.seeds.split(","))
+    if args.cells:
+        cells = tuple(fleet_cell_by_name(n) for n in args.cells.split(","))
+    if args.shifts:
+        shifts = tuple(filter(None, (s.strip()
+                                     for s in args.shifts.split(","))))
+    if args.methods:
+        methods = tuple(args.methods.split(","))
+
+    doc = run_fleet_bench(cells=cells, shifts=shifts, methods=methods,
+                          budget=budget, n_source=n_source,
+                          n_target_init=n_target_init, seeds=seeds,
+                          pool=pool, query_batch=args.query_batch)
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=2)
+
+    for cell in doc["cells"]:
+        dflt = cell["y_default"]
+        dflt_s = f"{dflt:.0f}" if dflt is not None else "infeasible"
+        print(f"\n== {cell['cell']} / {cell['workload']} + "
+              f"shifted:{cell['shift']} on {cell['num_devices']} devices "
+              f"(y_opt={cell['y_opt']:.0f} us, default={dflt_s}) ==")
+        ranked = sorted(cell["methods"].items(),
+                        key=lambda kv: kv[1]["mean_final_regret"])
+        for method, stats in ranked:
+            print(f"  {method:16s} mean final regret = "
+                  f"{stats['mean_final_regret']*100:7.2f}%")
+            best = min(stats["runs"], key=lambda r: r["final_regret"])
+            cfg = best.get("best_config") or {}
+            fleet_knobs = {k: v for k, v in cfg.items()
+                           if k.startswith("fleet.")}
+            if fleet_knobs:
+                knobs = ", ".join(f"{k.split('.', 1)[1]}={v}"
+                                  for k, v in sorted(fleet_knobs.items()))
+                print(f"  {'':16s} best fleet config: {knobs}")
+    gate = doc["gate"]
+    print(f"\n[fleet_bench] wrote {args.out} "
+          f"({doc['meta']['wall_s']:.1f}s)")
+    if gate["checked"]:
+        print(f"[fleet_bench] gate: {gate['champion']}="
+              f"{gate['champion_mean_final_regret']*100:.2f}% vs "
+              f"{gate['reference']}="
+              f"{gate['reference_mean_final_regret']*100:.2f}% -> "
+              f"{'PASS' if gate['passed'] else 'FAIL'}")
+    if args.smoke and not gate["passed"]:
+        print("[fleet_bench] FAIL: champion regret exceeds reference",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

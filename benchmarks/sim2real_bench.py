@@ -39,6 +39,9 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--smoke", action="store_true",
                     help="small-budget CI sweep; non-zero exit on gate fail")
+    ap.add_argument("--gate", action="store_true",
+                    help="exit non-zero on gate fail even without --smoke "
+                         "(the non-smoke CI configuration)")
     ap.add_argument("--budget", type=int, default=None)
     ap.add_argument("--n-source", type=int, default=None)
     ap.add_argument("--n-target-init", type=int, default=None)
@@ -141,7 +144,7 @@ def main(argv=None) -> int:
               f"{gate['reference']}="
               f"{gate['reference_mean_final_regret']*100:.2f}% -> "
               f"{'PASS' if gate['passed'] else 'FAIL'}")
-    if args.smoke and not gate["passed"]:
+    if (args.smoke or args.gate) and not gate["passed"]:
         print("[sim2real_bench] FAIL: champion regret exceeds reference",
               file=sys.stderr)
         return 1

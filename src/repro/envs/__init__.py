@@ -17,6 +17,8 @@ from repro.envs.measure import (  # noqa: F401
 _SERVING_EXPORTS = {
     "ServingEnv": "serving_env",
     "make_serving_pair": "serving_env",
+    "make_fleet_pair": "serving_env",
+    "fleet_spec_for": "serving_env",
     "ReplayServingEnv": "replay_env",
     "make_sim2real_pair": "replay_env",
 }

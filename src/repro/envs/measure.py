@@ -261,7 +261,13 @@ class EnvShift:
     - feasibility: scale the per-core VMEM budget (tightened -> parts of the
       source-feasible grid become infeasible in the target);
     - noise: scale the multiplicative measurement noise and/or add a
-      heteroscedastic component that grows with modeled latency.
+      heteroscedastic component that grows with modeled latency;
+    - fleet: scale the device count (elastic resize) and/or slow a fraction
+      of devices down (stragglers).  The fleet fields are consumed by
+      fleet-aware environments (``repro.envs.serving_env`` derives a
+      ``FleetSpec`` from them); :meth:`apply` only rewrites the
+      (workload, hardware) pair, so non-fleet backends see a shift kind's
+      *aggregate* effect through the base scales.
 
     Shifts compose left-to-right: scales multiply, absolute
     ``workload_update`` overrides win over earlier scales.
@@ -278,6 +284,10 @@ class EnvShift:
     workload_update: Mapping[str, Any] = field(default_factory=dict)
     noise_scale: float = 1.0
     hetero_noise: float = 0.0
+    # fleet-disruption axes (consumed by fleet-aware serving environments)
+    device_scale: float = 1.0        # elastic resize: scales the device count
+    straggler_frac: float = 0.0      # fraction of devices running slow
+    straggler_slowdown: float = 1.0  # how slow the straggling devices are
 
     def apply(self, workload: KernelWorkload, hardware: HardwareSpec
               ) -> Tuple[KernelWorkload, HardwareSpec]:
@@ -304,6 +314,16 @@ _HARDWARE_SHIFT = EnvShift(name="hardware", mxu_scale=0.5, hbm_scale=0.6,
 _WORKLOAD_SHIFT = EnvShift(name="workload", seq_scale=2.0, batch_scale=0.5)
 _NOISE_SHIFT = EnvShift(name="noise", noise_scale=4.0, hetero_noise=0.05)
 _FEASIBILITY_SHIFT = EnvShift(name="feasibility", vmem_scale=0.5)
+# stragglers: a quarter of the devices run 3x slow.  Fleet-aware envs place
+# them on the device grid; the base scales model the aggregate drag (slower
+# effective memory, contention-inflated launch overhead) so the kernel-grid
+# backends shift too.
+_STRAGGLER_SHIFT = EnvShift(name="straggler", hbm_scale=0.8,
+                            launch_overhead_scale=1.5, straggler_frac=0.25,
+                            straggler_slowdown=3.0)
+# elastic resize: a quarter of the fleet is preempted and the surviving
+# devices absorb the traffic (larger effective batch per replica)
+_RESIZE_SHIFT = EnvShift(name="resize", batch_scale=1.5, device_scale=0.75)
 
 SHIFT_KINDS: Dict[str, Tuple[EnvShift, ...]] = {
     "hardware": (_HARDWARE_SHIFT,),
@@ -312,6 +332,8 @@ SHIFT_KINDS: Dict[str, Tuple[EnvShift, ...]] = {
     "feasibility": (_FEASIBILITY_SHIFT,),
     "severe": (_HARDWARE_SHIFT, _WORKLOAD_SHIFT, _FEASIBILITY_SHIFT,
                _NOISE_SHIFT),
+    "straggler": (_STRAGGLER_SHIFT,),
+    "resize": (_RESIZE_SHIFT,),
 }
 
 

@@ -41,11 +41,17 @@ from repro.envs import measure as measure_mod
 from repro.envs.base import PooledEnv
 from repro.envs.measure import HardwareSpec, KernelWorkload, LaunchGeometry
 from repro.envs.serving_env import OBJECTIVES, ServingEnv
-from repro.workloads.sim import SIM_COUNTER_NAMES, ServingPlan, serving_space
+from repro.workloads.sim import (SIM_COUNTER_NAMES, FleetPlan, FleetReport,
+                                 ServingPlan, serving_space)
 from repro.workloads.traces import Trace, TraceWorkload, make_workload
 
 #: the simulator's discovery counters plus the replay-only rejection signal
 REPLAY_COUNTER_NAMES: Tuple[str, ...] = SIM_COUNTER_NAMES + ("rejected_rate",)
+
+#: fleet-mode discovery counters: the replay set plus the router/straggler
+#: mediators — objective clones stay out, exactly as in FLEET_COUNTER_NAMES
+REPLAY_FLEET_COUNTER_NAMES: Tuple[str, ...] = REPLAY_COUNTER_NAMES + (
+    "routing_imbalance", "replica_queue_depth_max", "straggler_flagged")
 
 
 def default_replay_model():
@@ -150,7 +156,8 @@ class ReplayServingEnv(PooledEnv):
                  trace_seed: Optional[int] = None,
                  ticks_per_s: Optional[float] = None,
                  max_ticks: int = 100_000, model_seed: int = 0,
-                 replay_seed: int = 0, warmup: int = 1, repeats: int = 1):
+                 replay_seed: int = 0, warmup: int = 1, repeats: int = 1,
+                 fleet: bool = False, num_devices: int = 8):
         from repro.launch.tune import launch_workload_for
         from repro.serving.replay import default_ticks_per_s
         from repro.tuner.space import launch_families_for
@@ -190,15 +197,21 @@ class ReplayServingEnv(PooledEnv):
         self._model_seed = int(model_seed)
         self.model, self.run, self.params = _built_model(self.model_cfg,
                                                          model_seed)
-        super().__init__(serving_space(self.families), REPLAY_COUNTER_NAMES,
-                         seed=seed)
+        self.fleet = bool(fleet)
+        self.num_devices = int(num_devices)
+        super().__init__(serving_space(self.families, fleet=self.fleet),
+                         REPLAY_FLEET_COUNTER_NAMES if self.fleet
+                         else REPLAY_COUNTER_NAMES, seed=seed)
         # the compile key: members of a q-batch sharing these dims share one
         # jitted (prefill, decode) deployment — num_slots stays out (it only
-        # retraces the decode step, which is cheap next to a full compile)
+        # retraces the decode step, which is cheap next to a full compile).
+        # fleet.* router knobs never touch compiled shapes, so like the
+        # scheduler knobs they stay out of the key — every replica of every
+        # fleet plan shares the same warmed deployment.
         self.batch_share_dims = tuple(
             ["serving.cache_len"]
             + [n for n in self.space.names
-               if "." in n and not n.startswith("serving.")])
+               if "." in n and not n.startswith(("serving.", "fleet."))])
 
     # measurements are compilation + wall-clock, not noise draws: reusing a
     # prior result for a repeated configuration is pure savings
@@ -217,12 +230,15 @@ class ReplayServingEnv(PooledEnv):
     # -- feasibility (analytic, like WallClockBackend's gate) ------------
 
     def infeasible_reason(self, config: Dict[str, Any]) -> str:
-        """"" when deployable; otherwise why not (``cache_len``/``vmem``),
-        decided analytically so undeployable configs never reach the
-        batcher."""
+        """"" when deployable; otherwise why not (``cache_len``/``vmem``/
+        ``devices``), decided analytically so undeployable configs never
+        reach the batcher."""
         plan = ServingPlan.from_config(config)
         if self.trace.max_context > plan.cache_len:
             return "cache_len"
+        if (self.fleet and FleetPlan.from_config(config).num_replicas
+                > self.num_devices):
+            return "devices"
         w = dataclasses.replace(self.cell, batch=plan.num_slots,
                                 seq_len=plan.cache_len)
         _, _, feasible = LaunchGeometry(w, self.hardware).totals(
@@ -231,10 +247,14 @@ class ReplayServingEnv(PooledEnv):
 
     def _infeasible_counters(self) -> Dict[str, float]:
         n = float(len(self.trace.requests))
-        return {"queue_depth_mean": n, "queue_depth_max": n,
-                "occupancy_mean": 0.0, "prefill_decode_ratio": 0.0,
-                "slo_violation_rate": 1.0, "rejected_rate": 1.0,
-                "latency": 0.0, "throughput": 0.0}
+        c = {"queue_depth_mean": n, "queue_depth_max": n,
+             "occupancy_mean": 0.0, "prefill_decode_ratio": 0.0,
+             "slo_violation_rate": 1.0, "rejected_rate": 1.0,
+             "latency": 0.0, "throughput": 0.0}
+        if self.fleet:
+            c.update(routing_imbalance=1.0, replica_queue_depth_max=n,
+                     straggler_flagged=0.0)
+        return c
 
     # -- measurement ----------------------------------------------------
 
@@ -281,6 +301,16 @@ class ReplayServingEnv(PooledEnv):
         bad = float("-inf" if self.maximize else "inf")
         if self.infeasible_reason(config):
             return self._infeasible_counters(), bad
+        if self.fleet:
+            plan = ServingPlan.from_config(config)
+            num_slots, cache_len, frozen = self._deploy_key(plan, config)
+            batcher = self._fresh_batcher(num_slots, cache_len, frozen)
+            self._warm_deployment(batcher, frozen)
+            batcher.interleave = plan.interleave
+            try:
+                return self._member_result(batcher, config, plan)
+            except DrainStall:
+                return self._infeasible_counters(), bad
         try:
             report = self.replay(config)
         except DrainStall:
@@ -289,6 +319,125 @@ class ReplayServingEnv(PooledEnv):
         y = (report.throughput_rps if self.maximize
              else report.p99_latency_ms)
         return counters, y
+
+    # -- fleet replay (sim-planned routing, shared deployment) -----------
+
+    def _fleet_route(self, config: Dict[str, Any], plan: ServingPlan,
+                     fleet_plan: FleetPlan) -> FleetReport:
+        """Route the pinned trace with the analytic fleet simulator — the
+        router's decisions depend only on modeled backlogs, so the plan is
+        deterministic and shared between sim-side and replay-side envs."""
+        from repro.workloads.sim import FleetSimulator, FleetSpec
+
+        sim = FleetSimulator(self.cell, self.families,
+                             hardware=self.hardware,
+                             max_ticks=self.max_ticks,
+                             fleet=FleetSpec(num_devices=self.num_devices))
+        return sim.run(self.trace, plan, fleet_plan, config)
+
+    def _subtraces(self, assignments: Tuple[Tuple[int, ...], ...]
+                   ) -> List[Optional[Trace]]:
+        """Split the pinned trace into one sub-trace per replica (``None``
+        for replicas the router left empty); uids and arrival times are
+        preserved, so per-request latency semantics carry over."""
+        reqs = self.trace.requests
+        out: List[Optional[Trace]] = []
+        for r, idxs in enumerate(assignments):
+            if not idxs:
+                out.append(None)
+                continue
+            out.append(Trace(kind=self.trace.kind,
+                             spec=f"{self.trace.spec}#r{r}",
+                             seed=self.trace.seed,
+                             requests=tuple(reqs[i] for i in idxs)))
+        return out
+
+    def _pool_fleet(self, reports: List[Any], plan_report: FleetReport
+                    ) -> Tuple[Dict[str, float], float]:
+        """Pool per-replica :class:`ReplayReport`s into one fleet
+        measurement.  Replicas run concurrently in a real fleet, so wall
+        time is the max over replicas; everything request-weighted pools."""
+        import numpy as np
+
+        from repro.runtime.straggler import StragglerMonitor
+
+        lat = [l for r in reports for l in r.latencies_ms]
+        arr = np.asarray(lat, np.float64)
+        completed = sum(r.completed for r in reports)
+        rejected = sum(r.rejected for r in reports)
+        ticks = sum(r.ticks for r in reports)
+        wall = max((r.wall_s for r in reports), default=1e-9)
+        prefill = sum(r.prefill_s for r in reports)
+        decode = sum(r.decode_s for r in reports)
+        # realized per-replica decode wall time per tick drives the monitor
+        # — the REAL straggler signal, not the planned one
+        monitor = StragglerMonitor(max(plan_report.num_replicas, 1))
+        step_times = {i: r.decode_s / r.ticks
+                      for i, r in enumerate(reports) if r.ticks > 0}
+        if step_times:
+            for _ in range(monitor.patience):
+                monitor.report(step_times)
+        p99 = float(np.percentile(arr, 99)) if arr.size else 0.0
+        counters = {
+            "queue_depth_mean": (sum(r.queue_depth_mean * r.ticks
+                                     for r in reports) / max(ticks, 1)),
+            "queue_depth_max": max((r.queue_depth_max for r in reports),
+                                   default=0.0),
+            "occupancy_mean": (sum(r.mean_occupancy * r.ticks
+                                   for r in reports) / max(ticks, 1)),
+            "prefill_decode_ratio": prefill / max(decode, 1e-9),
+            "slo_violation_rate": (float((arr > self.slo_ms).mean())
+                                   if arr.size else 0.0),
+            "rejected_rate": rejected / max(rejected + completed, 1),
+            "latency": p99,
+            "throughput": completed / max(wall, 1e-9),
+            "routing_imbalance": plan_report.routing_imbalance,
+            "replica_queue_depth_max": plan_report.replica_queue_depth_max,
+            "straggler_flagged": float(len(monitor.flagged())),
+        }
+        y = counters["throughput"] if self.maximize else p99
+        return counters, y
+
+    def _member_result(self, batcher, config: Dict[str, Any],
+                       plan: ServingPlan) -> Tuple[Dict[str, float], float]:
+        """(counters, y) of one member measured on a warmed deployment —
+        plain replay, or (fleet mode) sim-planned routing followed by one
+        sub-trace replay per replica on the SAME shared batcher (all fleet
+        plans share one compile key; replica batchers are identical
+        deployments, so sequential replay on one instance is sound and the
+        fleet wall time is the max over replicas)."""
+        from repro.serving.replay import replay_trace
+
+        if self.fleet:
+            fleet_plan = FleetPlan.from_config(config)
+            plan_report = self._fleet_route(config, plan, fleet_plan)
+            if not plan_report.feasible:
+                return (self._infeasible_counters(),
+                        float("-inf" if self.maximize else "inf"))
+            subtraces = self._subtraces(plan_report.assignments)
+            outs = []
+            for _ in range(self.repeats):
+                reports = [replay_trace(batcher, st,
+                                        admit_chunk=plan.admit_chunk,
+                                        ticks_per_s=self.ticks_per_s,
+                                        seed=self._replay_seed,
+                                        max_ticks=self.max_ticks)
+                           for st in subtraces if st is not None]
+                outs.append(self._pool_fleet(reports, plan_report))
+            outs.sort(key=lambda cy: cy[1])
+            return outs[len(outs) // 2]
+
+        reports = sorted(
+            (replay_trace(batcher, self.trace, admit_chunk=plan.admit_chunk,
+                          ticks_per_s=self.ticks_per_s,
+                          seed=self._replay_seed, max_ticks=self.max_ticks)
+             for _ in range(self.repeats)),
+            key=lambda r: (r.throughput_rps if self.maximize
+                           else r.p99_latency_ms))
+        report = reports[len(reports) // 2]
+        return (report.counters(self.slo_ms),
+                (report.throughput_rps if self.maximize
+                 else report.p99_latency_ms))
 
     # -- batched measurement --------------------------------------------
 
@@ -347,8 +496,12 @@ class ReplayServingEnv(PooledEnv):
         cache.  A :class:`DrainStall` in one member records THAT member
         infeasible and rebuilds the batcher (compiles stay cached) instead
         of aborting the round.  Results come back in input order.
+
+        Fleet mode reuses the exact same grouping: ``fleet.*`` knobs are
+        not in the compile key, so members differing only in replica count
+        or routing policy share one warmed deployment and differ purely in
+        how :meth:`_member_result` splits and replays the trace.
         """
-        from repro.serving.replay import replay_trace
         from repro.serving.scheduler import DrainStall
 
         bad = float("-inf" if self.maximize else "inf")
@@ -368,30 +521,15 @@ class ReplayServingEnv(PooledEnv):
             for i in members:
                 plan = ServingPlan.from_config(configs[i])
                 batcher.interleave = plan.interleave
-
-                def one():
-                    return replay_trace(batcher, self.trace,
-                                        admit_chunk=plan.admit_chunk,
-                                        ticks_per_s=self.ticks_per_s,
-                                        seed=self._replay_seed,
-                                        max_ticks=self.max_ticks)
-
                 try:
-                    reports = sorted(
-                        (one() for _ in range(self.repeats)),
-                        key=lambda r: (r.throughput_rps if self.maximize
-                                       else r.p99_latency_ms))
+                    results[i] = self._member_result(batcher, configs[i],
+                                                     plan)
                 except DrainStall:
                     results[i] = (self._infeasible_counters(), bad)
                     # a stalled replay leaves residents behind — rebuild
                     # (cheap: every compile is already cached)
                     batcher = self._fresh_batcher(num_slots, cache_len,
                                                   frozen)
-                    continue
-                report = reports[len(reports) // 2]
-                results[i] = (report.counters(self.slo_ms),
-                              (report.throughput_rps if self.maximize
-                               else report.p99_latency_ms))
 
         for cfg, res in zip(configs, results):
             self._remember(cfg, res[0], res[1])
@@ -410,13 +548,16 @@ def make_sim2real_pair(workload: Union[str, TraceWorkload, Trace],
                        objective: str = "latency", slo_us: float = 2_000.0,
                        slo_ms: float = 1_000.0,
                        hardware: Optional[HardwareSpec] = None,
+                       fleet: bool = False, num_devices: int = 8,
                        **replay_kw: Any
                        ) -> Tuple[ServingEnv, ReplayServingEnv]:
     """(source, target) over the IDENTICAL trace realization: the simulator
     prices the trace analytically at the deployed model's kernel dimensions
     (cheap staging), the replay environment measures the real batcher (the
     deployment).  Identical configuration space; the paper's sim-to-real
-    environment change with everything else held fixed."""
+    environment change with everything else held fixed.  ``fleet=True``
+    gives both halves the router/replica knobs (same ``fleet.*`` surface,
+    same device budget)."""
     from repro.launch.tune import launch_workload_for
     from repro.tuner.space import launch_families_for
 
@@ -433,8 +574,10 @@ def make_sim2real_pair(workload: Union[str, TraceWorkload, Trace],
         workload = workload.generate(seed if trace_seed is None
                                      else trace_seed)
     src = ServingEnv(workload, cell, families, seed=seed + 1,
-                     objective=objective, slo_us=slo_us, hardware=hardware)
+                     objective=objective, slo_us=slo_us, hardware=hardware,
+                     fleet=fleet, num_devices=num_devices)
     tgt = ReplayServingEnv(workload, model_cfg, families=families, cell=cell,
                            seed=seed + 2, objective=objective, slo_ms=slo_ms,
-                           hardware=hardware, **replay_kw)
+                           hardware=hardware, fleet=fleet,
+                           num_devices=num_devices, **replay_kw)
     return src, tgt

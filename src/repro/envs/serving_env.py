@@ -28,19 +28,58 @@ trace does not fit in) measure as ``inf`` in the minimize direction and
 
 from __future__ import annotations
 
-from typing import Any, Dict, Iterable, Optional, Tuple, Union
+from typing import Any, Dict, Iterable, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.envs import measure as measure_mod
 from repro.envs.base import PooledEnv
-from repro.envs.measure import HardwareSpec, KernelWorkload
+from repro.envs.measure import EnvShift, HardwareSpec, KernelWorkload
 from repro.kernels import dispatch
-from repro.workloads.sim import (SIM_COUNTER_NAMES, ServingPlan,
-                                 ServingSimulator, SimReport, serving_space)
+from repro.workloads.sim import (FLEET_COUNTER_NAMES, SIM_COUNTER_NAMES,
+                                 FleetPlan, FleetSimulator, FleetSpec,
+                                 ServingPlan, ServingSimulator, SimReport,
+                                 serving_space)
 from repro.workloads.traces import Trace, TraceWorkload, make_workload
 
 OBJECTIVES = ("latency", "throughput")
+
+#: seed salt for the straggler placement draw — fixed so the SAME devices
+#: straggle for every environment instance over the same substrate (the
+#: straggler set is part of the environment, not of any env's noise stream)
+_STRAGGLER_SALT = 0x57A6
+
+
+def _resolve_shifts(shifts: Union[str, Sequence[EnvShift]]
+                    ) -> Tuple[EnvShift, ...]:
+    if isinstance(shifts, str):
+        return measure_mod.shifts_for(shifts)
+    return tuple(shifts)
+
+
+def fleet_spec_for(shifts: Sequence[EnvShift],
+                   num_devices: int = 8) -> FleetSpec:
+    """The deployment substrate the composed ``shifts`` leave behind:
+    ``device_scale`` resizes the fleet (elastic preemption), and
+    ``straggler_frac``/``straggler_slowdown`` place slow devices.  The
+    straggler set depends only on the substrate (device count, slow count),
+    NOT on any environment seed — target optimum sweeps and tuning runs at
+    different seeds must agree on which devices limp."""
+    devices = num_devices
+    frac = 0.0
+    slowdown = 1.0
+    for s in shifts:
+        devices = max(1, int(round(devices * s.device_scale)))
+        frac = max(frac, s.straggler_frac)
+        slowdown *= s.straggler_slowdown
+    n_slow = int(round(frac * devices))
+    if n_slow == 0 or slowdown <= 1.0:
+        return FleetSpec(num_devices=devices)
+    rng = np.random.default_rng([devices, n_slow, _STRAGGLER_SALT])
+    slow = tuple(sorted(int(d) for d in
+                        rng.choice(devices, size=n_slow, replace=False)))
+    return FleetSpec(num_devices=devices, slow_devices=slow,
+                     slowdown=slowdown)
 
 
 class ServingEnv(PooledEnv):
@@ -59,7 +98,9 @@ class ServingEnv(PooledEnv):
                  families: Optional[Iterable[str]] = None, seed: int = 0,
                  *, objective: str = "latency", slo_us: float = 2_000.0,
                  hardware: Optional[HardwareSpec] = None,
-                 trace_seed: Optional[int] = None):
+                 trace_seed: Optional[int] = None, fleet: bool = False,
+                 shifts: Union[str, Sequence[EnvShift]] = (),
+                 num_devices: int = 8):
         if objective not in OBJECTIVES:
             raise ValueError(f"unknown serving objective {objective!r}; "
                              f"known: {sorted(OBJECTIVES)}")
@@ -80,11 +121,29 @@ class ServingEnv(PooledEnv):
         self.objective = objective
         self.maximize = objective == "throughput"
         self.slo_us = float(slo_us)
-        self.sim = ServingSimulator(self.cell, self.families,
-                                    hardware=hardware, slo_us=self.slo_us)
+        # environment shifts rewrite the substrate this env prices against:
+        # the model cell + hardware (all kinds) and the fleet spec
+        # (straggler/resize kinds) — the trace realization is untouched
+        self.shifts = _resolve_shifts(shifts)
+        shifted_hw = hardware or HardwareSpec()
+        shifted_cell = self.cell
+        for s in self.shifts:
+            shifted_cell, shifted_hw = s.apply(shifted_cell, shifted_hw)
+        self.fleet = bool(fleet)
+        if self.fleet:
+            self.fleet_spec = fleet_spec_for(self.shifts, num_devices)
+            self.sim = FleetSimulator(
+                shifted_cell, self.families, hardware=shifted_hw,
+                slo_us=self.slo_us, fleet=self.fleet_spec)
+        else:
+            self.fleet_spec = None
+            self.sim = ServingSimulator(shifted_cell, self.families,
+                                        hardware=shifted_hw,
+                                        slo_us=self.slo_us)
         self._noise_rng = np.random.default_rng(seed + 13)
-        super().__init__(serving_space(self.families), SIM_COUNTER_NAMES,
-                         seed=seed)
+        super().__init__(serving_space(self.families, fleet=self.fleet),
+                         FLEET_COUNTER_NAMES if self.fleet
+                         else SIM_COUNTER_NAMES, seed=seed)
 
     @property
     def query_text(self) -> str:
@@ -97,8 +156,11 @@ class ServingEnv(PooledEnv):
 
     def simulate(self, config: Dict[str, Any]) -> SimReport:
         """The raw (noise-free) simulator report for one configuration."""
-        return self.sim.run(self.trace, ServingPlan.from_config(config),
-                            config)
+        plan = ServingPlan.from_config(config)
+        if self.fleet:
+            return self.sim.run(self.trace, plan,
+                                FleetPlan.from_config(config), config)
+        return self.sim.run(self.trace, plan, config)
 
     def _measure(self, config: Dict[str, Any]
                  ) -> Tuple[Dict[str, float], float]:
@@ -138,4 +200,25 @@ def make_serving_pair(source: Union[str, TraceWorkload],
     configuration space; independent measurement-noise streams."""
     src = ServingEnv(source, cell, families, seed=seed + 1, **kw)
     tgt = ServingEnv(target, cell, src.families, seed=seed + 2, **kw)
+    return src, tgt
+
+
+def make_fleet_pair(workload: Union[str, TraceWorkload] = "poisson",
+                    shift: Union[str, Sequence[EnvShift]] = "straggler",
+                    cell: Optional[KernelWorkload] = None,
+                    families: Optional[Iterable[str]] = None,
+                    seed: int = 0, num_devices: int = 8, **kw: Any
+                    ) -> Tuple[ServingEnv, ServingEnv]:
+    """(source, target) FLEET environments differing ONLY in the fleet
+    disruption: same workload trace realization, same devices — the target
+    additionally suffers ``shift`` (a shift kind name like ``"straggler"``/
+    ``"resize"`` or explicit :class:`EnvShift` list).  The paper's transfer
+    question at fleet scale: does the router/replica configuration learned
+    on the healthy fleet carry to the degraded one?"""
+    trace_seed = kw.pop("trace_seed", seed)
+    src = ServingEnv(workload, cell, families, seed=seed + 1, fleet=True,
+                     num_devices=num_devices, trace_seed=trace_seed, **kw)
+    tgt = ServingEnv(workload, cell, src.families, seed=seed + 2, fleet=True,
+                     shifts=shift, num_devices=num_devices,
+                     trace_seed=trace_seed, **kw)
     return src, tgt

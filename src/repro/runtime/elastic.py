@@ -21,12 +21,19 @@ from repro.utils.config import MeshConfig, RunConfig
 
 
 def viable_mesh_shape(num_devices: int, model_parallel: int) -> Tuple[int, int]:
-    """Largest (data, model) grid for `num_devices` keeping TP degree."""
-    if num_devices % model_parallel != 0:
-        # degrade TP until it divides (prefer keeping TP large)
-        while model_parallel > 1 and num_devices % model_parallel != 0:
-            model_parallel //= 2
-    return num_devices // model_parallel, model_parallel
+    """Largest (data, model) grid for `num_devices` keeping TP degree.
+
+    When the requested TP does not divide the device count, degrade to the
+    LARGEST divisor of ``num_devices`` that is <= the request (prefer keeping
+    TP large) — halving skips valid divisors (8 devices at TP 6 would land on
+    TP 1 when TP 4 is viable; 100 devices at TP 16 on TP 4 when TP 10 is).
+    """
+    if num_devices < 1:
+        raise ValueError(f"num_devices must be >= 1, got {num_devices}")
+    tp = max(1, min(int(model_parallel), num_devices))
+    while num_devices % tp != 0:
+        tp -= 1
+    return num_devices // tp, tp
 
 
 def remesh_state(ckpt: CheckpointManager, step: int, state_template: Any,
@@ -52,6 +59,14 @@ def adjust_run_for_devices(run: RunConfig, num_devices: int) -> RunConfig:
     micro = par.microbatch
     while gb % (data * micro) != 0 and micro < gb:
         micro *= 2
+    if gb % (data * micro) != 0:
+        # doubling can walk past every valid microbatch (e.g. data=3,
+        # global_batch=32): surface it instead of returning a RunConfig
+        # whose validate() would reject the batch split
+        raise ValueError(
+            f"cannot preserve global_batch={gb} on {num_devices} devices: "
+            f"no power-of-two microbatch makes it divisible by "
+            f"data={data} x microbatch")
     if micro != par.microbatch:
         par = par.replace(microbatch=micro)
     return run.replace(mesh=mesh, parallel=par)

@@ -352,6 +352,126 @@ def run_serving_bench(
 
 
 # --------------------------------------------------------------------------
+# fleet sweep: healthy fleet source -> disrupted fleet target
+# --------------------------------------------------------------------------
+
+#: fleet-disruption shift kinds the fleet sweep defaults to — the two
+#: registered by this subsystem (``shifted:straggler``/``shifted:resize``)
+DEFAULT_FLEET_SHIFTS: Tuple[str, ...] = ("straggler", "resize")
+
+
+@dataclass(frozen=True)
+class FleetCell:
+    """One fleet sweep point: a served model + arrival process + device
+    budget, tuned with the ``fleet.*`` router/replica knobs joined in."""
+
+    name: str
+    cell: KernelWorkload
+    families: Tuple[str, ...] = ("flash_attention", "rmsnorm")
+    workload: str = "bursty:rate=2500,burst=6"
+    num_devices: int = 8
+
+
+DEFAULT_FLEET_CELLS: Tuple[FleetCell, ...] = (
+    FleetCell("serve-8b", KernelWorkload()),
+)
+
+
+def fleet_cell_by_name(name: str,
+                       cells: Sequence[FleetCell] = DEFAULT_FLEET_CELLS
+                       ) -> FleetCell:
+    for c in cells:
+        if c.name == name:
+            return c
+    raise ValueError(f"unknown fleet cell {name!r}; "
+                     f"known: {[c.name for c in cells]}")
+
+
+def make_fleet_bench_pair(cell: FleetCell, shift: str, seed: int = 0):
+    """(healthy fleet source, disrupted fleet target) over the pinned trace
+    realization — same workload, same device budget, the target additionally
+    suffering ``shift`` (straggling devices / an elastic resize).  ``seed``
+    varies only the measurement-noise streams."""
+    from repro.envs.serving_env import make_fleet_pair
+
+    return make_fleet_pair(cell.workload, shift, cell.cell,
+                           families=cell.families, seed=seed,
+                           num_devices=cell.num_devices,
+                           trace_seed=BENCH_TRACE_SEED)
+
+
+def fleet_target_optimum(cell: FleetCell, shift: str, pool: int = 256,
+                         seed: int = 99) -> Tuple[float, Optional[float]]:
+    """(Y_opt, y_default) of the disrupted fleet target: best measured value
+    over a random pool plus the default fleet configuration."""
+    _, tgt = make_fleet_bench_pair(cell, shift, seed=seed)
+    rng = np.random.default_rng(seed)
+    _, y_default = tgt.intervene(tgt.space.default_config())
+    best = y_default if np.isfinite(y_default) else np.inf
+    for cfg in tgt.space.sample(rng, pool):
+        _, y = tgt.intervene(cfg)
+        if np.isfinite(y) and y < best:
+            best = float(y)
+    if not np.isfinite(best):
+        raise RuntimeError(
+            f"no feasible configuration in a {pool}-sample pool for "
+            f"fleet cell={cell.name} shift={shift}")
+    return best, (float(y_default) if np.isfinite(y_default) else None)
+
+
+def run_fleet_bench(
+    *,
+    cells: Sequence[FleetCell] = DEFAULT_FLEET_CELLS,
+    shifts: Sequence[str] = DEFAULT_FLEET_SHIFTS,
+    methods: Sequence[str] = DEFAULT_METHODS,
+    budget: int = 12,
+    n_source: int = 48,
+    n_target_init: int = 3,
+    seeds: Sequence[int] = (0, 1),
+    pool: int = 256,
+    query_batch: int = 1,
+) -> Dict[str, Any]:
+    """The fleet sweep (cell x disruption x method); returns the
+    ``BENCH_fleet.json`` document.  Both halves of every pair tune the full
+    fleet surface (``fleet.*`` + ``serving.*`` + launch geometry); the
+    environment change is the fleet disruption, so the gate asserts CAMEO's
+    transfer survives stragglers and elastic resizes — with the winning
+    replica count / routing policy auditable per run via ``best_config``."""
+    t_start = time.time()
+    out_cells: List[Dict[str, Any]] = []
+    for cell in cells:
+        for shift in shifts:
+            y_opt, y_default = fleet_target_optimum(cell, shift, pool=pool)
+            out_cells.append({
+                "cell": cell.name,
+                "workload": cell.workload,
+                "shift": shift,
+                "num_devices": cell.num_devices,
+                "y_opt": y_opt,
+                "y_default": y_default,
+                "methods": _method_runs(
+                    lambda seed: make_fleet_bench_pair(cell, shift,
+                                                       seed=seed),
+                    y_opt, methods=methods, seeds=seeds, budget=budget,
+                    n_source=n_source, n_target_init=n_target_init,
+                    query_batch=query_batch,
+                    use_env_query=True, include_best_config=True),
+            })
+    return _finalize_doc({
+        "budget": int(budget),
+        "n_source": int(n_source),
+        "n_target_init": int(n_target_init),
+        "seeds": [int(s) for s in seeds],
+        "pool": int(pool),
+        "query_batch": int(query_batch),
+        "cells": [c.name for c in cells],
+        "workloads": [c.workload for c in cells],
+        "shifts": list(shifts),
+        "methods": list(methods),
+    }, out_cells, t_start)
+
+
+# --------------------------------------------------------------------------
 # sim-to-real sweep: simulator source -> real-batcher replay target
 # --------------------------------------------------------------------------
 

@@ -8,8 +8,10 @@ benchmark, ``repro.launch.serve --workload``).
 """
 
 from repro.workloads.sim import (  # noqa: F401
+    FLEET_COUNTER_NAMES, FLEET_OPTIONS, FLEET_PREFIX, ROUTING_POLICIES,
     SCHEDULER_OPTIONS, SERVING_PREFIX, SIM_COUNTER_NAMES, DrainStall,
-    ServingPlan, ServingSimulator, SimReport, serving_space)
+    FleetPlan, FleetReport, FleetSimulator, FleetSpec, ServingPlan,
+    ServingSimulator, SimReport, serving_space, tp_speedup)
 from repro.workloads.traces import (  # noqa: F401
     WORKLOAD_KINDS, RequestSpec, Trace, TraceWorkload, Workload,
     make_workload, register_workload, workload_kinds)

@@ -23,6 +23,7 @@ config) triple always yields the identical :class:`SimReport`.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from dataclasses import dataclass
 from typing import Any, Dict, Iterable, List, Optional, Tuple
 
@@ -48,13 +49,35 @@ SCHEDULER_OPTIONS: Tuple[Option, ...] = (
 )
 
 
-def serving_space(families: Optional[Iterable[str]] = None) -> ConfigSpace:
+FLEET_PREFIX = "fleet."
+
+#: selectable router policies of the fleet front-end
+ROUTING_POLICIES: Tuple[str, ...] = (
+    "round_robin", "join_shortest_queue", "power_of_two")
+
+#: The fleet's tunable surface: replica count, routing policy, and the
+#: per-replica data-vs-model mesh split (resolved through
+#: ``runtime.elastic.viable_mesh_shape``).  Joined into :func:`serving_space`
+#: with ``fleet=True``.
+FLEET_OPTIONS: Tuple[Option, ...] = (
+    Option("fleet.num_replicas", (1, 2, 4, 8), default=2),
+    Option("fleet.routing", ROUTING_POLICIES, default="round_robin",
+           kind="categorical"),
+    Option("fleet.model_parallel", (1, 2, 4), default=1),
+)
+
+
+def serving_space(families: Optional[Iterable[str]] = None, *,
+                  fleet: bool = False) -> ConfigSpace:
     """Scheduler options joined with the kernel-launch space — one flat
-    ``ConfigSpace`` (``serving.*`` + ``family.param`` keys)."""
+    ``ConfigSpace`` (``serving.*`` + ``family.param`` keys).  With
+    ``fleet=True`` the router/replica knobs (``fleet.*`` keys) join too."""
     from repro.kernels import dispatch
 
-    return ConfigSpace(list(SCHEDULER_OPTIONS)
-                       + list(dispatch.launch_space(families).options))
+    options = list(SCHEDULER_OPTIONS)
+    if fleet:
+        options += list(FLEET_OPTIONS)
+    return ConfigSpace(options + list(dispatch.launch_space(families).options))
 
 
 @dataclass(frozen=True)
@@ -296,3 +319,389 @@ class ServingSimulator:
             tokens_per_s=tokens / (makespan * 1e-6),
             slo_violation_rate=(float((lat > self.slo_us).mean())
                                 if has_lat else 0.0))
+
+
+# --------------------------------------------------------------------------
+# fleet: N replica batchers behind a router
+# --------------------------------------------------------------------------
+
+#: modeled strong-scaling exponent of tensor parallelism: TP over ``m``
+#: devices speeds one replica's kernels by ``m ** TP_ALPHA`` (sub-linear —
+#: collectives and launch overhead eat the rest), so replica count vs TP
+#: degree is a genuine trade-off the tuner has to resolve per workload
+TP_ALPHA = 0.75
+
+
+def tp_speedup(model_parallel: int) -> float:
+    return float(model_parallel) ** TP_ALPHA
+
+
+@dataclass(frozen=True)
+class FleetPlan:
+    """The router/replica half of a fleet serving configuration."""
+
+    num_replicas: int = 2
+    routing: str = "round_robin"
+    model_parallel: int = 1
+
+    def __post_init__(self):
+        if self.num_replicas < 1 or self.model_parallel < 1:
+            raise ValueError(f"malformed fleet plan {self}")
+        if self.routing not in ROUTING_POLICIES:
+            raise ValueError(
+                f"unknown routing policy {self.routing!r}; "
+                f"known: {sorted(ROUTING_POLICIES)}")
+
+    @classmethod
+    def from_config(cls, config: Dict[str, Any]) -> "FleetPlan":
+        """Extract the ``fleet.*`` keys of a flat tuner configuration,
+        defaulting anything unspecified."""
+        kw = {}
+        for f in dataclasses.fields(cls):
+            key = FLEET_PREFIX + f.name
+            if key in config:
+                v = config[key]
+                kw[f.name] = v if f.name == "routing" else int(v)
+        return cls(**kw)
+
+
+@dataclass(frozen=True)
+class FleetSpec:
+    """The deployment substrate a fleet runs on: how many devices exist and
+    which of them straggle.  This is ENVIRONMENT state (what a shift
+    perturbs), not a tunable — the tuner picks how to carve the devices into
+    replicas, the spec says what it has to carve."""
+
+    num_devices: int = 8
+    slow_devices: Tuple[int, ...] = ()
+    slowdown: float = 1.0            # slow devices run at 1/slowdown rate
+
+    def __post_init__(self):
+        if self.num_devices < 1 or self.slowdown < 1.0:
+            raise ValueError(f"malformed fleet spec {self}")
+        if any(d < 0 or d >= self.num_devices for d in self.slow_devices):
+            raise ValueError(
+                f"slow_devices {self.slow_devices} out of range for "
+                f"{self.num_devices} devices")
+
+
+@dataclass(frozen=True)
+class FleetReport(SimReport):
+    """Pooled counters of one fleet run plus the router/replica view.
+
+    The three fleet-level counters (``routing_imbalance``,
+    ``replica_queue_depth_max``, ``straggler_flagged``) are genuine
+    mediators — router decisions and fleet health between configuration and
+    objective — so they join :data:`FLEET_COUNTER_NAMES`; the
+    latency/throughput objective clones stay excluded exactly as in
+    :data:`SIM_COUNTER_NAMES`."""
+
+    num_replicas: int = 1
+    routing: str = "round_robin"
+    data_parallel: int = 1
+    model_parallel: int = 1
+    assignments: Tuple[Tuple[int, ...], ...] = ()  # request idx per replica
+    replica_ticks: Tuple[int, ...] = ()
+    replica_wall_us: Tuple[float, ...] = ()
+    routing_imbalance: float = 1.0   # max replica load / perfectly-even load
+    replica_queue_depth_max: float = 0.0  # chosen replica backlog at routing
+    straggler_flagged: int = 0
+    straggler_excluded: Tuple[int, ...] = ()
+
+    def counters(self) -> Dict[str, float]:
+        c = super().counters()
+        c["routing_imbalance"] = self.routing_imbalance
+        c["replica_queue_depth_max"] = self.replica_queue_depth_max
+        c["straggler_flagged"] = float(self.straggler_flagged)
+        return c
+
+
+#: fleet causal-discovery counters: the single-sim mediators plus the
+#: router/straggler mediators — and, as with SIM_COUNTER_NAMES, none of the
+#: objective-metric copies that :meth:`SimReport.counters` also carries
+FLEET_COUNTER_NAMES: Tuple[str, ...] = SIM_COUNTER_NAMES + (
+    "routing_imbalance", "replica_queue_depth_max", "straggler_flagged")
+
+
+def _fleet_infeasible(reason: str, n_requests: int,
+                      fleet_plan: "FleetPlan") -> FleetReport:
+    base = dataclasses.asdict(_infeasible(reason, n_requests))
+    return FleetReport(**base, num_replicas=fleet_plan.num_replicas,
+                       routing=fleet_plan.routing,
+                       model_parallel=fleet_plan.model_parallel,
+                       replica_queue_depth_max=float(n_requests))
+
+
+class _FleetReplica:
+    """One replica's batcher state inside the fleet event loop.
+
+    ``_step`` reproduces the loop body of :meth:`ServingSimulator.run`
+    verbatim (admit chunk under the interleave policy, then one decode tick),
+    so a 1-replica fleet under round-robin routing is bit-identical to the
+    single simulator — the regression test the fleet loop is held to.
+    """
+
+    def __init__(self, sim: ServingSimulator, plan: ServingPlan,
+                 config: Dict[str, Any], reqs, decode_us: float):
+        self.sim = sim
+        self.plan = plan
+        self.config = config
+        self.reqs = reqs
+        self.decode_us = decode_us
+        self.queue: List[int] = []
+        self.resident: List[List] = []
+        self.clock = 0.0
+        self.ticks = 0
+        self.qd_sum = self.qd_max = self.occ_sum = 0.0
+        self.prefill_total = self.decode_total = 0.0
+        self.tokens = 0
+        self.assigned: List[int] = []
+        self.completed: List[Tuple[int, float]] = []  # (req idx, latency us)
+        self.infeasible_reason = ""
+
+    @property
+    def backlog(self) -> int:
+        """Queued + resident requests — what the router load-balances on."""
+        return len(self.queue) + len(self.resident)
+
+    def enqueue(self, idx: int, arrival_us: float) -> None:
+        if not self.queue and not self.resident:
+            # idle replica: jump its clock to the arrival, mirroring the
+            # single simulator's idle fast-forward
+            self.clock = max(self.clock, arrival_us)
+        self.queue.append(idx)
+        self.assigned.append(idx)
+
+    def _step(self) -> bool:
+        """One scheduler iteration; False on a vmem-infeasible prefill."""
+        plan, reqs = self.plan, self.reqs
+        if self.queue and (plan.interleave == "eager" or not self.resident):
+            admit = min(plan.admit_chunk, plan.num_slots - len(self.resident),
+                        len(self.queue))
+            for _ in range(admit):
+                idx = self.queue.pop(0)
+                t_pref, feasible = self.sim.prefill_us(
+                    reqs[idx].prompt_len, plan, self.config)
+                if not feasible:
+                    self.infeasible_reason = "vmem"
+                    return False
+                self.clock += t_pref
+                self.prefill_total += t_pref
+                self.tokens += 1        # prefill emits the first token
+                if reqs[idx].output_len <= 1:
+                    self.completed.append(
+                        (idx, self.clock - reqs[idx].arrival_s * 1e6))
+                else:
+                    self.resident.append([idx, reqs[idx].output_len - 1])
+        if self.resident:
+            if self.ticks >= self.sim.max_ticks:
+                raise DrainStall(
+                    f"fleet replica exceeded {self.sim.max_ticks} ticks "
+                    f"({len(self.completed)}/{len(self.assigned)} assigned "
+                    f"requests completed)",
+                    completed=len(self.completed),
+                    pending=len(self.assigned) - len(self.completed))
+            self.ticks += 1
+            self.clock += self.decode_us
+            self.decode_total += self.decode_us
+            self.occ_sum += len(self.resident)
+            self.qd_sum += len(self.queue)
+            self.qd_max = max(self.qd_max, float(len(self.queue)))
+            self.tokens += len(self.resident)
+            for slot in list(self.resident):
+                slot[1] -= 1
+                if slot[1] == 0:
+                    idx = slot[0]
+                    self.completed.append(
+                        (idx, self.clock - reqs[idx].arrival_s * 1e6))
+                    self.resident.remove(slot)
+        return True
+
+    def advance_until(self, t_us: float) -> bool:
+        """Run scheduler iterations until the replica clock reaches ``t_us``
+        or the replica drains idle — the fleet loop calls this before every
+        routing decision so backlogs reflect the state at arrival time."""
+        while (self.queue or self.resident) and self.clock < t_us:
+            if not self._step():
+                return False
+        return True
+
+    def drain(self) -> bool:
+        while self.queue or self.resident:
+            if not self._step():
+                return False
+        return True
+
+
+class FleetSimulator:
+    """Prices a (trace, plan, fleet plan, launch config) quadruple.
+
+    ``fleet`` (a :class:`FleetSpec`) fixes the deployment substrate; the
+    :class:`FleetPlan` carves it: ``num_devices // num_replicas`` devices per
+    replica, split data-vs-model by ``runtime.elastic.viable_mesh_shape``,
+    with each replica's kernels priced through its own
+    :class:`ServingSimulator` whose hardware is scaled by the TP speedup and
+    (for replicas whose device block contains a slow device) the straggler
+    slowdown.  Arrivals are processed in global time order: every replica is
+    advanced to the arrival instant, then the router places the request on
+    live backlogs — so ``join_shortest_queue``/``power_of_two`` see exactly
+    the state a real router would.  Deterministic: the power-of-two sampler
+    is seeded from the trace realization and replica count.
+    """
+
+    def __init__(self, cell: KernelWorkload, families: Iterable[str], *,
+                 hardware: Optional[HardwareSpec] = None,
+                 slo_us: float = 2_000.0, max_ticks: int = 200_000,
+                 fleet: Optional[FleetSpec] = None):
+        self.cell = cell
+        self.families = tuple(sorted(families))
+        measure_mod._check_modeled(self.families)
+        self.hardware = hardware or HardwareSpec()
+        self.slo_us = float(slo_us)
+        self.max_ticks = int(max_ticks)
+        self.fleet = fleet or FleetSpec()
+
+    # -- replica construction -------------------------------------------
+
+    def mesh_split(self, fleet_plan: FleetPlan) -> Tuple[int, int]:
+        """(data, model) split of one replica's device block."""
+        from repro.runtime.elastic import viable_mesh_shape  # lazy: jax stack
+
+        per_replica = self.fleet.num_devices // fleet_plan.num_replicas
+        return viable_mesh_shape(per_replica, fleet_plan.model_parallel)
+
+    def replica_hardware(self, fleet_plan: FleetPlan) -> List[HardwareSpec]:
+        """Per-replica hardware: TP speedup, divided by the straggler
+        slowdown for replicas whose contiguous device block
+        ``[r*dpr, (r+1)*dpr)`` contains a slow device."""
+        spec = self.fleet
+        dpr = spec.num_devices // fleet_plan.num_replicas
+        _, model = self.mesh_split(fleet_plan)
+        slow = set(spec.slow_devices)
+        out = []
+        for r in range(fleet_plan.num_replicas):
+            s = tp_speedup(model)
+            if any(d in slow for d in range(r * dpr, (r + 1) * dpr)):
+                s /= spec.slowdown
+            out.append(self.hardware.scaled(s, s, s))
+        return out
+
+    # -- routing --------------------------------------------------------
+
+    @staticmethod
+    def _route(k: int, replicas: List[_FleetReplica], policy: str,
+               rng: Optional[np.random.Generator]) -> int:
+        n = len(replicas)
+        if policy == "round_robin" or n == 1:
+            return k % n
+        if policy == "join_shortest_queue":
+            # deterministic tie-break: lowest replica index
+            return min(range(n), key=lambda r: (replicas[r].backlog, r))
+        if policy == "power_of_two":
+            pair = rng.choice(n, size=2, replace=False)
+            lo, hi = int(min(pair)), int(max(pair))
+            if replicas[hi].backlog < replicas[lo].backlog:
+                return hi
+            return lo                  # tie -> lower index
+        raise ValueError(f"unknown routing policy {policy!r}; "
+                         f"known: {sorted(ROUTING_POLICIES)}")
+
+    # -- the fleet event loop -------------------------------------------
+
+    def run(self, trace: Trace, plan: ServingPlan,
+            fleet_plan: Optional[FleetPlan] = None,
+            config: Optional[Dict[str, Any]] = None) -> FleetReport:
+        config = config or {}
+        fleet_plan = fleet_plan or FleetPlan()
+        n = len(trace.requests)
+        if n == 0:
+            raise ValueError("cannot simulate an empty trace")
+        if fleet_plan.num_replicas > self.fleet.num_devices:
+            return _fleet_infeasible("devices", n, fleet_plan)
+        if trace.max_context > plan.cache_len:
+            return _fleet_infeasible("cache_len", n, fleet_plan)
+
+        data, model = self.mesh_split(fleet_plan)
+        sims = [ServingSimulator(self.cell, self.families, hardware=hw,
+                                 slo_us=self.slo_us, max_ticks=self.max_ticks)
+                for hw in self.replica_hardware(fleet_plan)]
+        decode_us = []
+        for sim in sims:
+            d_us, feasible = sim.decode_tick_us(plan, config)
+            if not feasible:
+                return _fleet_infeasible("vmem", n, fleet_plan)
+            decode_us.append(d_us)
+
+        reqs = trace.requests
+        replicas = [_FleetReplica(sim, plan, config, reqs, d)
+                    for sim, d in zip(sims, decode_us)]
+        # the po2 sampler is part of the environment realization: seed it
+        # from the trace identity + replica count so the same (trace,
+        # config) pair always draws the same probe sequence
+        rng = (np.random.default_rng(
+                   [trace.seed, zlib.crc32(trace.spec.encode()),
+                    fleet_plan.num_replicas])
+               if fleet_plan.routing == "power_of_two" else None)
+
+        routed_backlog_max = 0.0
+        for k, req in enumerate(reqs):
+            a_us = req.arrival_s * 1e6
+            for rep in replicas:
+                if not rep.advance_until(a_us):
+                    return _fleet_infeasible("vmem", n, fleet_plan)
+            r = self._route(k, replicas, fleet_plan.routing, rng)
+            routed_backlog_max = max(routed_backlog_max,
+                                     float(replicas[r].backlog))
+            replicas[r].enqueue(k, a_us)
+        for rep in replicas:
+            if not rep.drain():
+                return _fleet_infeasible("vmem", n, fleet_plan)
+
+        # -- pool the per-replica counters ------------------------------
+        total_ticks = sum(rep.ticks for rep in replicas)
+        done = sorted(pair for rep in replicas for pair in rep.completed)
+        lat = np.array([l for _, l in done], np.float64)
+        has_lat = lat.size > 0
+        t0 = reqs[0].arrival_s * 1e6
+        makespan = max(max(rep.clock for rep in replicas if rep.assigned)
+                       - t0, 1e-9)
+        tokens = sum(rep.tokens for rep in replicas)
+        imbalance = (max(len(rep.assigned) for rep in replicas)
+                     / (n / fleet_plan.num_replicas))
+
+        # feed the straggler monitor the realized per-replica decode tick
+        # times (replicas that never ticked are absent — partial reports)
+        from repro.runtime.straggler import StragglerMonitor  # lazy
+        monitor = StragglerMonitor(fleet_plan.num_replicas)
+        step_times = {r: rep.decode_total / rep.ticks
+                      for r, rep in enumerate(replicas) if rep.ticks > 0}
+        if step_times:
+            for _ in range(monitor.patience):
+                monitor.report(step_times)
+
+        return FleetReport(
+            feasible=True, reason="", completed=n, ticks=total_ticks,
+            makespan_us=makespan,
+            queue_depth_mean=sum(rep.qd_sum for rep in replicas)
+            / max(total_ticks, 1),
+            queue_depth_max=max(rep.qd_max for rep in replicas),
+            occupancy_mean=sum(rep.occ_sum for rep in replicas)
+            / max(total_ticks, 1),
+            prefill_us=sum(rep.prefill_total for rep in replicas),
+            decode_us=sum(rep.decode_total for rep in replicas),
+            p50_latency_us=float(np.percentile(lat, 50)) if has_lat else 0.0,
+            p99_latency_us=float(np.percentile(lat, 99)) if has_lat else 0.0,
+            mean_latency_us=float(lat.mean()) if has_lat else 0.0,
+            throughput_rps=n / (makespan * 1e-6),
+            tokens_per_s=tokens / (makespan * 1e-6),
+            slo_violation_rate=(float((lat > self.slo_us).mean())
+                                if has_lat else 0.0),
+            num_replicas=fleet_plan.num_replicas, routing=fleet_plan.routing,
+            data_parallel=data, model_parallel=model,
+            assignments=tuple(tuple(rep.assigned) for rep in replicas),
+            replica_ticks=tuple(rep.ticks for rep in replicas),
+            replica_wall_us=tuple(rep.clock for rep in replicas),
+            routing_imbalance=imbalance,
+            replica_queue_depth_max=routed_backlog_max,
+            straggler_flagged=len(monitor.flagged()),
+            straggler_excluded=tuple(monitor.excluded()))

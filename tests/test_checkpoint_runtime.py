@@ -146,7 +146,9 @@ def test_straggler_recovers():
 def test_viable_mesh_shape():
     assert viable_mesh_shape(256, 16) == (16, 16)
     assert viable_mesh_shape(192, 16) == (12, 16)
-    assert viable_mesh_shape(100, 16) == (25, 4)
+    # degradation lands on the largest divisor <= the request, not the
+    # nearest halving: 100 devices at TP 16 keep TP 10 (halving gave TP 4)
+    assert viable_mesh_shape(100, 16) == (10, 10)
 
 
 def test_adjust_run_for_devices_preserves_global_batch():

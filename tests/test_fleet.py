@@ -1,0 +1,454 @@
+"""Sharded serving fleet: router policies over per-replica batchers, the
+fleet-runtime fixes they depend on (per-host straggler seeding, mesh-shape
+divisor degradation), fleet disruption shifts (straggler/resize), the fleet
+environments (simulator + replay) end to end, and the counter audit keeping
+objective clones out of the causal-discovery variables."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from conftest import tiny_model_config
+from repro.envs.measure import (KernelWorkload, backend_names, make_backend,
+                                shift_kinds, shifts_for)
+from repro.envs.replay_env import (REPLAY_FLEET_COUNTER_NAMES,
+                                   ReplayServingEnv, make_sim2real_pair)
+from repro.envs.serving_env import ServingEnv, fleet_spec_for, make_fleet_pair
+from repro.runtime.elastic import adjust_run_for_devices, viable_mesh_shape
+from repro.runtime.straggler import StragglerMonitor
+from repro.tuner.space import launch_config_of
+from repro.utils.config import (MeshConfig, ParallelConfig, RunConfig,
+                                ShapeConfig)
+from repro.workloads import (FLEET_COUNTER_NAMES, FleetPlan, FleetReport,
+                             FleetSimulator, FleetSpec, ServingPlan,
+                             ServingSimulator, make_workload, serving_space,
+                             tp_speedup)
+
+TINY_CELL = KernelWorkload(name="tiny", batch=1, seq_len=128, heads=2,
+                           kv_heads=1, head_dim=16, d_model=64, channels=64,
+                           scan_state=4, ssm_heads=2, ssm_head_dim=16,
+                           ssm_state=8)
+FAMS = ("flash_attention", "rmsnorm")
+SPEC = ("bursty:rate=2500,burst=4,horizon=0.02,mean_prompt=32,"
+        "mean_output=16,max_len=96")
+
+
+def _trace(seed=0):
+    return make_workload(SPEC).generate(seed)
+
+
+def _fleet_sim(**kw):
+    kw.setdefault("fleet", FleetSpec(num_devices=8))
+    return FleetSimulator(TINY_CELL, FAMS, **kw)
+
+
+# --------------------------------------------------------------------------
+# straggler monitor: partial reports (the bugfix)
+# --------------------------------------------------------------------------
+
+def test_straggler_partial_reports_seed_per_host():
+    """A late joiner's first report seeds its OWN EWMA — the old global
+    `_seen` flag blended every later host up from 0.0."""
+    mon = StragglerMonitor(3)
+    mon.report({0: 1.0, 1: 1.0})           # host 2 idle this step
+    mon.report({0: 1.0, 1: 1.0, 2: 1.0})   # late joiner
+    assert mon._ewma[2] == 1.0             # seeded, not 0.8 * 0 + 0.2 * 1
+    assert mon.flagged() == []
+
+
+def test_straggler_median_ignores_silent_hosts():
+    """Hosts that never report stay out of the fleet median — under the old
+    all-hosts median, 2 silent hosts out of 4 pinned the median at 0.5x and
+    flagged every healthy host."""
+    mon = StragglerMonitor(4)
+    for _ in range(5):
+        mon.report({0: 1.0, 1: 1.0})       # hosts 2, 3 never report
+    assert mon.flagged() == []
+    assert mon._median() == 1.0
+
+
+def test_straggler_silent_host_never_flagged():
+    mon = StragglerMonitor(3)
+    for _ in range(10):
+        mon.report({0: 1.0, 1: 5.0})
+    assert 1 in mon.flagged()
+    assert 2 not in mon.flagged()          # no report -> no flag
+
+
+def test_straggler_exclusion_after_patience():
+    mon = StragglerMonitor(4, patience=3)
+    for i in range(3):
+        mon.report({0: 1.0, 1: 1.0, 2: 1.0, 3: 9.0})
+        assert mon.should_exclude(3) == (i >= 2)
+    assert mon.excluded() == [3]
+    # recovery clears the streak
+    for _ in range(30):
+        mon.report({0: 1.0, 1: 1.0, 2: 1.0, 3: 1.0})
+    assert mon.excluded() == []
+
+
+def test_straggler_empty_report_is_noop():
+    mon = StragglerMonitor(2)
+    mon.report({})
+    assert mon.flagged() == [] and mon._median() == 0.0
+
+
+# --------------------------------------------------------------------------
+# mesh-shape divisor degradation + microbatch divisibility (the bugfix)
+# --------------------------------------------------------------------------
+
+def test_viable_mesh_shape_largest_divisor():
+    # exact divisors keep the requested TP
+    assert viable_mesh_shape(8, 4) == (2, 4)
+    assert viable_mesh_shape(8, 8) == (1, 8)
+    # degradation lands on the largest divisor <= the request — the old
+    # halving walked 6 -> 3 -> 1 past the viable TP 4
+    assert viable_mesh_shape(8, 6) == (2, 4)
+    assert viable_mesh_shape(100, 16) == (10, 10)
+    assert viable_mesh_shape(12, 9) == (2, 6)
+    # clamping: request above device count, prime counts, degenerate TP
+    assert viable_mesh_shape(4, 100) == (1, 4)
+    assert viable_mesh_shape(7, 3) == (7, 1)
+    assert viable_mesh_shape(5, 1) == (5, 1)
+    with pytest.raises(ValueError):
+        viable_mesh_shape(0, 4)
+
+
+def test_adjust_run_for_devices_raises_when_batch_unsplittable():
+    """data=3 x any power-of-two microbatch never divides global_batch=32:
+    the old loop exited silently and handed back an invalid RunConfig."""
+    run = RunConfig(model=tiny_model_config(),
+                    shape=ShapeConfig("t", 32, 32, "train"),
+                    mesh=MeshConfig((4, 1), ("data", "model")),
+                    parallel=ParallelConfig(tp=1, microbatch=1))
+    with pytest.raises(ValueError, match="global_batch"):
+        adjust_run_for_devices(run, 3)
+    # the same run on a dividing device count still adjusts cleanly
+    new = adjust_run_for_devices(run, 8)
+    assert new.mesh.num_devices == 8
+
+
+# --------------------------------------------------------------------------
+# fleet plan / spec / space plumbing
+# --------------------------------------------------------------------------
+
+def test_fleet_plan_from_config_and_validation():
+    assert FleetPlan.from_config({}) == FleetPlan()
+    plan = FleetPlan.from_config(
+        {"fleet.num_replicas": 4, "fleet.routing": "power_of_two",
+         "fleet.model_parallel": 2, "serving.num_slots": 8})
+    assert plan == FleetPlan(num_replicas=4, routing="power_of_two",
+                             model_parallel=2)
+    with pytest.raises(ValueError, match="routing"):
+        FleetPlan(routing="least_loaded")
+    with pytest.raises(ValueError):
+        FleetPlan(num_replicas=0)
+
+
+def test_fleet_spec_validation():
+    with pytest.raises(ValueError):
+        FleetSpec(num_devices=0)
+    with pytest.raises(ValueError):
+        FleetSpec(num_devices=4, slow_devices=(4,))
+    with pytest.raises(ValueError):
+        FleetSpec(slowdown=0.5)
+
+
+def test_serving_space_fleet_flag():
+    flat = serving_space(FAMS)
+    fleet = serving_space(FAMS, fleet=True)
+    fleet_names = {"fleet.num_replicas", "fleet.routing",
+                   "fleet.model_parallel"}
+    assert not fleet_names & set(flat.names)
+    assert fleet_names <= set(fleet.names)
+    # the fleet space extends, not replaces, the serving space
+    assert set(flat.names) <= set(fleet.names)
+
+
+def test_launch_config_of_excludes_fleet_knobs():
+    cfg = {"fleet.num_replicas": 4, "fleet.routing": "round_robin",
+           "serving.num_slots": 8, "flash_attention.q_block": 64}
+    assert launch_config_of(cfg) == {"flash_attention.q_block": 64}
+
+
+def test_tp_speedup_sublinear():
+    assert tp_speedup(1) == 1.0
+    assert 1.0 < tp_speedup(2) < 2.0
+    assert tp_speedup(2) < tp_speedup(4) < 4.0
+
+
+def test_mesh_split_and_replica_hardware():
+    sim = _fleet_sim(fleet=FleetSpec(num_devices=8, slow_devices=(5,),
+                                     slowdown=2.0))
+    plan = FleetPlan(num_replicas=4, model_parallel=2)
+    assert sim.mesh_split(plan) == (1, 2)      # 2 devices per replica
+    hw = sim.replica_hardware(plan)
+    assert len(hw) == 4
+    # replica 2 owns devices [4, 6) -> contains slow device 5
+    base = sim.hardware.mxu_flops_per_us * tp_speedup(2)
+    assert hw[0].mxu_flops_per_us == pytest.approx(base)
+    assert hw[2].mxu_flops_per_us == pytest.approx(base / 2.0)
+    assert hw[3].mxu_flops_per_us == pytest.approx(base)
+
+
+# --------------------------------------------------------------------------
+# router policies
+# --------------------------------------------------------------------------
+
+class _Stub:
+    def __init__(self, backlog):
+        self.backlog = backlog
+
+
+def test_route_round_robin_exact():
+    reps = [_Stub(9), _Stub(0), _Stub(0)]
+    got = [FleetSimulator._route(k, reps, "round_robin", None)
+           for k in range(7)]
+    assert got == [0, 1, 2, 0, 1, 2, 0]    # ignores backlog by design
+
+
+def test_route_jsq_deterministic_tie_break():
+    reps = [_Stub(2), _Stub(1), _Stub(1)]
+    assert FleetSimulator._route(0, reps, "join_shortest_queue", None) == 1
+    reps = [_Stub(0), _Stub(0), _Stub(0)]
+    assert FleetSimulator._route(5, reps, "join_shortest_queue", None) == 0
+
+
+def test_route_power_of_two_seeded_and_tie_breaks_low():
+    reps = [_Stub(3), _Stub(3), _Stub(3), _Stub(3)]
+    # the probe sequence is a pure function of the rng state
+    picks_a = [FleetSimulator._route(k, reps, "power_of_two",
+                                     np.random.default_rng(7))
+               for k in range(10)]
+    picks_b = [FleetSimulator._route(k, reps, "power_of_two",
+                                     np.random.default_rng(7))
+               for k in range(10)]
+    assert picks_a == picks_b
+    # all tied: whichever pair is probed, the LOWER index wins
+    rng = np.random.default_rng(3)
+    pair = rng.choice(4, size=2, replace=False)
+    assert FleetSimulator._route(0, reps, "power_of_two",
+                                 np.random.default_rng(3)) == int(min(pair))
+    # strictly smaller backlog in the probed pair wins
+    reps = [_Stub(0), _Stub(9)]
+    assert FleetSimulator._route(0, reps, "power_of_two",
+                                 np.random.default_rng(0)) == 0
+
+
+def test_route_unknown_policy_raises():
+    # two replicas: a 1-replica fleet short-circuits before the policy check
+    with pytest.raises(ValueError, match="routing policy"):
+        FleetSimulator._route(0, [_Stub(0), _Stub(0)], "least_loaded", None)
+    with pytest.raises(ValueError, match="routing policy"):
+        FleetPlan(routing="least_loaded")
+
+
+def test_round_robin_assignment_partition():
+    sim = _fleet_sim()
+    report = sim.run(_trace(), ServingPlan(),
+                     FleetPlan(num_replicas=4, routing="round_robin"))
+    assert report.feasible
+    n = report.completed
+    for r, idxs in enumerate(report.assignments):
+        assert idxs == tuple(range(r, n, 4))
+
+
+def test_power_of_two_deterministic_across_runs():
+    sim = _fleet_sim()
+    plan = FleetPlan(num_replicas=4, routing="power_of_two")
+    a = sim.run(_trace(), ServingPlan(), plan)
+    b = sim.run(_trace(), ServingPlan(), plan)
+    assert a == b                          # frozen dataclass: bit-identical
+    # a different trace seed draws a different probe sequence
+    c = sim.run(_trace(seed=1), ServingPlan(), plan)
+    assert c.assignments != a.assignments
+
+
+def test_jsq_balances_heterogeneous_fleet():
+    """JSQ routes away from the straggling replica; round-robin cannot.
+    Needs a saturating arrival rate — when every replica drains between
+    arrivals, all backlogs tie at zero and JSQ degenerates to the
+    lowest-index tie-break."""
+    dense = make_workload("poisson:rate=400000,horizon=0.002,mean_prompt=16,"
+                          "mean_output=16,max_len=96").generate(0)
+    spec = FleetSpec(num_devices=8, slow_devices=(0,), slowdown=50.0)
+    sim = _fleet_sim(fleet=spec)
+    rr = sim.run(dense, ServingPlan(),
+                 FleetPlan(num_replicas=4, routing="round_robin"))
+    jsq = sim.run(dense, ServingPlan(),
+                  FleetPlan(num_replicas=4, routing="join_shortest_queue"))
+    assert rr.feasible and jsq.feasible
+    # replica 0 owns the slow device: JSQ sends it less than its even share
+    assert len(jsq.assignments[0]) < len(rr.assignments[0])
+    assert jsq.p99_latency_us < rr.p99_latency_us
+
+
+# --------------------------------------------------------------------------
+# fleet event loop vs the single simulator
+# --------------------------------------------------------------------------
+
+def test_single_replica_fleet_bit_identical_to_serving_sim():
+    """fleet(R=1, mp=1, round_robin) must reproduce ServingSimulator.run
+    field-for-field — the regression the fleet loop is held to."""
+    trace = _trace()
+    plan = ServingPlan()
+    single = ServingSimulator(TINY_CELL, FAMS).run(trace, plan)
+    fleet = _fleet_sim().run(trace, plan, FleetPlan(num_replicas=1,
+                                                    model_parallel=1))
+    for f in dataclasses.fields(single):
+        assert getattr(fleet, f.name) == getattr(single, f.name), f.name
+    assert fleet.num_replicas == 1
+    assert fleet.assignments == (tuple(range(len(trace.requests))),)
+
+
+def test_fleet_run_deterministic():
+    sim = _fleet_sim(fleet=FleetSpec(num_devices=8, slow_devices=(2,),
+                                     slowdown=3.0))
+    plan = FleetPlan(num_replicas=4, routing="join_shortest_queue",
+                     model_parallel=2)
+    assert sim.run(_trace(), ServingPlan(), plan) == \
+        sim.run(_trace(), ServingPlan(), plan)
+
+
+def test_fleet_infeasible_reasons():
+    sim = _fleet_sim(fleet=FleetSpec(num_devices=2))
+    r = sim.run(_trace(), ServingPlan(), FleetPlan(num_replicas=4))
+    assert not r.feasible and r.reason == "devices"
+    r = sim.run(_trace(), ServingPlan(cache_len=16), FleetPlan())
+    assert not r.feasible and r.reason == "cache_len"
+    assert isinstance(r, FleetReport)
+    # infeasible reports still carry every fleet counter
+    assert set(FLEET_COUNTER_NAMES) <= set(r.counters())
+
+
+def test_fleet_counters_and_straggler_mediator():
+    spec = FleetSpec(num_devices=8, slow_devices=(0,), slowdown=50.0)
+    report = _fleet_sim(fleet=spec).run(
+        _trace(), ServingPlan(), FleetPlan(num_replicas=8))
+    c = report.counters()
+    assert set(FLEET_COUNTER_NAMES) <= set(c)
+    assert c["routing_imbalance"] >= 1.0
+    # an isolated heavy straggler among 8 replicas is flagged and, after
+    # `patience` monitor rounds, marked for exclusion
+    assert c["straggler_flagged"] >= 1.0
+    assert 0 in report.straggler_excluded
+
+
+# --------------------------------------------------------------------------
+# fleet disruption shifts
+# --------------------------------------------------------------------------
+
+def test_disruption_shift_kinds_registered():
+    assert {"straggler", "resize"} <= set(shift_kinds())
+    assert {"shifted:straggler", "shifted:resize"} <= set(backend_names())
+    (s,) = shifts_for("straggler")
+    assert s.straggler_frac > 0 and s.straggler_slowdown > 1.0
+    (s,) = shifts_for("resize")
+    assert s.device_scale < 1.0
+
+
+def test_disruption_shifts_usable_as_measurement_backends():
+    """shifted:straggler / shifted:resize drop into the same kernel-grid
+    backend plumbing as every other registered kind."""
+    from repro.kernels import dispatch
+
+    cfg = dispatch.launch_space(FAMS).default_config()
+    for kind in ("shifted:straggler", "shifted:resize"):
+        backend = make_backend(kind, TINY_CELL, FAMS, seed=0)
+        counters, y = backend.measure(cfg)
+        assert np.isfinite(y) and y > 0
+        assert counters
+
+
+def test_fleet_spec_for_composition_and_determinism():
+    spec = fleet_spec_for(shifts_for("straggler"), num_devices=8)
+    assert spec.num_devices == 8
+    assert len(spec.slow_devices) == 2     # frac 0.25 of 8
+    assert spec.slowdown == 3.0
+    assert spec == fleet_spec_for(shifts_for("straggler"), num_devices=8)
+    resized = fleet_spec_for(shifts_for("resize"), num_devices=8)
+    assert resized == FleetSpec(num_devices=6)   # 0.75 * 8
+    healthy = fleet_spec_for((), num_devices=8)
+    assert healthy == FleetSpec(num_devices=8)
+    # composition: resize shrinks the substrate the straggler draw sees
+    both = fleet_spec_for(shifts_for("resize") + shifts_for("straggler"),
+                          num_devices=8)
+    assert both.num_devices == 6 and len(both.slow_devices) == 2
+
+
+# --------------------------------------------------------------------------
+# fleet environments end to end
+# --------------------------------------------------------------------------
+
+def test_serving_env_fleet_end_to_end():
+    env = ServingEnv(SPEC, TINY_CELL, FAMS, seed=0, fleet=True)
+    assert tuple(env.counter_names) == FLEET_COUNTER_NAMES
+    assert {"fleet.num_replicas", "fleet.routing"} <= set(env.space.names)
+    counters, y = env.intervene(env.space.default_config())
+    assert np.isfinite(y) and y > 0
+    assert set(env.counter_names) <= set(counters)
+    # the counter audit: objective clones visible in metrics, OUT of the
+    # causal-discovery variables
+    assert {"latency", "throughput"} <= set(counters)
+    assert not {"latency", "throughput"} & set(env.counter_names)
+
+
+def test_make_fleet_pair_shares_trace_and_differs_in_disruption():
+    src, tgt = make_fleet_pair(SPEC, "straggler", TINY_CELL, FAMS, seed=0)
+    assert src.trace == tgt.trace          # identical realization
+    assert src.space.names == tgt.space.names
+    assert src.fleet_spec == FleetSpec(num_devices=8)
+    assert tgt.fleet_spec.slow_devices     # target limps
+    # resize shrinks the target's device budget instead
+    _, tgt_rs = make_fleet_pair(SPEC, "resize", TINY_CELL, FAMS, seed=0)
+    assert tgt_rs.fleet_spec == FleetSpec(num_devices=6)
+    # the disruption moves the objective at the default config
+    cfg = src.space.default_config()
+    assert tgt.simulate(cfg).p99_latency_us > src.simulate(cfg).p99_latency_us
+
+
+def test_fleet_pair_straggler_set_independent_of_seed():
+    """y_opt sweeps (seed 99) and method runs (seeds 0..2) must price the
+    SAME limping devices."""
+    _, a = make_fleet_pair(SPEC, "straggler", TINY_CELL, FAMS, seed=0)
+    _, b = make_fleet_pair(SPEC, "straggler", TINY_CELL, FAMS, seed=99,
+                           trace_seed=0)
+    assert a.fleet_spec == b.fleet_spec
+    assert a.trace == b.trace
+
+
+# --------------------------------------------------------------------------
+# replay fleet (real batcher behind the router plan)
+# --------------------------------------------------------------------------
+
+REPLAY_SPEC = ("poisson:rate=1200,horizon=0.003,mean_prompt=5,"
+               "mean_output=3,max_len=12")
+
+
+def test_replay_fleet_counters_and_measurement():
+    env = ReplayServingEnv(REPLAY_SPEC, seed=0, trace_seed=0, fleet=True,
+                           repeats=1)
+    assert tuple(env.counter_names) == REPLAY_FLEET_COUNTER_NAMES
+    assert not {"latency", "throughput"} & set(env.counter_names)
+    assert {"fleet.num_replicas", "fleet.routing"} <= set(env.space.names)
+    cfg = dict(env.space.default_config())
+    cfg["fleet.num_replicas"] = 2
+    counters, y = env.intervene(cfg)
+    assert np.isfinite(y) and y > 0
+    assert set(env.counter_names) <= set(counters)
+    # fleet.* never touch compiled shapes: replicas share one deployment
+    assert env.infeasible_reason(cfg) == ""
+    cfg["fleet.num_replicas"] = 16         # > num_devices
+    assert env.infeasible_reason(cfg) == "devices"
+    _, y_inf = env.intervene(cfg)
+    assert y_inf == float("inf")
+
+
+def test_sim2real_pair_fleet_mode():
+    src, tgt = make_sim2real_pair(REPLAY_SPEC, seed=0, trace_seed=0,
+                                  fleet=True, repeats=1)
+    assert isinstance(src, ServingEnv) and isinstance(tgt, ReplayServingEnv)
+    assert src.fleet and tgt.fleet
+    assert src.space.names == tgt.space.names
+    assert src.trace == tgt.trace
