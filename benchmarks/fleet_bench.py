@@ -53,6 +53,10 @@ def main(argv=None) -> int:
     ap.add_argument("--query-batch", type=int, default=1,
                     help="measurements per ask/tell round (1 = the "
                          "historical sequential loop)")
+    ap.add_argument("--paged", action=argparse.BooleanOptionalAction,
+                    default=False,
+                    help="tune the paged-KV surface (pages.* + "
+                         "paged_attention launch knobs) alongside fleet.*")
     ap.add_argument("--out", default="BENCH_fleet.json")
     args = ap.parse_args(argv)
 
@@ -87,7 +91,8 @@ def main(argv=None) -> int:
     doc = run_fleet_bench(cells=cells, shifts=shifts, methods=methods,
                           budget=budget, n_source=n_source,
                           n_target_init=n_target_init, seeds=seeds,
-                          pool=pool, query_batch=args.query_batch)
+                          pool=pool, query_batch=args.query_batch,
+                          paged=args.paged)
     with open(args.out, "w") as f:
         json.dump(doc, f, indent=2)
 

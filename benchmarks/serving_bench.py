@@ -55,6 +55,10 @@ def main(argv=None) -> int:
     ap.add_argument("--query-batch", type=int, default=1,
                     help="measurements per ask/tell round (1 = the "
                          "historical sequential loop)")
+    ap.add_argument("--paged", action=argparse.BooleanOptionalAction,
+                    default=False,
+                    help="tune the paged-KV surface (pages.* + "
+                         "paged_attention launch knobs) alongside serving.*")
     ap.add_argument("--out", default="BENCH_serving.json")
     args = ap.parse_args(argv)
 
@@ -89,7 +93,8 @@ def main(argv=None) -> int:
     doc = run_serving_bench(cells=cells, targets=targets, methods=methods,
                             budget=budget, n_source=n_source,
                             n_target_init=n_target_init, seeds=seeds,
-                            pool=pool, query_batch=args.query_batch)
+                            pool=pool, query_batch=args.query_batch,
+                            paged=args.paged)
     with open(args.out, "w") as f:
         json.dump(doc, f, indent=2)
 
@@ -103,6 +108,14 @@ def main(argv=None) -> int:
         for method, stats in ranked:
             print(f"  {method:16s} mean final regret = "
                   f"{stats['mean_final_regret']*100:7.2f}%")
+            best = min(stats["runs"], key=lambda r: r["final_regret"])
+            cfg = best.get("best_config") or {}
+            paged_knobs = {k: v for k, v in cfg.items()
+                           if k.startswith(("pages.", "paged_attention."))}
+            if paged_knobs:
+                knobs = ", ".join(f"{k.split('.', 1)[1]}={v}"
+                                  for k, v in sorted(paged_knobs.items()))
+                print(f"  {'':16s} best paged config: {knobs}")
     gate = doc["gate"]
     print(f"\n[serving_bench] wrote {args.out} "
           f"({doc['meta']['wall_s']:.1f}s)")

@@ -207,7 +207,30 @@ class LaunchGeometry:
         t = grid * w.launch_overhead_us + hbm / self.hardware.hbm_bytes_per_us
         return t, grid, vmem, flops, hbm
 
-    MODELS = ("flash_attention", "mamba_scan", "ssd", "rmsnorm")
+    def paged_attention(self, p) -> Tuple[float, float, float, float, float]:
+        w = self.workload
+        ps = int(p["page_size"])
+        n_pages = _ceil_div(w.seq_len, ps)
+        grid = w.batch * w.kv_heads * n_pages
+        g = max(w.heads // max(w.kv_heads, 1), 1)
+        ctx = n_pages * ps
+        # one new token per slot attending over the page-quantized context
+        flops = w.batch * w.heads * ctx * 4 * w.head_dim
+        # the paged win: VMEM holds one (page_size x head_dim) K/V page pair
+        # per stream — independent of seq_len, unlike the dense decode cache
+        vmem = (BF16 * 2 * 2 * ps * w.head_dim       # k/v page, dbl-buffered
+                + BF16 * 2 * g * w.head_dim          # q in / out block
+                + F32 * g * (w.head_dim + 2 * LANE))  # acc/m/l scratch
+        hbm = (F32 * grid * 2 * ps * w.head_dim       # streamed pool pages
+               + F32 * w.batch * w.heads * w.head_dim * 2  # q in, out
+               + F32 * w.batch * n_pages)             # page table
+        t = (grid * w.launch_overhead_us
+             + flops / (self.hardware.mxu_flops_per_us * _mxu_util(ps))
+             + hbm / self.hardware.hbm_bytes_per_us)
+        return t, grid, vmem, flops, hbm
+
+    MODELS = ("flash_attention", "mamba_scan", "ssd", "rmsnorm",
+              "paged_attention")
 
     def family_cost(self, family: str, params: Dict[str, Any]
                     ) -> Tuple[float, float, float, float, float]:
@@ -608,6 +631,15 @@ class WallClockBackend:
             return (x, dt, A, B, C, D)
         if family == "rmsnorm":
             return (arr(w.batch, w.seq_len, w.d_model), arr(w.d_model))
+        if family == "paged_attention":
+            # the pool arrays' shapes depend on the candidate's page_size
+            # launch parameter, but this backend's inputs are built once per
+            # family and reused across configs — honest paged timings need
+            # the replay environment (a real batcher), not this harness
+            raise KeyError(
+                "paged_attention has no config-independent representative "
+                "inputs (the KV pool shape IS the launch config); measure "
+                "it through ReplayServingEnv instead")
         raise KeyError(f"no representative workload for family {family!r}")
 
     def _family_inputs(self, family: str) -> Tuple[Any, ...]:

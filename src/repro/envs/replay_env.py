@@ -41,12 +41,14 @@ from repro.envs import measure as measure_mod
 from repro.envs.base import PooledEnv
 from repro.envs.measure import HardwareSpec, KernelWorkload, LaunchGeometry
 from repro.envs.serving_env import OBJECTIVES, ServingEnv
+from repro.serving.paging import PagedPlan
 from repro.workloads.sim import (SIM_COUNTER_NAMES, FleetPlan, FleetReport,
                                  ServingPlan, serving_space)
 from repro.workloads.traces import Trace, TraceWorkload, make_workload
 
-#: the simulator's discovery counters plus the replay-only rejection signal
-REPLAY_COUNTER_NAMES: Tuple[str, ...] = SIM_COUNTER_NAMES + ("rejected_rate",)
+#: the simulator's discovery counters plus the replay-only rejection signals
+REPLAY_COUNTER_NAMES: Tuple[str, ...] = SIM_COUNTER_NAMES + (
+    "rejected_rate", "rejected_too_long")
 
 #: fleet-mode discovery counters: the replay set plus the router/straggler
 #: mediators — objective clones stay out, exactly as in FLEET_COUNTER_NAMES
@@ -230,17 +232,25 @@ class ReplayServingEnv(PooledEnv):
     # -- feasibility (analytic, like WallClockBackend's gate) ------------
 
     def infeasible_reason(self, config: Dict[str, Any]) -> str:
-        """"" when deployable; otherwise why not (``cache_len``/``vmem``/
-        ``devices``), decided analytically so undeployable configs never
-        reach the batcher."""
+        """"" when deployable; otherwise why not (``cache_len``/``pages``/
+        ``vmem``/``devices``), decided analytically so undeployable configs
+        never reach the batcher.  The paged branch mirrors
+        ``ServingSimulator.capacity_reason`` so the analytic gate and the
+        real deployment agree."""
         plan = ServingPlan.from_config(config)
-        if self.trace.max_context > plan.cache_len:
+        paged = PagedPlan.from_config(config)
+        if paged.paging:
+            if (self.trace.max_context > paged.slot_capacity
+                    or paged.pages_for(self.trace.max_context)
+                    > paged.pool_pages):
+                return "pages"
+        elif self.trace.max_context > plan.cache_len:
             return "cache_len"
         if (self.fleet and FleetPlan.from_config(config).num_replicas
                 > self.num_devices):
             return "devices"
-        w = dataclasses.replace(self.cell, batch=plan.num_slots,
-                                seq_len=plan.cache_len)
+        seq = paged.slot_capacity if paged.paging else plan.cache_len
+        w = dataclasses.replace(self.cell, batch=plan.num_slots, seq_len=seq)
         _, _, feasible = LaunchGeometry(w, self.hardware).totals(
             self.families, config)
         return "" if feasible else "vmem"
@@ -249,7 +259,9 @@ class ReplayServingEnv(PooledEnv):
         n = float(len(self.trace.requests))
         c = {"queue_depth_mean": n, "queue_depth_max": n,
              "occupancy_mean": 0.0, "prefill_decode_ratio": 0.0,
-             "slo_violation_rate": 1.0, "rejected_rate": 1.0,
+             "slo_violation_rate": 1.0, "page_pool_occupancy": 0.0,
+             "page_faults": 0.0, "prefill_chunks_inflight": 0.0,
+             "rejected_rate": 1.0, "rejected_too_long": 0.0,
              "latency": 0.0, "throughput": 0.0}
         if self.fleet:
             c.update(routing_imbalance=1.0, replica_queue_depth_max=n,
@@ -272,7 +284,8 @@ class ReplayServingEnv(PooledEnv):
         batcher = ContinuousBatcher(
             self.model, self.run, self.params, num_slots=plan.num_slots,
             cache_len=plan.cache_len, interleave=plan.interleave,
-            launch_config=launch_config_of(config), seed=self._replay_seed)
+            launch_config=launch_config_of(config), seed=self._replay_seed,
+            paged=PagedPlan.from_config(config), on_too_long="reject")
         # warmup replays trigger every jit compile this deployment needs
         # (each distinct prompt length traces prefill once) so the measured
         # replay times execution, not compilation — the per-replay delta
@@ -303,8 +316,9 @@ class ReplayServingEnv(PooledEnv):
             return self._infeasible_counters(), bad
         if self.fleet:
             plan = ServingPlan.from_config(config)
-            num_slots, cache_len, frozen = self._deploy_key(plan, config)
-            batcher = self._fresh_batcher(num_slots, cache_len, frozen)
+            num_slots, cache_len, paged, frozen = self._deploy_key(plan,
+                                                                   config)
+            batcher = self._fresh_batcher(num_slots, cache_len, paged, frozen)
             self._warm_deployment(batcher, frozen)
             batcher.interleave = plan.interleave
             try:
@@ -388,7 +402,15 @@ class ReplayServingEnv(PooledEnv):
             "prefill_decode_ratio": prefill / max(decode, 1e-9),
             "slo_violation_rate": (float((arr > self.slo_ms).mean())
                                    if arr.size else 0.0),
+            "page_pool_occupancy": (sum(r.page_pool_occupancy * r.ticks
+                                        for r in reports) / max(ticks, 1)),
+            "page_faults": float(sum(r.page_faults for r in reports)),
+            "prefill_chunks_inflight": (
+                sum(r.prefill_chunks_inflight * r.ticks
+                    for r in reports) / max(ticks, 1)),
             "rejected_rate": rejected / max(rejected + completed, 1),
+            "rejected_too_long": float(sum(r.rejected_too_long
+                                           for r in reports)),
             "latency": p99,
             "throughput": completed / max(wall, 1e-9),
             "routing_imbalance": plan_report.routing_imbalance,
@@ -445,17 +467,21 @@ class ReplayServingEnv(PooledEnv):
         from repro.tuner.space import launch_config_of
         from repro.train.serve_step import freeze_launch_config
 
-        return (plan.num_slots, plan.cache_len,
+        # PagedPlan is a frozen dataclass of scalars — hashable, and it
+        # captures the paged compiled shape (pool, page size, table width)
+        # the launch-config half does not
+        return (plan.num_slots, plan.cache_len, PagedPlan.from_config(config),
                 freeze_launch_config(launch_config_of(config)))
 
-    def _fresh_batcher(self, num_slots: int, cache_len: int, frozen: tuple):
+    def _fresh_batcher(self, num_slots: int, cache_len: int,
+                       paged: PagedPlan, frozen: tuple):
         from repro.serving.scheduler import ContinuousBatcher
 
         return ContinuousBatcher(
             self.model, self.run, self.params, num_slots=num_slots,
             cache_len=cache_len, interleave="eager",
             launch_config={f: dict(p) for f, p in frozen},
-            seed=self._replay_seed)
+            seed=self._replay_seed, paged=paged, on_too_long="reject")
 
     def _warm_deployment(self, batcher, frozen: tuple) -> None:
         """Trigger every jit compile this deployment's replays need, without
@@ -468,7 +494,7 @@ class ReplayServingEnv(PooledEnv):
         import jax.numpy as jnp
 
         wkey = (self._model_seed, self.model_cfg, batcher.num_slots,
-                batcher.cache_len, frozen)
+                batcher.cache_len, batcher.paged, frozen)
         if wkey in _WARMED_DEPLOYMENTS:
             return
         lens = sorted({r.prompt_len for r in self.trace.requests
@@ -515,8 +541,8 @@ class ReplayServingEnv(PooledEnv):
             key = self._deploy_key(ServingPlan.from_config(cfg), cfg)
             groups.setdefault(key, []).append(i)
 
-        for (num_slots, cache_len, frozen), members in groups.items():
-            batcher = self._fresh_batcher(num_slots, cache_len, frozen)
+        for (num_slots, cache_len, paged, frozen), members in groups.items():
+            batcher = self._fresh_batcher(num_slots, cache_len, paged, frozen)
             self._warm_deployment(batcher, frozen)
             for i in members:
                 plan = ServingPlan.from_config(configs[i])
@@ -529,7 +555,7 @@ class ReplayServingEnv(PooledEnv):
                     # a stalled replay leaves residents behind — rebuild
                     # (cheap: every compile is already cached)
                     batcher = self._fresh_batcher(num_slots, cache_len,
-                                                  frozen)
+                                                  paged, frozen)
 
         for cfg, res in zip(configs, results):
             self._remember(cfg, res[0], res[1])

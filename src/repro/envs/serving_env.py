@@ -39,7 +39,7 @@ from repro.kernels import dispatch
 from repro.workloads.sim import (FLEET_COUNTER_NAMES, SIM_COUNTER_NAMES,
                                  FleetPlan, FleetSimulator, FleetSpec,
                                  ServingPlan, ServingSimulator, SimReport,
-                                 serving_space)
+                                 serving_space, stalled_report)
 from repro.workloads.traces import Trace, TraceWorkload, make_workload
 
 OBJECTIVES = ("latency", "throughput")
@@ -164,7 +164,16 @@ class ServingEnv(PooledEnv):
 
     def _measure(self, config: Dict[str, Any]
                  ) -> Tuple[Dict[str, float], float]:
-        report = self.simulate(config)
+        from repro.serving.scheduler import DrainStall
+
+        try:
+            report = self.simulate(config)
+        except DrainStall:
+            # a deployment that cannot drain its own trace (e.g. a starved
+            # page pool serializing every request) prices as infeasible
+            report = stalled_report(
+                len(self.trace.requests),
+                FleetPlan.from_config(config) if self.fleet else None)
         counters = report.counters()
         if not report.feasible:
             return counters, float("-inf" if self.maximize else "inf")

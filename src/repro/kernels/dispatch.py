@@ -355,6 +355,23 @@ register_family(KernelFamily(
     ),
 ))
 
+# The paged family's launch surface is consumed by the *serving stack*, not
+# the kernel call: ``page_size``/``pages_per_slot_max`` shape the KV pool the
+# caches are built with, ``prefill_chunk`` drives the batcher's chunked
+# admission (0 = whole-prompt prefill).  Registering them here keeps the
+# contract — every kernel-family knob joins ``launch_space()`` — while the
+# kernel itself reads the geometry off the pool arrays it is handed.
+register_family(KernelFamily(
+    name="paged_attention",
+    pallas="repro.kernels.paged_attention.kernel:paged_decode_attention_pallas",
+    ref="repro.kernels.paged_attention.ref:paged_decode_attention_ref",
+    launch_options=(
+        Option("page_size", (32, 64, 128, 256), default=64),
+        Option("pages_per_slot_max", (4, 8, 16, 32), default=8),
+        Option("prefill_chunk", (0, 64, 128, 256), default=0),
+    ),
+))
+
 register_family(KernelFamily(
     name="mamba_scan",
     pallas="repro.kernels.mamba_scan.kernel:selective_scan_pallas",

@@ -26,6 +26,7 @@ import jax
 from repro.kernels import dispatch
 from repro.kernels.flash_attention import ref as _attn_ref
 from repro.kernels.mamba_scan import ref as _scan_ref
+from repro.kernels.paged_attention import ref as _paged_ref
 from repro.kernels.rmsnorm import ref as _rms_ref
 from repro.kernels.ssd import ref as _ssd_ref
 
@@ -118,6 +119,27 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, sliding_window=0,
     return fn(q, k_cache, v_cache, cache_len, sliding_window=sliding_window,
               logit_softcap=logit_softcap, scale=scale,
               kv_block=res.launch["kv_block"], interpret=res.interpret)
+
+
+def paged_decode_attention(q, k_pages, v_pages, page_table, cache_len, *,
+                           logit_softcap=0.0, scale=None):
+    """Single-token decode over a block-paged KV pool.
+
+    The family's launch options (``page_size``, ``pages_per_slot_max``,
+    ``prefill_chunk``) shape the pool the caller built, not this call — the
+    kernel reads its geometry off the arrays.  Resolving the family here
+    still records the decision (mode + launch) for the dispatch audit.
+    """
+    res = dispatch.resolve("paged_attention")
+    if res.mode == dispatch.REF:
+        with _scoped("paged_decode_attention"):
+            return _paged_ref.paged_decode_attention_ref(
+                q, k_pages, v_pages, page_table, cache_len,
+                logit_softcap=logit_softcap, scale=scale)
+    fn = dispatch.pallas_fn("paged_attention")
+    return fn(q, k_pages, v_pages, page_table, cache_len,
+              logit_softcap=logit_softcap, scale=scale,
+              interpret=res.interpret)
 
 
 # --------------------------------------------------------------------------

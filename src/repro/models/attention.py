@@ -25,6 +25,26 @@ class KVCache(NamedTuple):
     length: jax.Array
 
 
+class PagedKVCache(NamedTuple):
+    """Block-paged KV cache over a shared page pool.
+
+    ``k_pages``/``v_pages``: ``(P, page_size, H_kv, D)`` — the pool, shared by
+    every slot of the batch.  ``page_table``: ``(B, pages_per_slot_max)``
+    int32 — token ``t`` of slot ``b`` lives at pool page
+    ``page_table[b, t // page_size]``, row ``t % page_size``.  Unused table
+    entries must still hold *valid* pool indices (the attention mask from
+    ``length`` makes their contents irrelevant).  ``length``: ``(B,)`` int32.
+
+    With a single pool page per slot and ``page_size == cache_len`` the
+    gathered layout IS the dense :class:`KVCache` — the dense-equivalence
+    anchor the paged serving stack is tested against.
+    """
+    k_pages: jax.Array
+    v_pages: jax.Array
+    page_table: jax.Array
+    length: jax.Array
+
+
 class MLACache(NamedTuple):
     """DeepSeek MLA compressed cache: latent c_kv + rope key."""
     c_kv: jax.Array  # (B, S_max, kv_lora_rank)
@@ -64,7 +84,25 @@ def apply_gqa(
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
 
-    if decode:
+    if decode and isinstance(cache, PagedKVCache):
+        assert s == 1
+        if cfg.sliding_window > 0:
+            raise NotImplementedError(
+                "paged KV cache does not support sliding-window attention "
+                "(the ring layout and the page layout disagree about where "
+                "token t lives); serve sliding-window models dense")
+        ps = cache.k_pages.shape[1]
+        rows = jnp.arange(b)
+        page_ids = cache.page_table[rows, cache.length // ps]  # (B,)
+        row_ids = cache.length % ps                            # (B,)
+        k_pages = cache.k_pages.at[page_ids, row_ids].set(k[:, 0])
+        v_pages = cache.v_pages.at[page_ids, row_ids].set(v[:, 0])
+        new_len = cache.length + 1
+        o = ops.paged_decode_attention(
+            q, k_pages, v_pages, cache.page_table, new_len,
+            logit_softcap=cfg.attn_logit_softcap)
+        new_cache = PagedKVCache(k_pages, v_pages, cache.page_table, new_len)
+    elif decode:
         assert cache is not None and s == 1
         size = cache.k.shape[1]
         ring = cfg.sliding_window > 0 and size <= cfg.sliding_window
@@ -82,6 +120,13 @@ def apply_gqa(
             kv_block=par.attn_kv_block)
         new_cache = KVCache(k_cache, v_cache, new_len)
     else:
+        if isinstance(cache, PagedKVCache):
+            # prefill runs dense (batch-1, one compiled program) and the
+            # batcher scatters the filled rows into the slot's pages — see
+            # repro.serving.scheduler._scatter_paged_rows
+            raise NotImplementedError(
+                "prefill directly into a paged cache is not supported; "
+                "prefill dense and scatter the rows into pages")
         o = ops.flash_attention(
             q, k, v, causal=True, sliding_window=cfg.sliding_window,
             logit_softcap=cfg.attn_logit_softcap,
@@ -108,6 +153,30 @@ def _scatter_time(cache: jax.Array, new: jax.Array, idx: jax.Array) -> jax.Array
     b = cache.shape[0]
     onehot = jax.nn.one_hot(idx, cache.shape[1], dtype=cache.dtype)  # (B, S)
     return cache * (1 - onehot)[:, :, None, None] + onehot[:, :, None, None] * new
+
+
+def init_paged_kv_cache(cfg: ModelConfig, batch: int, pool_pages: int,
+                        page_size: int, pages_per_slot_max: int,
+                        dtype) -> PagedKVCache:
+    """Paged cache with ``pool_pages`` allocatable pages plus one *scratch*
+    page (index ``pool_pages``).  Every table entry starts on the scratch
+    page, and the scheduler points freed slots back at it: an empty slot's
+    decode step still scatters its pad-token K/V (exactly like the dense
+    batcher writes into its own unused rows), so empty slots must land on a
+    page no live request owns — otherwise they corrupt it."""
+    hd = cfg.head_dim
+    if cfg.sliding_window > 0:
+        raise NotImplementedError(
+            "paged KV cache does not support sliding-window attention")
+    return PagedKVCache(
+        k_pages=jnp.zeros((pool_pages + 1, page_size, cfg.num_kv_heads, hd),
+                          dtype),
+        v_pages=jnp.zeros((pool_pages + 1, page_size, cfg.num_kv_heads, hd),
+                          dtype),
+        page_table=jnp.full((batch, pages_per_slot_max), pool_pages,
+                            jnp.int32),
+        length=jnp.zeros((batch,), jnp.int32),
+    )
 
 
 def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> KVCache:

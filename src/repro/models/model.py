@@ -22,6 +22,9 @@ class Model(NamedTuple):
     init: Callable[..., Dict]
     forward: Callable[..., Any]           # training/prefill forward
     init_decode_state: Callable[..., Dict]
+    # paged-KV variant: (batch, pool_pages, page_size, pages_per_slot_max)
+    # -> stacked decode state; None for families without a paged serving path
+    init_paged_decode_state: Optional[Callable[..., Dict]] = None
 
 
 def _dtype(cfg: ModelConfig):
@@ -61,7 +64,11 @@ def build_model(cfg: ModelConfig, par: Optional[ParallelConfig] = None) -> Model
     def init_state(batch, max_len):
         return transformer.init_decode_state(cfg, batch, max_len, dtype)
 
-    return Model(cfg, init, forward, init_state)
+    def init_paged_state(batch, pool_pages, page_size, pages_per_slot_max):
+        return transformer.init_paged_decode_state(
+            cfg, batch, pool_pages, page_size, pages_per_slot_max, dtype)
+
+    return Model(cfg, init, forward, init_state, init_paged_state)
 
 
 def init_params(cfg: ModelConfig, key: jax.Array) -> Dict:

@@ -150,6 +150,44 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Dict
     return jax.tree.map(lambda x: jnp.zeros((nsb,) + x.shape, x.dtype), template)
 
 
+def init_paged_decode_state(cfg: ModelConfig, batch: int, pool_pages: int,
+                            page_size: int, pages_per_slot_max: int,
+                            dtype) -> Dict:
+    """Paged variant of :func:`init_decode_state`: every attention KV cache
+    becomes a :class:`~repro.models.attention.PagedKVCache` over a per-layer
+    ``pool_pages``-page pool; recurrent SSM states (O(1) per slot) are
+    unchanged.  The compiled decode shape is ``(pool_pages, page_size)`` —
+    independent of any per-request context length, which is the point of the
+    paged refactor."""
+    if cfg.attn_type == "mla":
+        raise NotImplementedError(
+            "paged serving does not support the MLA compressed cache yet; "
+            "serve MLA models dense")
+    pat = block_pattern(cfg)
+    nsb = num_superblocks(cfg)
+
+    def paged_kv():
+        return attn.init_paged_kv_cache(cfg, batch, pool_pages, page_size,
+                                        pages_per_slot_max, dtype)
+
+    def one_sub(kind):
+        if kind == "mamba1":
+            return ssm.init_mamba1_state(cfg, batch, dtype)
+        if kind in ("mamba2", "mamba2_shared_attn"):
+            st = {"mixer": ssm.init_mamba2_state(cfg, batch, dtype)}
+            if kind == "mamba2_shared_attn":
+                st["shared_kv"] = paged_kv()
+            return st
+        return paged_kv()
+
+    template = {f"sub{i}": one_sub(kind) for i, kind in enumerate(pat)}
+    # broadcast (not zeros): page tables start on the scratch page, a
+    # non-zero index the template already carries
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (nsb,) + x.shape).astype(x.dtype),
+        template)
+
+
 # --------------------------------------------------------------------------
 # forward
 # --------------------------------------------------------------------------

@@ -52,6 +52,12 @@ class ReplayReport:
     prefill_s: float = 0.0         # wall time inside prefill launches
     decode_s: float = 0.0          # wall time inside decode launches
     latencies_ms: Tuple[float, ...] = ()  # per-request, completion order
+    # paged-KV mediators, name-compatible with the simulator's; all zero for
+    # dense deployments
+    page_pool_occupancy: float = 0.0   # mean fraction of the pool in use
+    page_faults: float = 0.0           # always 0: the real batcher defers
+    prefill_chunks_inflight: float = 0.0
+    rejected_too_long: int = 0     # batcher-side PromptTooLong rejections
 
     @property
     def prefill_decode_ratio(self) -> float:
@@ -83,7 +89,11 @@ class ReplayReport:
             "occupancy_mean": self.mean_occupancy,
             "prefill_decode_ratio": self.prefill_decode_ratio,
             "slo_violation_rate": self.slo_violation_rate(slo_ms),
+            "page_pool_occupancy": self.page_pool_occupancy,
+            "page_faults": self.page_faults,
+            "prefill_chunks_inflight": self.prefill_chunks_inflight,
             "rejected_rate": self.rejected_rate,
+            "rejected_too_long": float(self.rejected_too_long),
             "latency": self.p99_latency_ms,
             "throughput": self.throughput_rps,
         }
@@ -142,12 +152,16 @@ def replay_trace(batcher: ContinuousBatcher, trace: Trace, *,
     start_occupancy = batcher._occupancy_sum
     start_prefill_s = batcher.prefill_s
     start_decode_s = batcher.decode_s
+    start_too_long = batcher.rejected_too_long
+    start_pool_occ = batcher._pool_occ_sum
+    start_chunks = batcher._chunks_inflight_sum
 
     t0 = perf_counter()
     submit_wall: Dict[int, float] = {}
     qd_sum, qd_max = 0.0, 0.0
     i, tick = 0, 0
-    while i < len(requests) or batcher.queue or any(
+    while i < len(requests) or batcher.queue or \
+            batcher._prefilling is not None or any(
             s is not None for s in batcher._slots):
         released = 0
         while (i < len(requests) and released < admit_chunk
@@ -161,12 +175,14 @@ def replay_trace(batcher: ContinuousBatcher, trace: Trace, *,
         if stepped:
             qd_sum += len(batcher.queue)
             qd_max = max(qd_max, float(len(batcher.queue)))
-        elif not batcher.queue and i < len(requests):
+        elif not batcher.queue and batcher._prefilling is None \
+                and i < len(requests):
             # idle: jump to the next arrival instead of spinning
             tick = max(tick, arrival_tick[requests[i].uid])
         if tick > max_ticks:
             done_here = len(batcher.completed) - start_completed
             pending = (len(requests) - i + len(batcher.queue)
+                       + (batcher._prefilling is not None)
                        + sum(s is not None for s in batcher._slots))
             raise DrainStall(
                 f"trace replay not drained after {max_ticks} ticks "
@@ -180,8 +196,9 @@ def replay_trace(batcher: ContinuousBatcher, trace: Trace, *,
         for rs in done if rs.request.uid in submit_wall)
     lat = np.asarray(lat_ms)
     tokens = sum(len(rs.generated) for rs in done)
+    too_long_here = batcher.rejected_too_long - start_too_long
     return ReplayReport(
-        completed=len(done), rejected=rejected,
+        completed=len(done), rejected=rejected + too_long_here,
         ticks=ticks_replay, wall_s=perf_counter() - t0,
         tokens=tokens,
         mean_occupancy=((batcher._occupancy_sum - start_occupancy)
@@ -192,4 +209,9 @@ def replay_trace(batcher: ContinuousBatcher, trace: Trace, *,
         queue_depth_max=qd_max,
         prefill_s=batcher.prefill_s - start_prefill_s,
         decode_s=batcher.decode_s - start_decode_s,
-        latencies_ms=lat_ms)
+        latencies_ms=lat_ms,
+        page_pool_occupancy=((batcher._pool_occ_sum - start_pool_occ)
+                             / max(ticks_replay, 1)),
+        prefill_chunks_inflight=((batcher._chunks_inflight_sum - start_chunks)
+                                 / max(ticks_replay, 1)),
+        rejected_too_long=too_long_here)

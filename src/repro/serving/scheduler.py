@@ -32,9 +32,27 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models.attention import PagedKVCache
 from repro.models.model import Model
+from repro.serving.paging import PagedPlan
 from repro.train.serve_step import ServeState, jitted_steps, sample_token
 from repro.utils.config import RunConfig
+
+
+class PromptTooLong(ValueError):
+    """A submitted request can never fit its serving deployment: prompt plus
+    worst-case generation exceeds the dense ``cache_len`` or the paged slot
+    capacity / page pool.  Carries the offending request uid and the limit so
+    callers can report or reject-and-count (``on_too_long="reject"``)."""
+
+    def __init__(self, uid: int, needed: int, limit: int, what: str):
+        super().__init__(
+            f"request {uid} needs {needed} cache tokens but the {what} "
+            f"holds {limit}; it would silently truncate — reject it or "
+            f"deploy a larger geometry")
+        self.uid = uid
+        self.needed = needed
+        self.limit = limit
 
 
 class DrainStall(RuntimeError):
@@ -91,32 +109,89 @@ def _scatter_rows(dst_tree, src_tree, slot: int):
     return jax.tree.map(one, dst_tree, src_tree)
 
 
+def _scatter_paged_rows(dst_tree, src_tree, slot: int, pages: List[int],
+                        page_size: int, pages_per_slot_max: int,
+                        scratch_page: int):
+    """Write a dense batch-1 prefill state into slot ``slot`` of a paged
+    decode state: KV rows land in the slot's reserved pool ``pages`` (the
+    first ``len(pages) * page_size`` dense rows, page-reshaped), the page
+    table row is rewritten wholesale (tail entries pinned to the scratch
+    page — valid and owned by nobody), and recurrent (SSM) leaves scatter
+    exactly like the dense path."""
+    table_row = np.full((pages_per_slot_max,), scratch_page, np.int32)
+    table_row[:len(pages)] = pages
+    table_row = jnp.asarray(table_row)
+    pages_arr = jnp.asarray(pages, jnp.int32)
+
+    def one(dst, src):
+        if isinstance(dst, PagedKVCache):
+            n = len(pages)
+            nsb = src.k.shape[0]
+            rows = src.k[:, 0, :n * page_size]
+            rows = rows.reshape(nsb, n, page_size, *rows.shape[2:])
+            k_pages = dst.k_pages.at[:, pages_arr].set(rows)
+            rows = src.v[:, 0, :n * page_size]
+            rows = rows.reshape(nsb, n, page_size, *rows.shape[2:])
+            v_pages = dst.v_pages.at[:, pages_arr].set(rows)
+            table = dst.page_table.at[:, slot].set(table_row[None])
+            length = dst.length.at[:, slot].set(src.length[:, 0])
+            return PagedKVCache(k_pages, v_pages, table, length)
+        return _scatter_rows(dst, src, slot)
+
+    return jax.tree.map(one, dst_tree, src_tree,
+                        is_leaf=lambda x: isinstance(x, PagedKVCache))
+
+
 class ContinuousBatcher:
     def __init__(self, model: Model, run: RunConfig, params, *,
                  num_slots: int = 8, cache_len: int = 512,
                  eos_token: Optional[int] = None, seed: int = 0,
                  launch_config: Optional[Dict[str, Any]] = None,
-                 interleave: str = "eager"):
+                 interleave: str = "eager",
+                 paged: Optional[PagedPlan] = None,
+                 on_too_long: str = "raise"):
         if interleave not in ("eager", "drain"):
             raise ValueError(
                 f"unknown interleave policy {interleave!r}; "
                 f"known: ['drain', 'eager']")
+        if on_too_long not in ("raise", "reject"):
+            raise ValueError(f"on_too_long must be 'raise' or 'reject', "
+                             f"got {on_too_long!r}")
         self.model = model
         self.run = run
         self.params = params
         self.num_slots = num_slots
-        self.cache_len = cache_len
         self.eos_token = eos_token
         self.interleave = interleave
+        self.on_too_long = on_too_long
         self._key = jax.random.PRNGKey(seed)
+
+        self.paged = paged if (paged is not None and paged.paging) else None
+        if self.paged is not None:
+            if model.init_paged_decode_state is None:
+                raise NotImplementedError(
+                    f"model family {model.cfg.family!r} has no paged decode "
+                    f"state; serve it dense (pages.paging=off)")
+            # the compiled decode shape is the (pool, page) geometry — the
+            # per-slot capacity is a page-table property, not a cache axis,
+            # so `cache_len` is superseded by page_size * pages_per_slot_max
+            self.cache_len = self.paged.slot_capacity
+            caches = model.init_paged_decode_state(
+                num_slots, self.paged.pool_pages, self.paged.page_size,
+                self.paged.pages_per_slot_max)
+            self._free_pages: List[int] = list(range(self.paged.pool_pages))
+            self._slot_pages: List[List[int]] = [[] for _ in range(num_slots)]
+        else:
+            self.cache_len = cache_len
+            caches = model.init_decode_state(num_slots, cache_len)
 
         # a tuned kernel-launch optimum (e.g. TuneResult.launch_config) is
         # baked into the traces; the shared cache means several batchers on
-        # one model reuse the compilation
+        # one model reuse the compilation.  Prefill always runs dense — for
+        # paged deployments at the slot capacity, then page-scattered.
         self._prefill, self._decode = jitted_steps(
-            model, run, cache_len=cache_len, launch_config=launch_config)
+            model, run, cache_len=self.cache_len, launch_config=launch_config)
 
-        caches = model.init_decode_state(num_slots, cache_len)
         self.state = ServeState(
             caches=caches,
             lengths=jnp.zeros((num_slots,), jnp.int32),
@@ -125,9 +200,16 @@ class ContinuousBatcher:
         self._slots: List[Optional[RequestState]] = [None] * num_slots
         self.queue: List[Request] = []
         self.completed: List[RequestState] = []
+        # chunked prefill in flight: [request, tokens_done, slot, pages]
+        self._prefilling: Optional[List[Any]] = None
+        self.rejected_too_long = 0
+        self.prefill_chunks = 0
         self.ticks = 0
         self.stalled = False
         self._occupancy_sum = 0
+        # per-decode-tick paged mediators (mirror the simulator's counters)
+        self._pool_occ_sum = 0.0
+        self._chunks_inflight_sum = 0.0
         # lifetime wall time inside prefill vs decode launches — replay
         # reports diff these to get a per-replay prefill/decode split
         self.prefill_s = 0.0
@@ -135,11 +217,64 @@ class ContinuousBatcher:
 
     # -- admission ----------------------------------------------------------
 
+    def _worst_case_tokens(self, request: Request) -> int:
+        """Cache rows this request can ever occupy: the prompt plus every
+        decode-tick write (the first token is sampled from prefill and costs
+        no extra row)."""
+        return len(request.prompt) + max(request.max_new_tokens - 1, 0)
+
     def submit(self, request: Request) -> None:
+        """Enqueue a request, rejecting (or raising, per ``on_too_long``) any
+        that could never fit the deployed geometry — dense caches silently
+        drop overflow rows, which corrupts decoding rather than failing."""
+        needed = self._worst_case_tokens(request)
+        if self.paged is not None:
+            limit = min(self.paged.slot_capacity,
+                        self.paged.pool_pages * self.paged.page_size)
+            what = "paged slot"
+        else:
+            limit = self.cache_len
+            what = "dense cache"
+        if needed > limit:
+            if self.on_too_long == "raise":
+                raise PromptTooLong(request.uid, needed, limit, what)
+            self.rejected_too_long += 1
+            return
         self.queue.append(request)
 
     def _free_slots(self) -> List[int]:
         return [i for i, s in enumerate(self._slots) if s is None]
+
+    def _prefill_and_seat(self, req: Request, slot: int,
+                          pages: Optional[List[int]]) -> None:
+        """Run the (dense, batch-1) prefill and seat the request in ``slot``
+        — scattered into its reserved ``pages`` for paged deployments."""
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        batch = {"tokens": prompt}
+        for k, v in req.extras.items():
+            batch[k] = jnp.asarray(v)[None]
+        t0 = time.perf_counter()
+        one_state, logits = self._prefill(self.params, batch)
+        jax.block_until_ready(logits)
+        self.prefill_s += time.perf_counter() - t0
+        if pages is not None:
+            caches = _scatter_paged_rows(
+                self.state.caches, one_state.caches, slot, pages,
+                self.paged.page_size, self.paged.pages_per_slot_max,
+                scratch_page=self.paged.pool_pages)
+        else:
+            caches = _scatter_rows(self.state.caches, one_state.caches, slot)
+        self.state = ServeState(
+            caches=caches,
+            lengths=self.state.lengths.at[slot].set(one_state.lengths[0]),
+            extras=self.state.extras)
+        self._key, sub = jax.random.split(self._key)
+        tok = int(sample_token(logits, sub, req.temperature)[0])
+        rs = RequestState(req, slot, admitted_at=time.perf_counter())
+        rs.generated.append(tok)
+        self._tokens = self._tokens.at[slot].set(tok)
+        self._slots[slot] = rs
+        self._maybe_finish(rs, tok)
 
     def _admit(self) -> None:
         if self.interleave == "drain" and \
@@ -147,31 +282,53 @@ class ContinuousBatcher:
             # drain policy: only refill once the resident batch empties —
             # the same admission gate the workload simulator prices
             return
+        if self.paged is not None and self.paged.prefill_chunk > 0:
+            self._admit_chunked()
+            return
         for slot in self._free_slots():
             if not self.queue:
                 break
+            if self.paged is not None:
+                # reserve the worst case up front: unlike the simulator the
+                # real batcher never grows a resident mid-flight (and so
+                # never evicts) — exhausted pool defers admission instead
+                need = self.paged.pages_for(
+                    self._worst_case_tokens(self.queue[0]))
+                if need > len(self._free_pages):
+                    break
+                pages = [self._free_pages.pop(0) for _ in range(need)]
+                self._slot_pages[slot] = pages
+            else:
+                pages = None
             req = self.queue.pop(0)
-            prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
-            batch = {"tokens": prompt}
-            for k, v in req.extras.items():
-                batch[k] = jnp.asarray(v)[None]
-            t0 = time.perf_counter()
-            one_state, logits = self._prefill(self.params, batch)
-            jax.block_until_ready(logits)
-            self.prefill_s += time.perf_counter() - t0
-            self.state = ServeState(
-                caches=_scatter_rows(self.state.caches, one_state.caches,
-                                     slot),
-                lengths=self.state.lengths.at[slot].set(
-                    one_state.lengths[0]),
-                extras=self.state.extras)
-            self._key, sub = jax.random.split(self._key)
-            tok = int(sample_token(logits, sub, req.temperature)[0])
-            rs = RequestState(req, slot, admitted_at=time.perf_counter())
-            rs.generated.append(tok)
-            self._tokens = self._tokens.at[slot].set(tok)
-            self._slots[slot] = rs
-            self._maybe_finish(rs, tok)
+            self._prefill_and_seat(req, slot, pages)
+
+    def _admit_chunked(self) -> None:
+        """Chunked-prefill admission: one prompt chunk per tick, decode
+        ticking underneath.  The jitted prefill still runs once, over the
+        full prompt, when the last chunk lands — chunking is a *scheduling*
+        decision (when prefill work occupies the accelerator), so generated
+        tokens stay bit-identical to the unchunked batcher."""
+        if self._prefilling is not None:
+            req, done, slot, pages = self._prefilling
+            done += min(self.paged.prefill_chunk, len(req.prompt) - done)
+            self.prefill_chunks += 1
+            if done >= len(req.prompt):
+                self._prefilling = None
+                self._prefill_and_seat(req, slot, pages)
+            else:
+                self._prefilling[1] = done
+            return
+        free = self._free_slots()
+        if not self.queue or not free:
+            return
+        need = self.paged.pages_for(self._worst_case_tokens(self.queue[0]))
+        if need > len(self._free_pages):
+            return
+        slot = free[0]
+        pages = [self._free_pages.pop(0) for _ in range(need)]
+        self._slot_pages[slot] = pages
+        self._prefilling = [self.queue.pop(0), 0, slot, pages]
 
     # -- stepping -----------------------------------------------------------
 
@@ -183,6 +340,29 @@ class ContinuousBatcher:
             rs.finished_at = time.perf_counter()
             self.completed.append(rs)
             self._slots[rs.slot] = None
+            if self.paged is not None:
+                self._free_pages.extend(self._slot_pages[rs.slot])
+                self._slot_pages[rs.slot] = []
+                self._park_slot(rs.slot)
+
+    def _park_slot(self, slot: int) -> None:
+        """Point a freed slot's page-table rows back at the scratch page.
+        Its pages return to the pool and may be reallocated immediately, but
+        the empty slot keeps scattering pad-token K/V every decode tick (the
+        compiled step has no notion of emptiness) — those writes must not
+        land on pages a later owner holds."""
+        scratch = jnp.full((self.paged.pages_per_slot_max,),
+                           self.paged.pool_pages, jnp.int32)
+
+        def one(dst):
+            if isinstance(dst, PagedKVCache):
+                return dst._replace(
+                    page_table=dst.page_table.at[:, slot].set(scratch[None]))
+            return dst
+
+        self.state = self.state._replace(caches=jax.tree.map(
+            one, self.state.caches,
+            is_leaf=lambda x: isinstance(x, PagedKVCache)))
 
     def tick(self) -> int:
         """Admit + one decode step for all resident requests.
@@ -193,6 +373,12 @@ class ContinuousBatcher:
             return 0
         self.ticks += 1
         self._occupancy_sum += len(live)
+        if self.paged is not None:
+            self._pool_occ_sum += ((self.paged.pool_pages
+                                    - len(self._free_pages))
+                                   / self.paged.pool_pages)
+            self._chunks_inflight_sum += (
+                1.0 if self._prefilling is not None else 0.0)
         t0 = time.perf_counter()
         new_state, logits = self._decode(self.params, self.state,
                                          self._tokens[:, None])
@@ -231,10 +417,12 @@ class ContinuousBatcher:
                              f"got {on_limit!r}")
         self.stalled = False
         start = self.ticks
-        while self.queue or any(s is not None for s in self._slots):
+        while self.queue or self._prefilling is not None or \
+                any(s is not None for s in self._slots):
             if self.ticks - start >= max_ticks:
-                pending = len(self.queue) + sum(
+                pending = (len(self.queue) + sum(
                     s is not None for s in self._slots)
+                    + (self._prefilling is not None))
                 msg = (f"batcher not drained after {max_ticks} ticks: "
                        f"{len(self.completed)} completed, {pending} pending")
                 if on_limit == "raise":
@@ -243,7 +431,8 @@ class ContinuousBatcher:
                 warnings.warn(msg, RuntimeWarning, stacklevel=2)
                 self.stalled = True
                 break
-            if self.tick() == 0 and not self.queue:
+            if self.tick() == 0 and not self.queue and \
+                    self._prefilling is None:
                 break
         return self.completed
 

@@ -29,7 +29,7 @@ exceed random search).
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -261,6 +261,18 @@ def serving_cell_by_name(name: str,
                      f"known: {[c.name for c in cells]}")
 
 
+def paged_serving_surface(cells: Sequence[Any]) -> Tuple[Any, ...]:
+    """Each cell's family set with ``paged_attention`` joined: the sweep
+    then tunes the paged-KV surface — ``pages.*`` scheduler knobs plus the
+    family's launch options (page size, pages per slot, prefill chunk) —
+    alongside ``serving.*`` and the other launch geometry.  Works for both
+    :class:`ServingCell` and :class:`FleetCell`."""
+    return tuple(
+        c if "paged_attention" in c.families
+        else replace(c, families=c.families + ("paged_attention",))
+        for c in cells)
+
+
 #: the trace realization every (cell, target) sweep point shares.  Unlike
 #: the shifted kernel backends (where the seed only drives noise), a
 #: ServingEnv's seed would otherwise pick the trace itself — and y_opt,
@@ -312,12 +324,17 @@ def run_serving_bench(
     seeds: Sequence[int] = (0, 1),
     pool: int = 256,
     query_batch: int = 1,
+    paged: bool = False,
 ) -> Dict[str, Any]:
     """The serving-stack sweep (cell x target trace x method); returns the
     ``BENCH_serving.json`` document.  Shape mirrors the kernel-launch sweep
     with ``source``/``target`` trace specs instead of a shift kind, plus a
-    per-cell ``y_default`` so 'tuned beats the default plan' is auditable."""
+    per-cell ``y_default`` so 'tuned beats the default plan' is auditable.
+    ``paged=True`` widens every cell to the paged-KV surface
+    (:func:`paged_serving_surface`) and stamps the mode into ``meta``."""
     t_start = time.time()
+    if paged:
+        cells = paged_serving_surface(cells)
     out_cells: List[Dict[str, Any]] = []
     for cell in cells:
         for target in targets:
@@ -348,6 +365,7 @@ def run_serving_bench(
         "sources": [c.source for c in cells],
         "targets": list(targets),
         "methods": list(methods),
+        "paged": bool(paged),
     }, out_cells, t_start)
 
 
@@ -430,14 +448,18 @@ def run_fleet_bench(
     seeds: Sequence[int] = (0, 1),
     pool: int = 256,
     query_batch: int = 1,
+    paged: bool = False,
 ) -> Dict[str, Any]:
     """The fleet sweep (cell x disruption x method); returns the
     ``BENCH_fleet.json`` document.  Both halves of every pair tune the full
     fleet surface (``fleet.*`` + ``serving.*`` + launch geometry); the
     environment change is the fleet disruption, so the gate asserts CAMEO's
     transfer survives stragglers and elastic resizes — with the winning
-    replica count / routing policy auditable per run via ``best_config``."""
+    replica count / routing policy auditable per run via ``best_config``.
+    ``paged=True`` widens every cell to the paged-KV surface."""
     t_start = time.time()
+    if paged:
+        cells = paged_serving_surface(cells)
     out_cells: List[Dict[str, Any]] = []
     for cell in cells:
         for shift in shifts:
@@ -468,6 +490,7 @@ def run_fleet_bench(
         "workloads": [c.workload for c in cells],
         "shifts": list(shifts),
         "methods": list(methods),
+        "paged": bool(paged),
     }, out_cells, t_start)
 
 

@@ -90,14 +90,16 @@ def config_to_parallel_kv(config: Dict[str, Any]) -> str:
 def launch_config_of(config: Dict[str, Any]) -> Dict[str, Any]:
     """The kernel-launch subset (``family.param`` keys) of a tuner config —
     feed it to ``repro.kernels.dispatch.use_launch_config`` around the step.
-    ``serving.*`` scheduler options and ``fleet.*`` router options are
-    dotted but are NOT launch knobs (they deploy through
-    ``ServingPlan.from_config`` / ``FleetPlan.from_config``), so they are
-    excluded.  The prefix literals match ``repro.workloads.sim.
-    SERVING_PREFIX`` / ``FLEET_PREFIX`` — kept inline so this hot
+    ``serving.*`` scheduler options, ``fleet.*`` router options and
+    ``pages.*`` paging options are dotted but are NOT launch knobs (they
+    deploy through ``ServingPlan.from_config`` / ``FleetPlan.from_config`` /
+    ``PagedPlan.from_config``), so they are excluded.  The prefix literals
+    match ``repro.workloads.sim.SERVING_PREFIX`` / ``FLEET_PREFIX`` /
+    ``repro.serving.paging.PAGES_PREFIX`` — kept inline so this hot
     extraction path does not import the scheduler/model stack."""
     return {k: v for k, v in config.items()
-            if "." in k and not k.startswith(("serving.", "fleet."))}
+            if "." in k and not k.startswith(("serving.", "fleet.",
+                                              "pages."))}
 
 
 def apply_config(par: ParallelConfig, config: Dict[str, Any]) -> ParallelConfig:

@@ -33,6 +33,7 @@ from repro.core.spaces import ConfigSpace, Option
 from repro.envs import measure as measure_mod
 from repro.envs.measure import (HardwareSpec, KernelWorkload, LaunchGeometry,
                                 family_params)
+from repro.serving.paging import PAGES_OPTIONS, PagedPlan
 from repro.serving.scheduler import DrainStall
 from repro.workloads.traces import Trace
 
@@ -71,13 +72,20 @@ def serving_space(families: Optional[Iterable[str]] = None, *,
                   fleet: bool = False) -> ConfigSpace:
     """Scheduler options joined with the kernel-launch space — one flat
     ``ConfigSpace`` (``serving.*`` + ``family.param`` keys).  With
-    ``fleet=True`` the router/replica knobs (``fleet.*`` keys) join too."""
+    ``fleet=True`` the router/replica knobs (``fleet.*`` keys) join too.
+    When the served model dispatches the ``paged_attention`` family, the
+    scheduler-level paging knobs (``pages.*``) join as well — the kernel-level
+    paging knobs (page size, pages per slot, prefill chunk) already ride in
+    via ``dispatch.launch_space``."""
     from repro.kernels import dispatch
 
     options = list(SCHEDULER_OPTIONS)
     if fleet:
         options += list(FLEET_OPTIONS)
-    return ConfigSpace(options + list(dispatch.launch_space(families).options))
+    fams = sorted(families) if families is not None else dispatch.families()
+    if "paged_attention" in fams:
+        options += list(PAGES_OPTIONS)
+    return ConfigSpace(options + list(dispatch.launch_space(fams).options))
 
 
 @dataclass(frozen=True)
@@ -131,6 +139,11 @@ class SimReport:
     throughput_rps: float            # completed requests / modeled second
     tokens_per_s: float
     slo_violation_rate: float
+    # paged-KV mediators (all 0.0 on the dense path, so pre-paging reports
+    # and the infeasible sentinel stay field-compatible)
+    page_pool_occupancy: float = 0.0   # mean used-pages / pool per tick
+    page_faults: float = 0.0           # pool-exhaustion evictions
+    prefill_chunks_inflight: float = 0.0  # mean inflight prefills per tick
 
     @property
     def prefill_decode_ratio(self) -> float:
@@ -152,15 +165,20 @@ class SimReport:
             "latency": self.p99_latency_us,
             "throughput": self.throughput_rps,
             "slo_violation_rate": self.slo_violation_rate,
+            "page_pool_occupancy": self.page_pool_occupancy,
+            "page_faults": self.page_faults,
+            "prefill_chunks_inflight": self.prefill_chunks_inflight,
         }
 
 
 #: the system events C used for causal discovery: genuine mediators between
-#: configuration and objective (queueing, occupancy, prefill/decode mix) —
-#: the objective-metric copies in :meth:`SimReport.counters` are excluded
+#: configuration and objective (queueing, occupancy, prefill/decode mix, and
+#: — with paging on — pool pressure and chunked-prefill interleaving) — the
+#: objective-metric copies in :meth:`SimReport.counters` are excluded
 SIM_COUNTER_NAMES: Tuple[str, ...] = (
     "queue_depth_mean", "queue_depth_max", "occupancy_mean",
-    "prefill_decode_ratio", "slo_violation_rate")
+    "prefill_decode_ratio", "slo_violation_rate",
+    "page_pool_occupancy", "page_faults", "prefill_chunks_inflight")
 
 
 def _infeasible(reason: str, n_requests: int) -> SimReport:
@@ -197,28 +215,63 @@ class ServingSimulator:
 
     # -- pricing --------------------------------------------------------
 
-    def _shape_cost(self, batch: int, seq_len: int,
-                    config: Dict[str, Any]) -> Tuple[float, bool]:
+    def _shape_cost(self, batch: int, seq_len: int, config: Dict[str, Any],
+                    families: Optional[Tuple[str, ...]] = None
+                    ) -> Tuple[float, bool]:
         """(modeled us, vmem-feasible) of one launch at (batch, seq_len)."""
-        key = (batch, seq_len,
+        fams = self.families if families is None else families
+        key = (fams, batch, seq_len,
                tuple(sorted((k, v) for k, v in config.items() if "." in k)))
         if key not in self._cost_cache:
             w = dataclasses.replace(self.cell, batch=batch, seq_len=seq_len)
             geo = LaunchGeometry(w, self.hardware)
-            _, t, feasible = geo.totals(self.families, config)
+            _, t, feasible = geo.totals(fams, config)
             self._cost_cache[key] = (t, feasible)
         return self._cost_cache[key]
 
+    def _step_families(self, paged_step: bool) -> Tuple[str, ...]:
+        """The families one serving step actually launches.  Attention is
+        either the dense flash decode OR the paged-pool kernel, never both:
+        a dense step (and every prefill — the paged kernel is decode-only)
+        drops ``paged_attention``; a paged decode step drops
+        ``flash_attention``.  An env without ``paged_attention`` in its
+        family set is unaffected, so legacy pricing is bit-identical."""
+        if "paged_attention" not in self.families:
+            return self.families
+        drop = "flash_attention" if paged_step else "paged_attention"
+        return tuple(f for f in self.families if f != drop)
+
     def prefill_us(self, prompt_len: int, plan: ServingPlan,
                    config: Dict[str, Any]) -> Tuple[float, bool]:
-        return self._shape_cost(1, max(int(prompt_len), 1), config)
+        return self._shape_cost(1, max(int(prompt_len), 1), config,
+                                self._step_families(paged_step=False))
 
     def decode_tick_us(self, plan: ServingPlan,
                        config: Dict[str, Any]) -> Tuple[float, bool]:
         """One fused decode step at the compiled shape, amortized per cache
         token: the batch runs at ``num_slots`` whatever the occupancy."""
-        t, feasible = self._shape_cost(plan.num_slots, plan.cache_len, config)
+        t, feasible = self._shape_cost(plan.num_slots, plan.cache_len, config,
+                                       self._step_families(paged_step=False))
         return t / plan.cache_len, feasible
+
+    def paged_decode_tick_us(self, plan: ServingPlan, paged: PagedPlan,
+                             ctx_tokens: int, config: Dict[str, Any]
+                             ) -> Tuple[float, bool]:
+        """One paged decode tick, priced at the page-quantized context the
+        resident batch actually occupies (the paged kernel skips pages past
+        the live span wholesale, so the attended span — not a static
+        ``cache_len`` — is what costs).  Priced over the step's real family
+        set: the paged kernel replaces the dense flash decode, it does not
+        run alongside it, so ``flash_attention`` is dropped here exactly as
+        ``paged_attention`` is dropped from dense ticks and prefills.  The
+        paged model is linear in context (one query token per slot) where
+        the amortized dense tick carries the quadratic relaunch — that gap,
+        plus paying the page-quantized span instead of the provisioned
+        ``cache_len``, is the modeled paging win."""
+        ctx = paged.pages_for(ctx_tokens) * paged.page_size
+        t, feasible = self._shape_cost(plan.num_slots, ctx, config,
+                                       self._step_families(paged_step=True))
+        return t / ctx, feasible
 
     def resolved_launch(self, config: Dict[str, Any]
                         ) -> Dict[str, Dict[str, Any]]:
@@ -228,97 +281,73 @@ class ServingSimulator:
 
     # -- the event loop -------------------------------------------------
 
+    def capacity_reason(self, trace: Trace, plan: ServingPlan,
+                        paged: PagedPlan) -> str:
+        """"" when every request of the trace fits the deployed cache shape;
+        the infeasibility reason otherwise.  Shared with the replay
+        environment so the analytic gate and the real deployment agree."""
+        if paged.paging:
+            if (trace.max_context > paged.slot_capacity
+                    or paged.pages_for(trace.max_context) > paged.pool_pages):
+                return "pages"
+        elif trace.max_context > plan.cache_len:
+            return "cache_len"
+        return ""
+
     def run(self, trace: Trace, plan: ServingPlan,
-            config: Optional[Dict[str, Any]] = None) -> SimReport:
+            config: Optional[Dict[str, Any]] = None,
+            paged: Optional[PagedPlan] = None) -> SimReport:
+        """Drive ONE :class:`_FleetReplica` through the trace — the same
+        stepper the fleet loop drives N of, so the scheduler iteration
+        (admission, paging, chunked prefill, decode tick) exists exactly
+        once.  ``paged`` defaults to ``PagedPlan.from_config(config)``:
+        a config with no ``pages.*`` keys resolves to the dense reference."""
         config = config or {}
+        if paged is None:
+            paged = PagedPlan.from_config(config)
         n = len(trace.requests)
         if n == 0:
             raise ValueError("cannot simulate an empty trace")
-        if trace.max_context > plan.cache_len:
-            return _infeasible("cache_len", n)
+        reason = self.capacity_reason(trace, plan, paged)
+        if reason:
+            return _infeasible(reason, n)
         decode_us, feasible = self.decode_tick_us(plan, config)
         if not feasible:
             return _infeasible("vmem", n)
 
-        queue: List[int] = []          # indices into trace.requests
-        resident: List[List] = []      # [request_idx, remaining_tokens]
-        done_latency = np.empty(n, np.float64)
-        completed = 0
-        clock = 0.0
-        i = 0                          # next arrival
-        ticks = 0
-        qd_sum = qd_max = occ_sum = 0.0
-        prefill_total = decode_total = 0.0
-        tokens = 0
         reqs = trace.requests
+        rep = _FleetReplica(self, plan, config, reqs, decode_us, paged=paged,
+                            stall_label="serving simulation", stall_total=n)
+        for k, req in enumerate(reqs):
+            a_us = req.arrival_s * 1e6
+            if not rep.advance_until(a_us):
+                return _infeasible(rep.infeasible_reason, n)
+            rep.enqueue(k, a_us)
+        if not rep.drain():
+            return _infeasible(rep.infeasible_reason, n)
 
-        while completed < n:
-            while i < n and reqs[i].arrival_s * 1e6 <= clock:
-                queue.append(i)
-                i += 1
-            if not resident and not queue:
-                clock = reqs[i].arrival_s * 1e6   # idle: jump to next arrival
-                continue
-            if queue and (plan.interleave == "eager" or not resident):
-                admit = min(plan.admit_chunk, plan.num_slots - len(resident),
-                            len(queue))
-                for _ in range(admit):
-                    idx = queue.pop(0)
-                    t_pref, feasible = self.prefill_us(
-                        reqs[idx].prompt_len, plan, config)
-                    if not feasible:
-                        return _infeasible("vmem", n)
-                    clock += t_pref
-                    prefill_total += t_pref
-                    tokens += 1        # prefill emits the first token
-                    if reqs[idx].output_len <= 1:
-                        done_latency[idx] = clock - reqs[idx].arrival_s * 1e6
-                        completed += 1
-                    else:
-                        resident.append([idx, reqs[idx].output_len - 1])
-            if resident:
-                # >= mirrors ContinuousBatcher.run_until_drained: max_ticks
-                # decode ticks may run, the (max_ticks+1)-th is the stall
-                if ticks >= self.max_ticks:
-                    raise DrainStall(
-                        f"serving simulation exceeded {self.max_ticks} ticks "
-                        f"({completed}/{n} requests completed)",
-                        completed=completed, pending=n - completed)
-                ticks += 1
-                clock += decode_us
-                decode_total += decode_us
-                occ_sum += len(resident)
-                qd_sum += len(queue)
-                qd_max = max(qd_max, float(len(queue)))
-                tokens += len(resident)
-                for slot in list(resident):
-                    slot[1] -= 1
-                    if slot[1] == 0:
-                        idx = slot[0]
-                        done_latency[idx] = clock - reqs[idx].arrival_s * 1e6
-                        completed += 1
-                        resident.remove(slot)
-
-        makespan = max(clock - reqs[0].arrival_s * 1e6, 1e-9)
-        # guarded even though n >= 1 here: np.percentile/.mean on an empty
-        # array raise/NaN, and a zero-size latency vector must never escape
-        # as a poisoned report
-        lat = done_latency[:completed]
+        done = sorted(rep.completed)       # request-index order
+        lat = np.array([l for _, l in done], np.float64)
         has_lat = lat.size > 0
+        makespan = max(rep.clock - reqs[0].arrival_s * 1e6, 1e-9)
+        ticks = rep.ticks
         return SimReport(
             feasible=True, reason="", completed=n, ticks=ticks,
             makespan_us=makespan,
-            queue_depth_mean=qd_sum / max(ticks, 1),
-            queue_depth_max=qd_max,
-            occupancy_mean=occ_sum / max(ticks, 1),
-            prefill_us=prefill_total, decode_us=decode_total,
+            queue_depth_mean=rep.qd_sum / max(ticks, 1),
+            queue_depth_max=rep.qd_max,
+            occupancy_mean=rep.occ_sum / max(ticks, 1),
+            prefill_us=rep.prefill_total, decode_us=rep.decode_total,
             p50_latency_us=float(np.percentile(lat, 50)) if has_lat else 0.0,
             p99_latency_us=float(np.percentile(lat, 99)) if has_lat else 0.0,
             mean_latency_us=float(lat.mean()) if has_lat else 0.0,
             throughput_rps=n / (makespan * 1e-6),
-            tokens_per_s=tokens / (makespan * 1e-6),
+            tokens_per_s=rep.tokens / (makespan * 1e-6),
             slo_violation_rate=(float((lat > self.slo_us).mean())
-                                if has_lat else 0.0))
+                                if has_lat else 0.0),
+            page_pool_occupancy=rep.pool_occ_sum / max(ticks, 1),
+            page_faults=float(rep.page_faults),
+            prefill_chunks_inflight=rep.chunks_inflight_sum / max(ticks, 1))
 
 
 # --------------------------------------------------------------------------
@@ -432,24 +461,53 @@ def _fleet_infeasible(reason: str, n_requests: int,
                        replica_queue_depth_max=float(n_requests))
 
 
-class _FleetReplica:
-    """One replica's batcher state inside the fleet event loop.
+def stalled_report(n_requests: int, fleet_plan: "Optional[FleetPlan]" = None):
+    """The report for a deployment that could not drain its trace within the
+    tick budget (a :class:`DrainStall` escaped the event loop) — priced
+    infeasible, single-sim or fleet shaped.  Public so the serving
+    environments can catch the stall and keep the tuning run alive."""
+    if fleet_plan is not None:
+        return _fleet_infeasible("stall", n_requests, fleet_plan)
+    return _infeasible("stall", n_requests)
 
-    ``_step`` reproduces the loop body of :meth:`ServingSimulator.run`
-    verbatim (admit chunk under the interleave policy, then one decode tick),
-    so a 1-replica fleet under round-robin routing is bit-identical to the
-    single simulator — the regression test the fleet loop is held to.
+
+class _FleetReplica:
+    """One replica's batcher state — THE scheduler loop of the simulator.
+
+    ``_step`` is the single implementation of the continuous-batching
+    iteration (admit under the interleave policy, then one decode tick):
+    :meth:`ServingSimulator.run` drives one instance and
+    :class:`FleetSimulator` drives N, so the paging/chunking logic exists
+    exactly once and a 1-replica fleet stays bit-identical to the single
+    simulator — the regression test this stepper is held to.
+
+    With a paging :class:`PagedPlan`, resident slots carry
+    ``[request_idx, remaining, ctx_tokens, pages_held]`` against a shared
+    page pool: prompt pages are allocated at admission (admission defers
+    while the pool is short), one page is allocated per page-boundary
+    crossing during decode, and pool exhaustion is a **page fault** resolved
+    by evicting the youngest resident (the faulter itself when it is the
+    youngest) back to the queue head — the oldest resident is never evicted,
+    so decode always progresses.  ``prefill_chunk > 0`` additionally splits
+    admission prefill into chunks, one per scheduler step, with the resident
+    batch decoding underneath (no head-of-line blocking on long prompts).
     """
 
     def __init__(self, sim: ServingSimulator, plan: ServingPlan,
-                 config: Dict[str, Any], reqs, decode_us: float):
+                 config: Dict[str, Any], reqs, decode_us: float, *,
+                 paged: Optional[PagedPlan] = None,
+                 stall_label: str = "fleet replica",
+                 stall_total: Optional[int] = None):
         self.sim = sim
         self.plan = plan
         self.config = config
         self.reqs = reqs
         self.decode_us = decode_us
+        self.paged = paged if (paged is not None and paged.paging) else None
+        self.stall_label = stall_label
+        self.stall_total = stall_total
         self.queue: List[int] = []
-        self.resident: List[List] = []
+        self.resident: List[List] = []  # [idx, remaining, ctx, pages]
         self.clock = 0.0
         self.ticks = 0
         self.qd_sum = self.qd_max = self.occ_sum = 0.0
@@ -458,27 +516,113 @@ class _FleetReplica:
         self.assigned: List[int] = []
         self.completed: List[Tuple[int, float]] = []  # (req idx, latency us)
         self.infeasible_reason = ""
+        # paged pool state (inert on the dense path)
+        self.free_pages = self.paged.pool_pages if self.paged else 0
+        self.page_faults = 0
+        self.pool_occ_sum = 0.0          # used/pool sampled per decode tick
+        self.chunks_inflight_sum = 0.0   # inflight prefills per decode tick
+        self.prefilling: Optional[List[int]] = None  # [idx, done_tokens, pages]
 
     @property
     def backlog(self) -> int:
         """Queued + resident requests — what the router load-balances on."""
-        return len(self.queue) + len(self.resident)
+        return (len(self.queue) + len(self.resident)
+                + (1 if self.prefilling is not None else 0))
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.queue or self.resident
+                    or self.prefilling is not None)
 
     def enqueue(self, idx: int, arrival_us: float) -> None:
-        if not self.queue and not self.resident:
+        if not self.busy:
             # idle replica: jump its clock to the arrival, mirroring the
             # single simulator's idle fast-forward
             self.clock = max(self.clock, arrival_us)
         self.queue.append(idx)
         self.assigned.append(idx)
 
-    def _step(self) -> bool:
-        """One scheduler iteration; False on a vmem-infeasible prefill."""
-        plan, reqs = self.plan, self.reqs
+    # -- paging ---------------------------------------------------------
+
+    def _evict(self, slot: List) -> None:
+        """Preempt a resident: free its pages, re-queue it at the head.  It
+        restarts from scratch on re-admission — the tokens it already
+        emitted are recompute, which is exactly the cost a fault carries."""
+        self.free_pages += slot[3]
+        self.resident.remove(slot)
+        self.queue.insert(0, slot[0])
+
+    def _grow_pages(self) -> None:
+        """Allocate the +1-token page growth of every resident, faulting
+        (evict the youngest) when the pool runs dry."""
+        paged = self.paged
+        for slot in list(self.resident):
+            if slot not in self.resident:
+                continue               # evicted by an earlier fault
+            need = paged.pages_for(slot[2] + 1)
+            while need > slot[3]:
+                if self.free_pages > 0:
+                    self.free_pages -= 1
+                    slot[3] += 1
+                    continue
+                self.page_faults += 1
+                victim = self.resident[-1]  # youngest; may be `slot` itself
+                self._evict(victim)
+                if victim is slot:
+                    break
+
+    def _finish_prefill(self, idx: int, pages: int) -> None:
+        """Prompt fully prefilled: emit the first token; retire or seat."""
+        reqs = self.reqs
+        self.tokens += 1               # prefill emits the first token
+        if reqs[idx].output_len <= 1:
+            self.completed.append(
+                (idx, self.clock - reqs[idx].arrival_s * 1e6))
+            self.free_pages += pages   # no-op on the dense path (pages=0)
+        else:
+            self.resident.append(
+                [idx, reqs[idx].output_len - 1, reqs[idx].prompt_len, pages])
+
+    def _admit(self) -> bool:
+        """The admission half of one scheduler step."""
+        plan, reqs, paged = self.plan, self.reqs, self.paged
+        chunked = paged is not None and paged.prefill_chunk > 0
+        if chunked:
+            if (self.prefilling is None and self.queue
+                    and (plan.interleave == "eager" or not self.resident)
+                    and len(self.resident) < plan.num_slots):
+                idx = self.queue[0]
+                need = paged.pages_for(reqs[idx].prompt_len)
+                if need <= self.free_pages:
+                    self.queue.pop(0)
+                    self.free_pages -= need
+                    self.prefilling = [idx, 0, need]
+            if self.prefilling is not None:
+                # one chunk per step; residents decode underneath
+                idx, done, pages = self.prefilling
+                step = min(paged.prefill_chunk, reqs[idx].prompt_len - done)
+                t_pref, feasible = self.sim.prefill_us(step, plan, self.config)
+                if not feasible:
+                    self.infeasible_reason = "vmem"
+                    return False
+                self.clock += t_pref
+                self.prefill_total += t_pref
+                done += step
+                if done >= reqs[idx].prompt_len:
+                    self.prefilling = None
+                    self._finish_prefill(idx, pages)
+                else:
+                    self.prefilling = [idx, done, pages]
+            return True
         if self.queue and (plan.interleave == "eager" or not self.resident):
             admit = min(plan.admit_chunk, plan.num_slots - len(self.resident),
                         len(self.queue))
             for _ in range(admit):
+                need = 0
+                if paged is not None:
+                    need = paged.pages_for(reqs[self.queue[0]].prompt_len)
+                    if need > self.free_pages:
+                        break          # defer until residents free pages
                 idx = self.queue.pop(0)
                 t_pref, feasible = self.sim.prefill_us(
                     reqs[idx].prompt_len, plan, self.config)
@@ -487,23 +631,45 @@ class _FleetReplica:
                     return False
                 self.clock += t_pref
                 self.prefill_total += t_pref
-                self.tokens += 1        # prefill emits the first token
-                if reqs[idx].output_len <= 1:
-                    self.completed.append(
-                        (idx, self.clock - reqs[idx].arrival_s * 1e6))
-                else:
-                    self.resident.append([idx, reqs[idx].output_len - 1])
+                self.free_pages -= need
+                self._finish_prefill(idx, need)
+        return True
+
+    def _step(self) -> bool:
+        """One scheduler iteration; False on a vmem-infeasible launch."""
+        reqs, paged = self.reqs, self.paged
+        if not self._admit():
+            return False
         if self.resident:
             if self.ticks >= self.sim.max_ticks:
+                total = (self.stall_total if self.stall_total is not None
+                         else len(self.assigned))
+                noun = ("requests" if self.stall_total is not None
+                        else "assigned requests")
                 raise DrainStall(
-                    f"fleet replica exceeded {self.sim.max_ticks} ticks "
-                    f"({len(self.completed)}/{len(self.assigned)} assigned "
-                    f"requests completed)",
+                    f"{self.stall_label} exceeded {self.sim.max_ticks} ticks "
+                    f"({len(self.completed)}/{total} {noun} completed)",
                     completed=len(self.completed),
-                    pending=len(self.assigned) - len(self.completed))
+                    pending=total - len(self.completed))
             self.ticks += 1
-            self.clock += self.decode_us
-            self.decode_total += self.decode_us
+            if paged is not None:
+                self._grow_pages()
+                for slot in self.resident:
+                    slot[2] += 1       # the new token joins the cache
+                ctx = max(slot[2] for slot in self.resident)
+                d_us, feasible = self.sim.paged_decode_tick_us(
+                    self.plan, paged, ctx, self.config)
+                if not feasible:
+                    self.infeasible_reason = "vmem"
+                    return False
+                self.pool_occ_sum += ((paged.pool_pages - self.free_pages)
+                                      / paged.pool_pages)
+                self.chunks_inflight_sum += (
+                    1.0 if self.prefilling is not None else 0.0)
+            else:
+                d_us = self.decode_us
+            self.clock += d_us
+            self.decode_total += d_us
             self.occ_sum += len(self.resident)
             self.qd_sum += len(self.queue)
             self.qd_max = max(self.qd_max, float(len(self.queue)))
@@ -515,19 +681,20 @@ class _FleetReplica:
                     self.completed.append(
                         (idx, self.clock - reqs[idx].arrival_s * 1e6))
                     self.resident.remove(slot)
+                    self.free_pages += slot[3]
         return True
 
     def advance_until(self, t_us: float) -> bool:
         """Run scheduler iterations until the replica clock reaches ``t_us``
         or the replica drains idle — the fleet loop calls this before every
         routing decision so backlogs reflect the state at arrival time."""
-        while (self.queue or self.resident) and self.clock < t_us:
+        while self.busy and self.clock < t_us:
             if not self._step():
                 return False
         return True
 
     def drain(self) -> bool:
-        while self.queue or self.resident:
+        while self.busy:
             if not self._step():
                 return False
         return True
@@ -610,21 +777,25 @@ class FleetSimulator:
 
     def run(self, trace: Trace, plan: ServingPlan,
             fleet_plan: Optional[FleetPlan] = None,
-            config: Optional[Dict[str, Any]] = None) -> FleetReport:
+            config: Optional[Dict[str, Any]] = None,
+            paged: Optional[PagedPlan] = None) -> FleetReport:
         config = config or {}
         fleet_plan = fleet_plan or FleetPlan()
+        if paged is None:
+            paged = PagedPlan.from_config(config)
         n = len(trace.requests)
         if n == 0:
             raise ValueError("cannot simulate an empty trace")
         if fleet_plan.num_replicas > self.fleet.num_devices:
             return _fleet_infeasible("devices", n, fleet_plan)
-        if trace.max_context > plan.cache_len:
-            return _fleet_infeasible("cache_len", n, fleet_plan)
 
         data, model = self.mesh_split(fleet_plan)
         sims = [ServingSimulator(self.cell, self.families, hardware=hw,
                                  slo_us=self.slo_us, max_ticks=self.max_ticks)
                 for hw in self.replica_hardware(fleet_plan)]
+        reason = sims[0].capacity_reason(trace, plan, paged)
+        if reason:
+            return _fleet_infeasible(reason, n, fleet_plan)
         decode_us = []
         for sim in sims:
             d_us, feasible = sim.decode_tick_us(plan, config)
@@ -633,7 +804,7 @@ class FleetSimulator:
             decode_us.append(d_us)
 
         reqs = trace.requests
-        replicas = [_FleetReplica(sim, plan, config, reqs, d)
+        replicas = [_FleetReplica(sim, plan, config, reqs, d, paged=paged)
                     for sim, d in zip(sims, decode_us)]
         # the po2 sampler is part of the environment realization: seed it
         # from the trace identity + replica count so the same (trace,
@@ -696,6 +867,12 @@ class FleetSimulator:
             tokens_per_s=tokens / (makespan * 1e-6),
             slo_violation_rate=(float((lat > self.slo_us).mean())
                                 if has_lat else 0.0),
+            page_pool_occupancy=sum(rep.pool_occ_sum for rep in replicas)
+            / max(total_ticks, 1),
+            page_faults=float(sum(rep.page_faults for rep in replicas)),
+            prefill_chunks_inflight=sum(rep.chunks_inflight_sum
+                                        for rep in replicas)
+            / max(total_ticks, 1),
             num_replicas=fleet_plan.num_replicas, routing=fleet_plan.routing,
             data_parallel=data, model_parallel=model,
             assignments=tuple(tuple(rep.assigned) for rep in replicas),

@@ -41,7 +41,7 @@ def test_mode_env_override(monkeypatch):
 
 def test_all_families_registered():
     assert dispatch.families() == ["flash_attention", "mamba_scan",
-                                   "rmsnorm", "ssd"]
+                                   "paged_attention", "rmsnorm", "ssd"]
     for name in dispatch.families():
         fam = dispatch.get_family(name)
         assert fam.launch_options, name
@@ -129,7 +129,9 @@ def test_launch_space_roundtrips_through_configspace():
     assert set(space.names) == {
         "flash_attention.q_block", "flash_attention.kv_block",
         "mamba_scan.chunk", "mamba_scan.c_block", "ssd.chunk",
-        "rmsnorm.row_block"}
+        "rmsnorm.row_block", "paged_attention.page_size",
+        "paged_attention.pages_per_slot_max",
+        "paged_attention.prefill_chunk"}
     rng = np.random.default_rng(3)
     for cfg in [space.default_config()] + space.sample(rng, 25):
         assert space.decode(space.encode(cfg)) == cfg

@@ -153,6 +153,38 @@ def test_ssd_chunk_invariance(l, chunk, seed):
     np.testing.assert_allclose(r1, r2, atol=1e-4, rtol=1e-3)
 
 
+@given(st.integers(1, 4), st.integers(1, 4), st.integers(0, 100))
+@settings(**SETTINGS)
+def test_paged_decode_bit_identical_to_dense(b, n_pages, seed):
+    # any scatter of the dense cache across pool pages (here: a random
+    # permutation) gathers back to the identical rows, so paged decode
+    # attention equals the dense decode reference bit-for-bit — the invariant
+    # the whole paged serving path rests on
+    from repro.kernels.paged_attention import ref as pref
+    rng = np.random.default_rng(seed)
+    ps, hq, hkv, d = 4, 4, 2, 8
+    l = n_pages * ps
+    q = jnp.asarray(rng.normal(size=(b, 1, hq, d)).astype(np.float32))
+    k = rng.normal(size=(b, l, hkv, d)).astype(np.float32)
+    v = rng.normal(size=(b, l, hkv, d)).astype(np.float32)
+    lens = jnp.asarray(rng.integers(1, l + 1, size=b), jnp.int32)
+    perm = rng.permutation(b * n_pages)
+    k_pages = np.zeros((b * n_pages, ps, hkv, d), np.float32)
+    v_pages = np.zeros_like(k_pages)
+    table = np.zeros((b, n_pages), np.int32)
+    for bi in range(b):
+        for p in range(n_pages):
+            pid = int(perm[bi * n_pages + p])
+            k_pages[pid] = k[bi, p * ps:(p + 1) * ps]
+            v_pages[pid] = v[bi, p * ps:(p + 1) * ps]
+            table[bi, p] = pid
+    out = pref.paged_decode_attention_ref(
+        q, jnp.asarray(k_pages), jnp.asarray(v_pages), jnp.asarray(table),
+        lens)
+    ref = aref.decode_attention_ref(q, jnp.asarray(k), jnp.asarray(v), lens)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
 # -- checkpoint roundtrip -------------------------------------------------------
 
 @given(shapes=st.lists(st.tuples(st.integers(1, 5), st.integers(1, 5)),

@@ -196,7 +196,8 @@ def test_sim_deterministic_and_conserves_requests():
     assert set(r1.counters()) == {
         "queue_depth_mean", "queue_depth_max", "occupancy_mean",
         "prefill_decode_ratio", "latency", "throughput",
-        "slo_violation_rate"}
+        "slo_violation_rate", "page_pool_occupancy", "page_faults",
+        "prefill_chunks_inflight"}
 
 
 def test_sim_cache_too_small_is_infeasible():
