@@ -26,6 +26,7 @@ import json
 import sys
 
 from repro.envs.measure import shift_kinds
+from repro.obs import trace as obs_trace
 from repro.tuner.bench import (
     DEFAULT_FLEET_CELLS, DEFAULT_FLEET_SHIFTS, DEFAULT_METHODS,
     fleet_cell_by_name, run_fleet_bench)
@@ -57,6 +58,10 @@ def main(argv=None) -> int:
                     default=False,
                     help="tune the paged-KV surface (pages.* + "
                          "paged_attention launch knobs) alongside fleet.*")
+    ap.add_argument("--trace-out", default=None,
+                    help="export a Chrome trace-event JSON of the sweep "
+                         "(per-replica simulated lifecycle, tuner rounds) — "
+                         "inspect with `python -m repro.obs.report PATH`")
     ap.add_argument("--out", default="BENCH_fleet.json")
     args = ap.parse_args(argv)
 
@@ -88,11 +93,21 @@ def main(argv=None) -> int:
     if args.methods:
         methods = tuple(args.methods.split(","))
 
-    doc = run_fleet_bench(cells=cells, shifts=shifts, methods=methods,
-                          budget=budget, n_source=n_source,
-                          n_target_init=n_target_init, seeds=seeds,
-                          pool=pool, query_batch=args.query_batch,
-                          paged=args.paged)
+    if args.trace_out:
+        with obs_trace.trace_to(args.trace_out):
+            doc = run_fleet_bench(cells=cells, shifts=shifts,
+                                  methods=methods, budget=budget,
+                                  n_source=n_source,
+                                  n_target_init=n_target_init, seeds=seeds,
+                                  pool=pool, query_batch=args.query_batch,
+                                  paged=args.paged)
+        print(f"[fleet_bench] wrote trace {args.trace_out}")
+    else:
+        doc = run_fleet_bench(cells=cells, shifts=shifts, methods=methods,
+                              budget=budget, n_source=n_source,
+                              n_target_init=n_target_init, seeds=seeds,
+                              pool=pool, query_batch=args.query_batch,
+                              paged=args.paged)
     with open(args.out, "w") as f:
         json.dump(doc, f, indent=2)
 

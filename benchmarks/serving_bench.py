@@ -26,6 +26,7 @@ import argparse
 import json
 import sys
 
+from repro.obs import trace as obs_trace
 from repro.tuner.bench import (
     DEFAULT_METHODS, DEFAULT_SERVING_CELLS, DEFAULT_TARGET_TRACES,
     run_serving_bench, serving_cell_by_name)
@@ -59,6 +60,10 @@ def main(argv=None) -> int:
                     default=False,
                     help="tune the paged-KV surface (pages.* + "
                          "paged_attention launch knobs) alongside serving.*")
+    ap.add_argument("--trace-out", default=None,
+                    help="export a Chrome trace-event JSON of the sweep "
+                         "(simulated request lifecycle, tuner rounds) — "
+                         "inspect with `python -m repro.obs.report PATH`")
     ap.add_argument("--out", default="BENCH_serving.json")
     args = ap.parse_args(argv)
 
@@ -90,11 +95,21 @@ def main(argv=None) -> int:
     if args.methods:
         methods = tuple(args.methods.split(","))
 
-    doc = run_serving_bench(cells=cells, targets=targets, methods=methods,
-                            budget=budget, n_source=n_source,
-                            n_target_init=n_target_init, seeds=seeds,
-                            pool=pool, query_batch=args.query_batch,
-                            paged=args.paged)
+    if args.trace_out:
+        with obs_trace.trace_to(args.trace_out):
+            doc = run_serving_bench(cells=cells, targets=targets,
+                                    methods=methods, budget=budget,
+                                    n_source=n_source,
+                                    n_target_init=n_target_init, seeds=seeds,
+                                    pool=pool, query_batch=args.query_batch,
+                                    paged=args.paged)
+        print(f"[serving_bench] wrote trace {args.trace_out}")
+    else:
+        doc = run_serving_bench(cells=cells, targets=targets, methods=methods,
+                                budget=budget, n_source=n_source,
+                                n_target_init=n_target_init, seeds=seeds,
+                                pool=pool, query_batch=args.query_batch,
+                                paged=args.paged)
     with open(args.out, "w") as f:
         json.dump(doc, f, indent=2)
 

@@ -30,6 +30,7 @@ import argparse
 import json
 import sys
 
+from repro.obs import trace as obs_trace
 from repro.tuner.bench import (
     DEFAULT_METHODS, DEFAULT_SIM2REAL_CELLS, Sim2RealCell,
     run_sim2real_bench, sim2real_cell_by_name)
@@ -69,6 +70,10 @@ def main(argv=None) -> int:
                     help="also write a per-round timing artifact (one "
                          "record per cell x method x seed x round) to this "
                          "path")
+    ap.add_argument("--trace-out", default=None,
+                    help="export a Chrome trace-event JSON of the sweep "
+                         "(request lifecycle, tuner rounds) — inspect with "
+                         "`python -m repro.obs.report PATH`")
     ap.add_argument("--out", default="BENCH_sim2real.json")
     args = ap.parse_args(argv)
 
@@ -103,11 +108,20 @@ def main(argv=None) -> int:
     if args.methods:
         methods = tuple(args.methods.split(","))
 
-    doc = run_sim2real_bench(cells=cells, methods=methods, budget=budget,
-                             n_source=n_source,
-                             n_target_init=n_target_init, seeds=seeds,
-                             pool=pool, repeats=repeats,
-                             query_batch=args.query_batch)
+    if args.trace_out:
+        with obs_trace.trace_to(args.trace_out):
+            doc = run_sim2real_bench(cells=cells, methods=methods,
+                                     budget=budget, n_source=n_source,
+                                     n_target_init=n_target_init,
+                                     seeds=seeds, pool=pool, repeats=repeats,
+                                     query_batch=args.query_batch)
+        print(f"[sim2real_bench] wrote trace {args.trace_out}")
+    else:
+        doc = run_sim2real_bench(cells=cells, methods=methods, budget=budget,
+                                 n_source=n_source,
+                                 n_target_init=n_target_init, seeds=seeds,
+                                 pool=pool, repeats=repeats,
+                                 query_batch=args.query_batch)
     with open(args.out, "w") as f:
         json.dump(doc, f, indent=2)
 

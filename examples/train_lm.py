@@ -61,16 +61,17 @@ def main():
     def init_state():
         return init_train_state(model, run, optimizer, jax.random.PRNGKey(0))
 
-    driver = TrainDriver(
-        run, train_step, init_state,
-        make_data(cfg, run.shape, seed=0),
-        CheckpointManager(args.ckpt_dir, keep=run.keep_checkpoints),
-        logger=MetricsLogger(path=f"{args.ckpt_dir}/metrics.jsonl",
-                             name="train_lm"),
-        fault_injector=(FaultInjector([args.inject_fault])
-                        if args.inject_fault else None),
-    )
-    state = driver.run_steps(args.steps)
+    with MetricsLogger(path=f"{args.ckpt_dir}/metrics.jsonl",
+                       name="train_lm") as logger:
+        driver = TrainDriver(
+            run, train_step, init_state,
+            make_data(cfg, run.shape, seed=0),
+            CheckpointManager(args.ckpt_dir, keep=run.keep_checkpoints),
+            logger=logger,
+            fault_injector=(FaultInjector([args.inject_fault])
+                            if args.inject_fault else None),
+        )
+        state = driver.run_steps(args.steps)
     print(f"done at step {int(state.step)}; restarts: {driver.restarts}")
 
 

@@ -40,6 +40,7 @@ from repro.core.gp import fit_gp, gp_predict
 from repro.core.markov_blanket import top_k_blanket
 from repro.core.ace import rank_by_ace
 from repro.core.spaces import ConfigSpace
+from repro.obs import trace as obs_trace
 
 
 @dataclass
@@ -72,6 +73,7 @@ class BaseTuner:
         self.xs: List[Dict] = []
         self.ys: List[float] = []
         self.trace = Trace()
+        self._round_idx = 0  # ask/tell rounds so far (introspection only)
 
     # -- subclass hooks ---------------------------------------------------
 
@@ -97,8 +99,13 @@ class BaseTuner:
         baselines pay, not proposal diversity, so a simple truncated
         ranking is the faithful batched analogue of their greedy argmax.
         """
+        self._round_idx += 1
         if len(self.ys) < self.init_random:
-            return self.space.sample(self.rng, k)
+            picks = self.space.sample(self.rng, k)
+            obs_trace.tuner_event("ask", tuner=self.name,
+                                  round=self._round_idx, k=k,
+                                  cold_start=True)
+            return picks
         x = np.stack([self.space.encode(c) for c in self.xs])
         y = _clean(np.asarray(self.ys))
         self._fit(x, y)
@@ -122,6 +129,13 @@ class BaseTuner:
             picks.append(cands[int(idx)])
             if len(picks) >= k:
                 break
+        if obs_trace.enabled():
+            obs_trace.tuner_event(
+                "ask", tuner=self.name, round=self._round_idx, k=k,
+                n_candidates=len(cands),
+                acq_max=float(np.max(scores)),
+                acq_mean=float(np.mean(scores)),
+                picks=[dict(p) for p in picks])
         return picks
 
     def propose(self) -> Dict:
@@ -136,6 +150,13 @@ class BaseTuner:
         """Absorb one round of measurements (the batched dual of ask)."""
         for cfg, cnt, y in zip(configs, counters, ys):
             self.update(cfg, cnt, y)
+        if obs_trace.enabled():
+            finite = [float(y) for y in ys if np.isfinite(y)]
+            obs_trace.tuner_event(
+                "tell", tuner=self.name, round=self._round_idx,
+                told=len(list(configs)),
+                best_y=_finite_best(np.asarray(self.ys)),
+                round_best=(min(finite) if finite else None))
 
     def run(self, env, budget: float, query_batch: int = 1,
             round_log: Optional[List[Dict[str, Any]]] = None
@@ -175,7 +196,11 @@ class RandomSearch(BaseTuner):
     name = "random"
 
     def ask(self, k: int = 1) -> List[Dict]:
-        return self.space.sample(self.rng, k)
+        self._round_idx += 1
+        picks = self.space.sample(self.rng, k)
+        obs_trace.tuner_event("ask", tuner=self.name, round=self._round_idx,
+                              k=k, n_candidates=k)
+        return picks
 
 
 class SMAC(BaseTuner):

@@ -34,6 +34,7 @@ from repro.core.epsilon import observation_epsilon
 from repro.core.markov_blanket import top_k_blanket
 from repro.core.query import Query
 from repro.core.spaces import ConfigSpace
+from repro.obs import trace as obs_trace
 
 
 @dataclass
@@ -165,6 +166,7 @@ class Cameo:
         self._warm: Optional[CausalGP] = None
         self._cold: Optional[CausalGP] = None
         self._fitted_at = -1
+        self._round_idx = 0  # ask/tell rounds so far (introspection only)
 
     # ------------------------------------------------------------------ API
 
@@ -280,10 +282,15 @@ class Cameo:
         open another expensive measurement group within the round.
         """
         k = max(int(k), 1)
+        self._round_idx += 1
         if len(self.d_t) < 2:
             # cold start: must intervene to have any target signal
-            return [Proposal("intervene", c)
-                    for c in self.space.sample(self.rng, k)]
+            props = [Proposal("intervene", c)
+                     for c in self.space.sample(self.rng, k)]
+            obs_trace.tuner_event("ask", tuner="cameo",
+                                  round=self._round_idx, k=k,
+                                  cold_start=True)
+            return props
 
         t0 = time.perf_counter()
         if self._warm is None or self._fitted_at != len(self.d_t):
@@ -294,12 +301,18 @@ class Cameo:
         x_t = np.stack([self.space.encode(c) for c in self.d_t.configs])
         eps = observation_epsilon(x_t, len(self.d_t), self.n_max_obs)
         kinds = []
+        eps_draws = []
         for _ in range(k):
             u = float(self.rng.random())
+            eps_draws.append(u)
             kinds.append("observe" if (eps > u and allow_observe)
                          else "intervene")
         n_int = sum(1 for kd in kinds if kd == "intervene")
         if n_int == 0:
+            obs_trace.tuner_event("ask", tuner="cameo",
+                                  round=self._round_idx, k=k, eps=eps,
+                                  eps_draws=eps_draws, kinds=kinds,
+                                  n_candidates=0)
             return [Proposal("observe") for _ in kinds]
 
         # -- intervention via the λ-combined acquisition -------------------
@@ -330,6 +343,17 @@ class Cameo:
                                    measured | infeasible, share_dims)
         self.trace.recommend_s.append(time.perf_counter() - t1)
 
+        # introspection only: reads already-computed state, draws no RNG —
+        # the traced and untraced trajectories are identical
+        if obs_trace.enabled():
+            obs_trace.tuner_event(
+                "ask", tuner="cameo", round=self._round_idx, k=k, eps=eps,
+                eps_draws=eps_draws, kinds=kinds, n_candidates=len(cands),
+                acq_max=float(np.max(alpha)), acq_mean=float(np.mean(alpha)),
+                lam_mean=float(lam.mean()),
+                reduced_names=list(self.reduced_names),
+                picks=[{n: v for n, v in p.items()} for p in picks])
+
         out: List[Proposal] = []
         it = iter(picks)
         for kd in kinds:
@@ -357,8 +381,9 @@ class Cameo:
                 self.trace.action.append(act)
                 _, best_y = self.best
                 self.trace.best_y.append(best_y)
-        if record and (len(self.d_t) // self.rediscover_every
-                       > n0 // self.rediscover_every):
+        refreshed = record and (len(self.d_t) // self.rediscover_every
+                                > n0 // self.rediscover_every)
+        if refreshed:
             self._refresh_graph_t()
             # refresh the reduced space with target evidence: union of the
             # source blanket and any new strong target-side effects
@@ -372,6 +397,19 @@ class Cameo:
                          if n in self.space.by_name
                          and n not in self.reduced_names]
                 self.reduced_names.extend(extra)
+        if obs_trace.enabled():
+            _, best_y = self.best
+            finite = [float(y) for y in ys if np.isfinite(y)]
+            obs_trace.tuner_event(
+                "tell", tuner="cameo", round=self._round_idx,
+                told=len(list(configs)), actions=list(actions),
+                best_y=best_y,
+                round_best=(min(finite) if finite else None),
+                graph_refreshed=bool(refreshed),
+                g_t_edges=(self.trace.g_t_edges[-1]
+                           if self.trace.g_t_edges else None),
+                n_reduced=len(self.reduced_names),
+                reduced_names=list(self.reduced_names))
 
     def _round(self, env, k: int,
                share_dims: Optional[Sequence[str]] = None) -> List[str]:

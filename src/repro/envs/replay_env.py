@@ -41,19 +41,32 @@ from repro.envs import measure as measure_mod
 from repro.envs.base import PooledEnv
 from repro.envs.measure import HardwareSpec, KernelWorkload, LaunchGeometry
 from repro.envs.serving_env import OBJECTIVES, ServingEnv
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.serving.paging import PagedPlan
 from repro.workloads.sim import (SIM_COUNTER_NAMES, FleetPlan, FleetReport,
                                  ServingPlan, serving_space)
 from repro.workloads.traces import Trace, TraceWorkload, make_workload
 
+# The replay-only rejection mediators, registered in the obs metrics
+# registry as their own "replay" group; the discovery tuples below are
+# derived group compositions (serving [+ replay] [+ fleet]) — the registry
+# is the single source of truth, so sim and replay can never silently
+# drift apart.  Objective clones stay out, exactly as in the sim groups.
+obs_metrics.declare("rejected_rate", group="replay",
+                    help="fraction of trace requests rejected at submit")
+obs_metrics.declare("rejected_too_long", group="replay", kind="counter",
+                    help="requests rejected because prompt+max_new "
+                         "overflows the deployed shape")
+
 #: the simulator's discovery counters plus the replay-only rejection signals
-REPLAY_COUNTER_NAMES: Tuple[str, ...] = SIM_COUNTER_NAMES + (
-    "rejected_rate", "rejected_too_long")
+REPLAY_COUNTER_NAMES: Tuple[str, ...] = obs_metrics.discovery_names(
+    "serving", "replay")
 
 #: fleet-mode discovery counters: the replay set plus the router/straggler
 #: mediators — objective clones stay out, exactly as in FLEET_COUNTER_NAMES
-REPLAY_FLEET_COUNTER_NAMES: Tuple[str, ...] = REPLAY_COUNTER_NAMES + (
-    "routing_imbalance", "replica_queue_depth_max", "straggler_flagged")
+REPLAY_FLEET_COUNTER_NAMES: Tuple[str, ...] = obs_metrics.discovery_names(
+    "serving", "replay", "fleet")
 
 
 def default_replay_model():
@@ -276,16 +289,26 @@ class ReplayServingEnv(PooledEnv):
         half is baked into the jitted steps (the step factories run under an
         exclusive ``dispatch.use_launch_config``); the scheduler half is the
         batcher's geometry."""
+        plan = ServingPlan.from_config(config)
+        paged = PagedPlan.from_config(config)
+        deploy_span = obs_trace.span(
+            "deployment", cat="env", track=obs_trace.TRACK_ENV,
+            num_slots=plan.num_slots, cache_len=plan.cache_len,
+            paging=paged.paging, members=1)
+        with deploy_span:
+            return self._replay_deployed(config, plan, paged)
+
+    def _replay_deployed(self, config: Dict[str, Any], plan: ServingPlan,
+                         paged: "PagedPlan"):
         from repro.serving.replay import replay_trace
         from repro.serving.scheduler import ContinuousBatcher
         from repro.tuner.space import launch_config_of
 
-        plan = ServingPlan.from_config(config)
         batcher = ContinuousBatcher(
             self.model, self.run, self.params, num_slots=plan.num_slots,
             cache_len=plan.cache_len, interleave=plan.interleave,
             launch_config=launch_config_of(config), seed=self._replay_seed,
-            paged=PagedPlan.from_config(config), on_too_long="reject")
+            paged=paged, on_too_long="reject")
         # warmup replays trigger every jit compile this deployment needs
         # (each distinct prompt length traces prefill once) so the measured
         # replay times execution, not compilation — the per-replay delta
@@ -326,7 +349,9 @@ class ReplayServingEnv(PooledEnv):
             except DrainStall:
                 return self._infeasible_counters(), bad
         try:
-            report = self.replay(config)
+            with obs_trace.span("measure", cat="env",
+                                track=obs_trace.TRACK_ENV):
+                report = self.replay(config)
         except DrainStall:
             return self._infeasible_counters(), bad
         counters = report.counters(self.slo_ms)
@@ -496,16 +521,24 @@ class ReplayServingEnv(PooledEnv):
         wkey = (self._model_seed, self.model_cfg, batcher.num_slots,
                 batcher.cache_len, batcher.paged, frozen)
         if wkey in _WARMED_DEPLOYMENTS:
+            obs_trace.instant("warmup_cached", cat="env",
+                              track=obs_trace.TRACK_ENV,
+                              num_slots=batcher.num_slots,
+                              cache_len=batcher.cache_len)
             return
         lens = sorted({r.prompt_len for r in self.trace.requests
                        if r.prompt_len + r.output_len <= batcher.cache_len})
-        for plen in lens:
-            _, logits = batcher._prefill(
-                self.params, {"tokens": jnp.zeros((1, plen), jnp.int32)})
+        with obs_trace.span("warmup", cat="env", track=obs_trace.TRACK_ENV,
+                            num_slots=batcher.num_slots,
+                            cache_len=batcher.cache_len,
+                            prompt_lens=len(lens)):
+            for plen in lens:
+                _, logits = batcher._prefill(
+                    self.params, {"tokens": jnp.zeros((1, plen), jnp.int32)})
+                jax.block_until_ready(logits)
+            _, logits = batcher._decode(self.params, batcher.state,
+                                        batcher._tokens[:, None])
             jax.block_until_ready(logits)
-        _, logits = batcher._decode(self.params, batcher.state,
-                                    batcher._tokens[:, None])
-        jax.block_until_ready(logits)
         _WARMED_DEPLOYMENTS.put(wkey, True)
 
     def intervene_batch(self, configs: List[Dict[str, Any]]
@@ -542,20 +575,33 @@ class ReplayServingEnv(PooledEnv):
             groups.setdefault(key, []).append(i)
 
         for (num_slots, cache_len, paged, frozen), members in groups.items():
-            batcher = self._fresh_batcher(num_slots, cache_len, paged, frozen)
-            self._warm_deployment(batcher, frozen)
-            for i in members:
-                plan = ServingPlan.from_config(configs[i])
-                batcher.interleave = plan.interleave
-                try:
-                    results[i] = self._member_result(batcher, configs[i],
-                                                     plan)
-                except DrainStall:
-                    results[i] = (self._infeasible_counters(), bad)
-                    # a stalled replay leaves residents behind — rebuild
-                    # (cheap: every compile is already cached)
-                    batcher = self._fresh_batcher(num_slots, cache_len,
-                                                  paged, frozen)
+            with obs_trace.span("deployment", cat="env",
+                                track=obs_trace.TRACK_ENV,
+                                num_slots=num_slots, cache_len=cache_len,
+                                paging=paged.paging, members=len(members)):
+                batcher = self._fresh_batcher(num_slots, cache_len, paged,
+                                              frozen)
+                self._warm_deployment(batcher, frozen)
+                for i in members:
+                    plan = ServingPlan.from_config(configs[i])
+                    batcher.interleave = plan.interleave
+                    member_span = obs_trace.span(
+                        "member_replay", cat="env",
+                        track=obs_trace.TRACK_ENV, member=i,
+                        interleave=plan.interleave,
+                        admit_chunk=plan.admit_chunk)
+                    with member_span:
+                        try:
+                            results[i] = self._member_result(
+                                batcher, configs[i], plan)
+                            member_span.set(y=results[i][1])
+                        except DrainStall:
+                            results[i] = (self._infeasible_counters(), bad)
+                            member_span.set(stalled=True)
+                            # a stalled replay leaves residents behind —
+                            # rebuild (cheap: every compile is cached)
+                            batcher = self._fresh_batcher(
+                                num_slots, cache_len, paged, frozen)
 
         for cfg, res in zip(configs, results):
             self._remember(cfg, res[0], res[1])

@@ -36,6 +36,7 @@ import importlib
 import inspect
 import os
 import threading
+import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
 
@@ -43,6 +44,8 @@ import jax
 
 from repro import compat
 from repro.core.spaces import ConfigSpace, Option
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 REF = "ref"
 PALLAS = "pallas"
@@ -263,20 +266,24 @@ def record_resolutions():
     the ground truth for "did the tuned config reach the kernel call":
     wiring tests and audits read the recorded ``launch`` dicts instead of
     trusting the config plumbing.
+
+    Spies isolate: each nested or concurrent spy gets its OWN result list
+    (never a shared one), and the active-spy registry is an immutable
+    per-thread tuple — entering or exiting one spy rebuilds the tuple
+    instead of mutating a list other spies hold, so an inner spy exiting
+    (in any order, e.g. via an ``ExitStack``) can never detach or clobber
+    an outer spy's recordings.  Detachment matches by identity, not
+    equality: two empty result lists compare equal.
     """
-    recorders = getattr(_local, "recorders", None)
-    if recorders is None:
-        recorders = _local.recorders = []
     rec: List[Resolution] = []
-    recorders.append(rec)
+    _local.recorders = getattr(_local, "recorders", ()) + (rec,)
     try:
         yield rec
     finally:
-        # by identity, not ==: two empty recorder lists compare equal and
-        # list.remove would detach the outer one
-        for i in range(len(recorders) - 1, -1, -1):
-            if recorders[i] is rec:
-                del recorders[i]
+        active = getattr(_local, "recorders", ())
+        for i in range(len(active) - 1, -1, -1):
+            if active[i] is rec:
+                _local.recorders = active[:i] + active[i + 1:]
                 break
 
 
@@ -294,7 +301,84 @@ def resolve(family: str, mode: Optional[str] = None,
                      interpret=(mode == PALLAS_INTERPRET),
                      launch=launch_params(family, **explicit))
     _notify_recorders(res)
+    _notify_profiles(res)
     return res
+
+
+# --------------------------------------------------------------------------
+# dispatch profiling (obs hooks)
+# --------------------------------------------------------------------------
+
+class DispatchProfile:
+    """Aggregated dispatch telemetry: per-(family, mode) resolution counts
+    and wall time spent inside dispatched calls.
+
+    Built on the same notification path as :func:`record_resolutions`, but
+    *cross-thread*: a profile observes every resolution process-wide while
+    active, because profiling is aggregate bookkeeping (how much, how long),
+    not the per-thread wiring ground truth the spy provides.
+    """
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self.resolutions: Dict[Tuple[str, str], int] = {}
+        self.wall_s: Dict[Tuple[str, str], float] = {}
+
+    def _saw(self, res: Resolution) -> None:
+        key = (res.family, res.mode)
+        with self._lock:
+            self.resolutions[key] = self.resolutions.get(key, 0) + 1
+
+    def _timed(self, family: str, mode: str, dt: float) -> None:
+        key = (family, mode)
+        with self._lock:
+            self.wall_s[key] = self.wall_s.get(key, 0.0) + dt
+
+    def summary(self) -> Dict[str, Dict[str, Any]]:
+        """``{"family [mode]": {"resolutions": n, "wall_s": s}}``."""
+        out: Dict[str, Dict[str, Any]] = {}
+        with self._lock:
+            for (fam, mode), n in self.resolutions.items():
+                out[f"{fam} [{mode}]"] = {
+                    "resolutions": n,
+                    "wall_s": round(self.wall_s.get((fam, mode), 0.0), 6)}
+            for (fam, mode), s in self.wall_s.items():
+                out.setdefault(f"{fam} [{mode}]",
+                               {"resolutions": 0})["wall_s"] = round(s, 6)
+        return out
+
+
+_PROFILES: List[DispatchProfile] = []
+_PROFILES_LOCK = threading.Lock()
+
+
+def _notify_profiles(res: Resolution) -> None:
+    if _PROFILES:
+        with _PROFILES_LOCK:
+            active = list(_PROFILES)
+        for p in active:
+            p._saw(res)
+
+
+@contextlib.contextmanager
+def profile_dispatches():
+    """Profile every dispatch made while active (all threads): yields a
+    :class:`DispatchProfile` accumulating per-family resolution counts and
+    the wall time spent inside dispatched implementations.  When the obs
+    tracer is active, each dispatched call additionally exports a span on
+    the kernel track and bumps the ``dispatch_wall_s`` /
+    ``dispatch_resolutions_total`` registry instruments."""
+    prof = DispatchProfile()
+    with _PROFILES_LOCK:
+        _PROFILES.append(prof)
+    try:
+        yield prof
+    finally:
+        with _PROFILES_LOCK:
+            for i in range(len(_PROFILES) - 1, -1, -1):
+                if _PROFILES[i] is prof:
+                    del _PROFILES[i]
+                    break
 
 
 def dispatch(family: str, *args: Any, mode: Optional[str] = None,
@@ -305,6 +389,11 @@ def dispatch(family: str, *args: Any, mode: Optional[str] = None,
     Launch parameters the chosen implementation does not accept (e.g.
     ``q_block`` on a reference that has no blocking) are dropped by
     signature inspection, so one launch config drives every mode.
+
+    Note on timing: for jit-compiled callers, ``dispatch`` runs while jax
+    *traces* the step, so the profiled wall time is trace/build time — the
+    per-family compile cost a tuned launch config pays — not steady-state
+    execution time (which the wall-clock measurement backend owns).
     """
     res = resolve(family, mode=mode, **(launch or {}))
     fn = _load(_impl_ref(get_family(family), res.mode, variant))
@@ -313,7 +402,25 @@ def dispatch(family: str, *args: Any, mode: Optional[str] = None,
     kw.update(kwargs)
     if res.mode != REF and "interpret" in accepted:
         kw["interpret"] = res.interpret
-    return fn(*args, **kw)
+    if not _PROFILES and not obs_trace.enabled():
+        return fn(*args, **kw)
+    t0 = time.perf_counter()
+    with obs_trace.span(family, cat="dispatch", track=obs_trace.TRACK_KERNEL,
+                        mode=res.mode,
+                        variant=variant if variant else ""):
+        out = fn(*args, **kw)
+    dt = time.perf_counter() - t0
+    if _PROFILES:
+        with _PROFILES_LOCK:
+            active = list(_PROFILES)
+        for p in active:
+            p._timed(family, res.mode, dt)
+    if obs_trace.enabled():
+        obs_metrics.REGISTRY.inc("dispatch_resolutions_total",
+                                 family=family, mode=res.mode)
+        obs_metrics.REGISTRY.inc("dispatch_wall_s", dt,
+                                 family=family, mode=res.mode)
+    return out
 
 
 # --------------------------------------------------------------------------

@@ -39,6 +39,7 @@ from repro.data.pipeline import make_data
 from repro.launch.tune import (measure_backend_arg, tune_launch_config,
                                tune_serving_config)
 from repro.models.model import build_model
+from repro.obs import trace as obs_trace
 from repro.train.serve_step import jitted_steps, sample_token
 from repro.utils.config import MeshConfig, RunConfig, ShapeConfig
 
@@ -148,7 +149,22 @@ def main() -> int:
                     help="with --workload: after the replay, price the "
                          "deployed configuration in the simulator too and "
                          "report sim-predicted vs replayed-actual")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="export a Chrome trace-event JSON of the run "
+                         "(request lifecycle, tuner rounds, kernel dispatch) "
+                         "— inspect with `python -m repro.obs.report PATH` "
+                         "or chrome://tracing / Perfetto")
     args = ap.parse_args()
+
+    if args.trace_out:
+        with obs_trace.trace_to(args.trace_out):
+            rc = _run(args)
+        print(f"[serve] trace written to {args.trace_out}")
+        return rc
+    return _run(args)
+
+
+def _run(args) -> int:
 
     cfg = (get_model_config(args.arch) if args.full_config
            else get_smoke_config(args.arch))

@@ -92,7 +92,8 @@ def main() -> int:
         return init_train_state(model, run, optimizer,
                                 jax.random.PRNGKey(run.train.seed))
 
-    with compat.set_mesh(mesh):
+    with compat.set_mesh(mesh), \
+            MetricsLogger(name=f"train-{args.arch}") as logger:
         state_t = jax.eval_shape(init_state)
         step_fn = jax.jit(
             make_train_step(model, run, optimizer,
@@ -102,7 +103,7 @@ def main() -> int:
         driver = TrainDriver(
             run, step_fn, init_state, make_data(cfg, run.shape, seed=0),
             CheckpointManager(run.checkpoint_dir, keep=run.keep_checkpoints),
-            logger=MetricsLogger(name=f"train-{args.arch}"))
+            logger=logger)
         state = driver.run_steps(args.steps)
     print(f"[train] finished at step {int(state.step)}")
     return 0

@@ -1,0 +1,52 @@
+"""Observability subsystem: span tracing, the unified metrics registry,
+and trace reporting.
+
+- :mod:`repro.obs.trace` — nested span tracer with Chrome trace-event /
+  Perfetto JSON export; zero-cost (and bit-identical) when disabled.
+- :mod:`repro.obs.metrics` — the metrics registry that is the single
+  source of truth for discovery-variable names, plus labeled runtime
+  instruments.
+- :mod:`repro.obs.report` — ``python -m repro.obs.report trace.json``
+  summarizes an exported trace (top spans, queue-time breakdown, SLO
+  burn, tuner rounds) and validates it against the trace-event schema.
+"""
+
+from repro.obs import trace
+from repro.obs.metrics import REGISTRY, MetricSpec, MetricsRegistry, declare, discovery_names
+from repro.obs.trace import (
+    NULL_SPAN,
+    TRACK_ENV,
+    TRACK_KERNEL,
+    TRACK_SERVE,
+    TRACK_SIM,
+    TRACK_TUNER,
+    Tracer,
+    active,
+    enabled,
+    span,
+    start,
+    stop,
+    trace_to,
+)
+
+__all__ = [
+    "trace",
+    "REGISTRY",
+    "MetricSpec",
+    "MetricsRegistry",
+    "declare",
+    "discovery_names",
+    "NULL_SPAN",
+    "TRACK_ENV",
+    "TRACK_KERNEL",
+    "TRACK_SERVE",
+    "TRACK_SIM",
+    "TRACK_TUNER",
+    "Tracer",
+    "active",
+    "enabled",
+    "span",
+    "start",
+    "stop",
+    "trace_to",
+]

@@ -62,6 +62,10 @@ class TrainDriver:
         self.init_state = init_state
         self.data = data
         self.ckpt = ckpt
+        # remember whether we created the logger: run_steps closes a
+        # self-owned logger on exit (a caller-provided one stays open —
+        # the caller's context manager owns its lifetime)
+        self._owns_logger = logger is None
         self.logger = logger or MetricsLogger(name="driver")
         self.fault_injector = fault_injector
         self.straggler = StragglerMonitor(num_hosts)
@@ -84,16 +88,21 @@ class TrainDriver:
     # -- main loop -----------------------------------------------------------
 
     def run_steps(self, total_steps: int) -> TrainState:
-        while True:
-            try:
-                return self._run_from_checkpoint(total_steps)
-            except RuntimeError as e:
-                self.restarts += 1
-                if self.restarts > self.max_restarts:
-                    raise
-                self.logger.log(-1, event="fault", error=str(e),
-                                restart=self.restarts)
-                # fall through: next iteration restores from latest durable ckpt
+        try:
+            while True:
+                try:
+                    return self._run_from_checkpoint(total_steps)
+                except RuntimeError as e:
+                    self.restarts += 1
+                    if self.restarts > self.max_restarts:
+                        raise
+                    self.logger.log(-1, event="fault", error=str(e),
+                                    restart=self.restarts)
+                    # fall through: next iteration restores from latest
+                    # durable ckpt
+        finally:
+            if self._owns_logger:
+                self.logger.close()
 
     def _run_from_checkpoint(self, total_steps: int) -> TrainState:
         state = self._bootstrap()

@@ -27,6 +27,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs import trace as obs_trace
 from repro.serving.scheduler import ContinuousBatcher, DrainStall, Request
 from repro.workloads.traces import Trace
 
@@ -160,34 +161,40 @@ def replay_trace(batcher: ContinuousBatcher, trace: Trace, *,
     submit_wall: Dict[int, float] = {}
     qd_sum, qd_max = 0.0, 0.0
     i, tick = 0, 0
-    while i < len(requests) or batcher.queue or \
-            batcher._prefilling is not None or any(
-            s is not None for s in batcher._slots):
-        released = 0
-        while (i < len(requests) and released < admit_chunk
-               and arrival_tick[requests[i].uid] <= tick):
-            submit_wall[requests[i].uid] = perf_counter()
-            batcher.submit(requests[i])
-            i += 1
-            released += 1
-        stepped = batcher.tick()
-        tick += 1
-        if stepped:
-            qd_sum += len(batcher.queue)
-            qd_max = max(qd_max, float(len(batcher.queue)))
-        elif not batcher.queue and batcher._prefilling is None \
-                and i < len(requests):
-            # idle: jump to the next arrival instead of spinning
-            tick = max(tick, arrival_tick[requests[i].uid])
-        if tick > max_ticks:
-            done_here = len(batcher.completed) - start_completed
-            pending = (len(requests) - i + len(batcher.queue)
-                       + (batcher._prefilling is not None)
-                       + sum(s is not None for s in batcher._slots))
-            raise DrainStall(
-                f"trace replay not drained after {max_ticks} ticks "
-                f"({done_here} completed, {pending} pending)",
-                completed=done_here, pending=pending)
+    replay_span = obs_trace.span("replay", cat="replay",
+                                 n_requests=len(requests), rejected=rejected,
+                                 admit_chunk=admit_chunk)
+    with replay_span:
+        while i < len(requests) or batcher.queue or \
+                batcher._prefilling is not None or any(
+                s is not None for s in batcher._slots):
+            released = 0
+            while (i < len(requests) and released < admit_chunk
+                   and arrival_tick[requests[i].uid] <= tick):
+                submit_wall[requests[i].uid] = perf_counter()
+                batcher.submit(requests[i])
+                i += 1
+                released += 1
+            stepped = batcher.tick()
+            tick += 1
+            if stepped:
+                qd_sum += len(batcher.queue)
+                qd_max = max(qd_max, float(len(batcher.queue)))
+            elif not batcher.queue and batcher._prefilling is None \
+                    and i < len(requests):
+                # idle: jump to the next arrival instead of spinning
+                tick = max(tick, arrival_tick[requests[i].uid])
+            if tick > max_ticks:
+                done_here = len(batcher.completed) - start_completed
+                pending = (len(requests) - i + len(batcher.queue)
+                           + (batcher._prefilling is not None)
+                           + sum(s is not None for s in batcher._slots))
+                raise DrainStall(
+                    f"trace replay not drained after {max_ticks} ticks "
+                    f"({done_here} completed, {pending} pending)",
+                    completed=done_here, pending=pending)
+        replay_span.set(completed=len(batcher.completed) - start_completed,
+                        ticks=batcher.ticks - start_ticks)
 
     done = batcher.completed[start_completed:]
     ticks_replay = batcher.ticks - start_ticks

@@ -34,6 +34,7 @@ import numpy as np
 
 from repro.models.attention import PagedKVCache
 from repro.models.model import Model
+from repro.obs import trace as obs_trace
 from repro.serving.paging import PagedPlan
 from repro.train.serve_step import ServeState, jitted_steps, sample_token
 from repro.utils.config import RunConfig
@@ -214,6 +215,10 @@ class ContinuousBatcher:
         # reports diff these to get a per-replay prefill/decode split
         self.prefill_s = 0.0
         self.decode_s = 0.0
+        # request-lifecycle tracing: submit timestamps (tracer us) per uid,
+        # populated only while a tracer is active — the disabled path never
+        # touches it, so tokens/counters stay bit-identical
+        self._submit_ts: Dict[int, float] = {}
 
     # -- admission ----------------------------------------------------------
 
@@ -239,7 +244,17 @@ class ContinuousBatcher:
             if self.on_too_long == "raise":
                 raise PromptTooLong(request.uid, needed, limit, what)
             self.rejected_too_long += 1
+            tr = obs_trace.active()
+            if tr is not None:
+                tr.instant("reject_too_long", cat="request",
+                           uid=request.uid, needed=needed, limit=limit)
             return
+        tr = obs_trace.active()
+        if tr is not None:
+            self._submit_ts[request.uid] = tr.now_us()
+            tr.async_begin("request", request.uid,
+                           prompt_len=len(request.prompt),
+                           max_new=request.max_new_tokens)
         self.queue.append(request)
 
     def _free_slots(self) -> List[int]:
@@ -249,13 +264,24 @@ class ContinuousBatcher:
                           pages: Optional[List[int]]) -> None:
         """Run the (dense, batch-1) prefill and seat the request in ``slot``
         — scattered into its reserved ``pages`` for paged deployments."""
+        tr = obs_trace.active()
+        if tr is not None:
+            # admission closes the queue phase begun at submit
+            sub_ts = self._submit_ts.pop(req.uid, None)
+            if sub_ts is not None:
+                tr.complete("queue", sub_ts, tr.now_us() - sub_ts,
+                            cat="request", uid=req.uid)
+            tr.instant("admit", cat="request", uid=req.uid, slot=slot,
+                       pages=len(pages) if pages is not None else 0)
         prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
         batch = {"tokens": prompt}
         for k, v in req.extras.items():
             batch[k] = jnp.asarray(v)[None]
         t0 = time.perf_counter()
-        one_state, logits = self._prefill(self.params, batch)
-        jax.block_until_ready(logits)
+        with obs_trace.span("prefill", cat="request", uid=req.uid,
+                            prompt_len=len(req.prompt)):
+            one_state, logits = self._prefill(self.params, batch)
+            jax.block_until_ready(logits)
         self.prefill_s += time.perf_counter() - t0
         if pages is not None:
             caches = _scatter_paged_rows(
@@ -295,9 +321,15 @@ class ContinuousBatcher:
                 need = self.paged.pages_for(
                     self._worst_case_tokens(self.queue[0]))
                 if need > len(self._free_pages):
+                    obs_trace.instant("defer", cat="request",
+                                      uid=self.queue[0].uid, need=need,
+                                      free=len(self._free_pages))
                     break
                 pages = [self._free_pages.pop(0) for _ in range(need)]
                 self._slot_pages[slot] = pages
+                obs_trace.instant("page_reserve", cat="request",
+                                  uid=self.queue[0].uid, pages=need,
+                                  free=len(self._free_pages))
             else:
                 pages = None
             req = self.queue.pop(0)
@@ -313,6 +345,8 @@ class ContinuousBatcher:
             req, done, slot, pages = self._prefilling
             done += min(self.paged.prefill_chunk, len(req.prompt) - done)
             self.prefill_chunks += 1
+            obs_trace.instant("prefill_chunk", cat="request", uid=req.uid,
+                              done=done, prompt_len=len(req.prompt))
             if done >= len(req.prompt):
                 self._prefilling = None
                 self._prefill_and_seat(req, slot, pages)
@@ -324,10 +358,15 @@ class ContinuousBatcher:
             return
         need = self.paged.pages_for(self._worst_case_tokens(self.queue[0]))
         if need > len(self._free_pages):
+            obs_trace.instant("defer", cat="request", uid=self.queue[0].uid,
+                              need=need, free=len(self._free_pages))
             return
         slot = free[0]
         pages = [self._free_pages.pop(0) for _ in range(need)]
         self._slot_pages[slot] = pages
+        obs_trace.instant("page_reserve", cat="request",
+                          uid=self.queue[0].uid, pages=need,
+                          free=len(self._free_pages))
         self._prefilling = [self.queue.pop(0), 0, slot, pages]
 
     # -- stepping -----------------------------------------------------------
@@ -340,6 +379,12 @@ class ContinuousBatcher:
             rs.finished_at = time.perf_counter()
             self.completed.append(rs)
             self._slots[rs.slot] = None
+            tr = obs_trace.active()
+            if tr is not None:
+                tr.instant("retire", cat="request", uid=rs.request.uid,
+                           generated=len(rs.generated))
+                tr.async_end("request", rs.request.uid,
+                             generated=len(rs.generated))
             if self.paged is not None:
                 self._free_pages.extend(self._slot_pages[rs.slot])
                 self._slot_pages[rs.slot] = []
@@ -379,10 +424,15 @@ class ContinuousBatcher:
                                    / self.paged.pool_pages)
             self._chunks_inflight_sum += (
                 1.0 if self._prefilling is not None else 0.0)
+        tr = obs_trace.active()
+        if tr is not None:
+            tr.counter("queue_depth", len(self.queue))
         t0 = time.perf_counter()
-        new_state, logits = self._decode(self.params, self.state,
-                                         self._tokens[:, None])
-        jax.block_until_ready(logits)
+        with obs_trace.span("decode_tick", cat="serve", live=len(live),
+                            tick=self.ticks):
+            new_state, logits = self._decode(self.params, self.state,
+                                             self._tokens[:, None])
+            jax.block_until_ready(logits)
         self.decode_s += time.perf_counter() - t0
         self.state = new_state
         self._key, sub = jax.random.split(self._key)

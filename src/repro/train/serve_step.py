@@ -31,6 +31,8 @@ import jax.numpy as jnp
 from repro.kernels import dispatch
 from repro.models import encdec
 from repro.models.model import Model
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.utils.config import RunConfig
 
 
@@ -145,8 +147,21 @@ def jitted_steps(model: Model, run: RunConfig,
     time).  LRU-bounded so long-lived processes cycling through many models
     do not pin every compilation.
     """
-    return _jitted_steps_cached(model, run, cache_len,
-                                freeze_launch_config(launch_config))
+    if not obs_trace.enabled():
+        return _jitted_steps_cached(model, run, cache_len,
+                                    freeze_launch_config(launch_config))
+    before = _jitted_steps_cached.cache_info()
+    steps = _jitted_steps_cached(model, run, cache_len,
+                                 freeze_launch_config(launch_config))
+    after = _jitted_steps_cached.cache_info()
+    hit = after.hits > before.hits
+    obs_metrics.REGISTRY.inc(
+        "jit_cache_hits" if hit else "jit_cache_misses")
+    obs_trace.instant("jit_cache_hit" if hit else "jit_cache_miss",
+                      cat="jit_cache", track=obs_trace.TRACK_KERNEL,
+                      cache_len=cache_len if cache_len is not None else -1,
+                      currsize=after.currsize)
+    return steps
 
 
 # --------------------------------------------------------------------------

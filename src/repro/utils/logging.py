@@ -1,4 +1,12 @@
-"""Structured run logging (stdout + JSONL metrics file)."""
+"""Structured run logging (stdout + JSONL metrics file).
+
+``MetricsLogger`` is a context manager — ``with MetricsLogger(path=...) as
+log:`` guarantees the JSONL handle is released on exceptions — and every
+numeric metric it logs is mirrored into the process-wide observability
+registry (:data:`repro.obs.metrics.REGISTRY`) as a gauge labelled with the
+logger name, so ad-hoc training/serving loops feed the same snapshot
+surface as the instrumented serving stack.  ``close()`` is idempotent.
+"""
 
 from __future__ import annotations
 
@@ -7,6 +15,8 @@ import os
 import sys
 import time
 from typing import Any, Dict, Optional
+
+from repro.obs import metrics as obs_metrics
 
 
 class MetricsLogger:
@@ -19,16 +29,31 @@ class MetricsLogger:
             self._fh = open(path, "a", buffering=1)
         self._t0 = time.time()
 
+    def __enter__(self) -> "MetricsLogger":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
+
     def log(self, step: int, **metrics: Any) -> None:
         rec: Dict[str, Any] = {"step": step, "t": round(time.time() - self._t0, 3)}
         rec.update({k: (float(v) if hasattr(v, "item") else v) for k, v in metrics.items()})
+        for k, v in rec.items():
+            if k not in ("step", "t") and isinstance(v, (int, float)) \
+                    and not isinstance(v, bool):
+                try:
+                    obs_metrics.REGISTRY.set(k, float(v), logger=self.name)
+                except ValueError:
+                    # name declared as a non-gauge elsewhere: logging must
+                    # never fail over a registry kind collision
+                    pass
         if self._fh:
             self._fh.write(json.dumps(rec) + "\n")
         msg = " ".join(f"{k}={_fmt(v)}" for k, v in rec.items())
         print(f"[{self.name}] {msg}", file=sys.stderr)
 
     def close(self) -> None:
-        if self._fh:
+        if self._fh is not None:
             self._fh.close()
             self._fh = None
 

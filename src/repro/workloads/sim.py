@@ -31,6 +31,8 @@ import numpy as np
 
 from repro.core.spaces import ConfigSpace, Option
 from repro.envs import measure as measure_mod
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.envs.measure import (HardwareSpec, KernelWorkload, LaunchGeometry,
                                 family_params)
 from repro.serving.paging import PAGES_OPTIONS, PagedPlan
@@ -171,14 +173,36 @@ class SimReport:
         }
 
 
-#: the system events C used for causal discovery: genuine mediators between
-#: configuration and objective (queueing, occupancy, prefill/decode mix, and
-#: — with paging on — pool pressure and chunked-prefill interleaving) — the
-#: objective-metric copies in :meth:`SimReport.counters` are excluded
-SIM_COUNTER_NAMES: Tuple[str, ...] = (
-    "queue_depth_mean", "queue_depth_max", "occupancy_mean",
-    "prefill_decode_ratio", "slo_violation_rate",
-    "page_pool_occupancy", "page_faults", "prefill_chunks_inflight")
+# The system events C used for causal discovery: genuine mediators between
+# configuration and objective (queueing, occupancy, prefill/decode mix, and
+# — with paging on — pool pressure and chunked-prefill interleaving).
+# Declared in the obs metrics registry — the single source of truth sim,
+# fleet, and replay all derive their counter-name tuples from — in the
+# "serving" group; declaration order IS discovery-matrix column order.
+obs_metrics.declare("queue_depth_mean", group="serving",
+                    help="mean waiting-queue depth per tick")
+obs_metrics.declare("queue_depth_max", group="serving",
+                    help="max waiting-queue depth over the run")
+obs_metrics.declare("occupancy_mean", group="serving",
+                    help="mean seated-slot occupancy per tick")
+obs_metrics.declare("prefill_decode_ratio", group="serving",
+                    help="prefill time / decode time over the run")
+obs_metrics.declare("slo_violation_rate", group="serving",
+                    help="fraction of requests whose latency missed the SLO")
+obs_metrics.declare("page_pool_occupancy", group="serving",
+                    help="mean used-pages / pool per tick (paged KV)")
+obs_metrics.declare("page_faults", group="serving", kind="counter",
+                    help="pool-exhaustion evictions (paged KV)")
+obs_metrics.declare("prefill_chunks_inflight", group="serving",
+                    help="mean inflight chunked prefills per tick")
+# objective clones: present in counters() so constrained queries bind, but
+# discovery=False keeps them out of the causal graph's variable set
+obs_metrics.declare("latency", group="serving", discovery=False,
+                    help="p99 latency objective clone", unit="us")
+obs_metrics.declare("throughput", group="serving", discovery=False,
+                    help="throughput objective clone", unit="rps")
+
+SIM_COUNTER_NAMES: Tuple[str, ...] = obs_metrics.discovery_names("serving")
 
 
 def _infeasible(reason: str, n_requests: int) -> SimReport:
@@ -445,11 +469,20 @@ class FleetReport(SimReport):
         return c
 
 
-#: fleet causal-discovery counters: the single-sim mediators plus the
-#: router/straggler mediators — and, as with SIM_COUNTER_NAMES, none of the
-#: objective-metric copies that :meth:`SimReport.counters` also carries
-FLEET_COUNTER_NAMES: Tuple[str, ...] = SIM_COUNTER_NAMES + (
-    "routing_imbalance", "replica_queue_depth_max", "straggler_flagged")
+# Fleet causal-discovery counters: the single-sim mediators plus the
+# router/straggler mediators, registered as their own "fleet" group so every
+# fleet-shaped surface (sim fleet, replay fleet) composes the same trio —
+# and, as with SIM_COUNTER_NAMES, none of the objective-metric copies that
+# :meth:`SimReport.counters` also carries.
+obs_metrics.declare("routing_imbalance", group="fleet",
+                    help="max replica load / perfectly-even load")
+obs_metrics.declare("replica_queue_depth_max", group="fleet",
+                    help="chosen-replica backlog at routing time")
+obs_metrics.declare("straggler_flagged", group="fleet", kind="counter",
+                    help="replicas flagged straggling during the run")
+
+FLEET_COUNTER_NAMES: Tuple[str, ...] = obs_metrics.discovery_names(
+    "serving", "fleet")
 
 
 def _fleet_infeasible(reason: str, n_requests: int,
@@ -497,7 +530,8 @@ class _FleetReplica:
                  config: Dict[str, Any], reqs, decode_us: float, *,
                  paged: Optional[PagedPlan] = None,
                  stall_label: str = "fleet replica",
-                 stall_total: Optional[int] = None):
+                 stall_total: Optional[int] = None,
+                 trace_tid: int = 0):
         self.sim = sim
         self.plan = plan
         self.config = config
@@ -522,6 +556,11 @@ class _FleetReplica:
         self.pool_occ_sum = 0.0          # used/pool sampled per decode tick
         self.chunks_inflight_sum = 0.0   # inflight prefills per decode tick
         self.prefilling: Optional[List[int]] = None  # [idx, done_tokens, pages]
+        # modeled-time tracing: the simulator track's thread id (replica
+        # index in a fleet) and the per-request admit clocks — populated
+        # only while a tracer is active, so the untraced run is untouched
+        self.trace_tid = trace_tid
+        self._admit_clock: Dict[int, float] = {}
 
     @property
     def backlog(self) -> int:
@@ -539,6 +578,13 @@ class _FleetReplica:
             # idle replica: jump its clock to the arrival, mirroring the
             # single simulator's idle fast-forward
             self.clock = max(self.clock, arrival_us)
+        tr = obs_trace.active()
+        if tr is not None:
+            tr.async_begin("sim_request", self.reqs[idx].uid,
+                           cat="sim_request", track=obs_trace.TRACK_SIM,
+                           ts_us=arrival_us, replica=self.trace_tid,
+                           prompt_len=self.reqs[idx].prompt_len,
+                           output_len=self.reqs[idx].output_len)
         self.queue.append(idx)
         self.assigned.append(idx)
 
@@ -579,7 +625,11 @@ class _FleetReplica:
             self.completed.append(
                 (idx, self.clock - reqs[idx].arrival_s * 1e6))
             self.free_pages += pages   # no-op on the dense path (pages=0)
+            self._trace_retire(idx)
         else:
+            tr = obs_trace.active()
+            if tr is not None:
+                self._admit_clock[idx] = self.clock
             self.resident.append(
                 [idx, reqs[idx].output_len - 1, reqs[idx].prompt_len, pages])
 
@@ -607,6 +657,12 @@ class _FleetReplica:
                     return False
                 self.clock += t_pref
                 self.prefill_total += t_pref
+                tr = obs_trace.active()
+                if tr is not None:
+                    tr.complete("prefill_chunk", self.clock - t_pref, t_pref,
+                                cat="sim_request", track=obs_trace.TRACK_SIM,
+                                tid=self.trace_tid, uid=reqs[idx].uid,
+                                done=done + step)
                 done += step
                 if done >= reqs[idx].prompt_len:
                     self.prefilling = None
@@ -631,6 +687,17 @@ class _FleetReplica:
                     return False
                 self.clock += t_pref
                 self.prefill_total += t_pref
+                tr = obs_trace.active()
+                if tr is not None:
+                    arrival = reqs[idx].arrival_s * 1e6
+                    start = self.clock - t_pref
+                    tr.complete("queue", arrival, max(start - arrival, 0.0),
+                                cat="sim_request", track=obs_trace.TRACK_SIM,
+                                tid=self.trace_tid, uid=reqs[idx].uid)
+                    tr.complete("prefill", start, t_pref, cat="sim_request",
+                                track=obs_trace.TRACK_SIM, tid=self.trace_tid,
+                                uid=reqs[idx].uid,
+                                prompt_len=reqs[idx].prompt_len)
                 self.free_pages -= need
                 self._finish_prefill(idx, need)
         return True
@@ -682,7 +749,24 @@ class _FleetReplica:
                         (idx, self.clock - reqs[idx].arrival_s * 1e6))
                     self.resident.remove(slot)
                     self.free_pages += slot[3]
+                    self._trace_retire(idx)
         return True
+
+    def _trace_retire(self, idx: int) -> None:
+        """Close a request's modeled-time lifecycle: a decode span from
+        admission to retirement, then the async end (no-op untraced)."""
+        tr = obs_trace.active()
+        if tr is None:
+            return
+        uid = self.reqs[idx].uid
+        admit = self._admit_clock.pop(idx, None)
+        if admit is not None:
+            tr.complete("decode_resident", admit, self.clock - admit,
+                        cat="sim_request", track=obs_trace.TRACK_SIM,
+                        tid=self.trace_tid, uid=uid)
+        tr.async_end("sim_request", uid, cat="sim_request",
+                     track=obs_trace.TRACK_SIM, ts_us=self.clock,
+                     latency_us=self.clock - self.reqs[idx].arrival_s * 1e6)
 
     def advance_until(self, t_us: float) -> bool:
         """Run scheduler iterations until the replica clock reaches ``t_us``
@@ -804,8 +888,9 @@ class FleetSimulator:
             decode_us.append(d_us)
 
         reqs = trace.requests
-        replicas = [_FleetReplica(sim, plan, config, reqs, d, paged=paged)
-                    for sim, d in zip(sims, decode_us)]
+        replicas = [_FleetReplica(sim, plan, config, reqs, d, paged=paged,
+                                  trace_tid=r)
+                    for r, (sim, d) in enumerate(zip(sims, decode_us))]
         # the po2 sampler is part of the environment realization: seed it
         # from the trace identity + replica count so the same (trace,
         # config) pair always draws the same probe sequence
