@@ -1,0 +1,11 @@
+"""Static analysis subsystem: contract linter + pallas kernel safety checker.
+
+``python -m repro.analysis --gate src/`` is the CI entry point; see
+:mod:`repro.analysis.engine` for the finding/suppression/baseline model,
+:mod:`repro.analysis.contracts` for the AST lint rules,
+:mod:`repro.analysis.kernels` for the pallas launch checks, and
+:mod:`repro.analysis.audits` for the registry audits.
+"""
+
+from repro.analysis.engine import (  # noqa: F401
+    ERROR, RULES, WARNING, Finding, Report, run_analysis)

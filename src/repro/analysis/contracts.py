@@ -1,0 +1,369 @@
+"""AST contract linter: the repo's standing contracts as machine checks.
+
+Rules (ids in :data:`repro.analysis.engine.RULES`):
+
+- ``pallas-tpu-outside-compat`` — ``jax.experimental.pallas.tpu`` (imports
+  or attribute chains, including ``pl.tpu`` through an alias) anywhere but
+  ``compat.py``.  The compat layer is the single place version-gated TPU
+  API lives.
+- ``pallas-import-location`` — plain pallas imports are legal only in
+  ``compat.py`` and ``kernels/*/kernel.py``; everything else must go
+  through the dispatch registry.
+- ``sharding-version-gate`` — ``getattr``/``hasattr`` probing on ``jax`` /
+  ``jax.sharding`` outside ``compat.py`` (add a shim instead).
+- ``unseeded-randomness`` — ``np.random.<fn>`` module-level sampler calls,
+  argless ``default_rng()``, and any stdlib ``random`` use.  Bit-exact
+  replay parity is the repo's core test invariant; every RNG must be an
+  explicitly seeded Generator.
+- ``wall-clock`` — ``time.time`` / ``perf_counter`` / ``monotonic`` /
+  ``datetime.now`` reads outside the allow-listed measurement/trace
+  modules.
+- ``broad-except`` — bare ``except`` or catching ``Exception`` /
+  ``BaseException``.
+- ``span-balance`` — ``async_begin`` without a matching ``async_end`` in
+  the same module, and ``.span(...)`` handles that are created but never
+  entered (assigned and never used in a ``with``, or discarded as a bare
+  expression statement).
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.engine import ERROR, Finding, norm_path
+
+# Modules whose business IS reading the clock: the tracer, the measurement
+# backends, replay/scheduler wall accounting, dispatch profiling, the
+# benchmark/runner harnesses, run logging, and the compile-sweep dry-runner.
+WALLCLOCK_ALLOWED = (
+    "repro/obs/trace.py",
+    "repro/envs/measure.py",
+    "repro/serving/replay.py",
+    "repro/serving/scheduler.py",
+    "repro/kernels/dispatch.py",
+    "repro/runtime/driver.py",
+    "repro/utils/logging.py",
+    "repro/tuner/bench.py",
+    "repro/tuner/runner.py",
+    "repro/launch/dryrun.py",
+)
+
+COMPAT_SUFFIX = "repro/compat.py"
+_KERNEL_FILE_RE = re.compile(r"repro/kernels/[^/]+/kernel\.py$")
+
+# numpy.random module-level samplers/state (the legacy global RNG surface)
+NP_GLOBAL_SAMPLERS = frozenset({
+    "rand", "randn", "randint", "random", "random_sample", "ranf", "sample",
+    "choice", "shuffle", "permutation", "bytes", "uniform", "normal",
+    "standard_normal", "poisson", "exponential", "beta", "binomial", "gamma",
+    "geometric", "gumbel", "laplace", "logistic", "lognormal", "multinomial",
+    "multivariate_normal", "pareto", "rayleigh", "triangular", "vonmises",
+    "wald", "weibull", "zipf", "seed", "get_state", "set_state",
+})
+
+WALLCLOCK_TIME_FNS = frozenset({
+    "time", "time_ns", "perf_counter", "perf_counter_ns",
+    "monotonic", "monotonic_ns", "clock_gettime",
+})
+
+
+def _is_compat(path: str) -> bool:
+    return path.endswith(COMPAT_SUFFIX)
+
+
+def _pallas_import_ok(path: str) -> bool:
+    return _is_compat(path) or _KERNEL_FILE_RE.search(path) is not None
+
+
+def _wallclock_ok(path: str) -> bool:
+    return any(path.endswith(s) for s in WALLCLOCK_ALLOWED)
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` attribute chain as a string, or None for anything else."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+class _Linter(ast.NodeVisitor):
+    def __init__(self, path: str):
+        self.path = path
+        self.findings: List[Finding] = []
+        self.pallas_aliases: Set[str] = set()     # names bound to the pallas module
+        self.numpy_aliases: Set[str] = set()      # names bound to numpy
+        self.np_random_aliases: Set[str] = set()  # names bound to numpy.random
+        self.time_aliases: Set[str] = set()       # names bound to time module
+        self.time_fn_names: Set[str] = set()      # from time import perf_counter
+        self.random_aliases: Set[str] = set()     # names bound to stdlib random
+        self.random_fn_names: Set[str] = set()    # from random import choice
+        self.default_rng_names: Set[str] = set()  # from numpy.random import default_rng
+        self.datetime_names: Set[str] = set()     # datetime module/class names
+
+    def flag(self, node: ast.AST, rule: str, message: str) -> None:
+        self.findings.append(Finding(self.path, getattr(node, "lineno", 1),
+                                     rule, message, ERROR))
+
+    # -- imports ----------------------------------------------------------
+
+    def visit_Import(self, node: ast.Import) -> None:
+        for alias in node.names:
+            name, bound = alias.name, alias.asname or alias.name.split(".")[0]
+            if name.startswith("jax.experimental.pallas.tpu"):
+                if not _is_compat(self.path):
+                    self.flag(node, "pallas-tpu-outside-compat",
+                              f"import of {name} outside compat.py")
+            elif name.startswith("jax.experimental.pallas"):
+                if alias.asname:
+                    self.pallas_aliases.add(bound)
+                if not _pallas_import_ok(self.path):
+                    self.flag(node, "pallas-import-location",
+                              f"import of {name} outside compat.py / "
+                              f"kernels/*/kernel.py — dispatch through the "
+                              f"kernel registry instead")
+            elif name == "numpy" or name.startswith("numpy."):
+                self.numpy_aliases.add(bound)
+            elif name == "time":
+                self.time_aliases.add(bound)
+            elif name == "random":
+                self.random_aliases.add(bound)
+                self.flag(node, "unseeded-randomness",
+                          "stdlib random imported — use a seeded numpy "
+                          "default_rng(seed)")
+            elif name == "datetime":
+                self.datetime_names.add(bound)
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        mod = node.module or ""
+        names = {a.name: (a.asname or a.name) for a in node.names}
+        if mod.startswith("jax.experimental.pallas.tpu"):
+            if not _is_compat(self.path):
+                self.flag(node, "pallas-tpu-outside-compat",
+                          f"import from {mod} outside compat.py")
+        elif mod == "jax.experimental" and "pallas" in names:
+            self.pallas_aliases.add(names["pallas"])
+            if not _pallas_import_ok(self.path):
+                self.flag(node, "pallas-import-location",
+                          "pallas imported outside compat.py / "
+                          "kernels/*/kernel.py — dispatch through the "
+                          "kernel registry instead")
+        elif mod == "jax.experimental.pallas":
+            if "tpu" in names and not _is_compat(self.path):
+                self.flag(node, "pallas-tpu-outside-compat",
+                          "pallas.tpu imported outside compat.py")
+            elif not _pallas_import_ok(self.path):
+                self.flag(node, "pallas-import-location",
+                          "pallas imported outside compat.py / "
+                          "kernels/*/kernel.py")
+        elif mod in ("numpy.random", "numpy"):
+            if mod == "numpy" and "random" in names:
+                self.np_random_aliases.add(names["random"])
+            if "default_rng" in names:
+                self.default_rng_names.add(names["default_rng"])
+            for name, bound in names.items():
+                if mod == "numpy.random" and name in NP_GLOBAL_SAMPLERS:
+                    self.flag(node, "unseeded-randomness",
+                              f"numpy.random.{name} (global-RNG sampler) "
+                              f"imported — use a seeded default_rng(seed)")
+        elif mod == "time":
+            for name, bound in names.items():
+                if name in WALLCLOCK_TIME_FNS:
+                    self.time_fn_names.add(bound)
+        elif mod == "random":
+            self.flag(node, "unseeded-randomness",
+                      "stdlib random imported — use a seeded "
+                      "numpy default_rng(seed)")
+            self.random_fn_names.update(names.values())
+        elif mod == "datetime":
+            if "datetime" in names:
+                self.datetime_names.add(names["datetime"])
+        self.generic_visit(node)
+
+    # -- expressions ------------------------------------------------------
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        if not _is_compat(self.path):
+            chain = _dotted(node)
+            if chain and (".pallas.tpu" in chain or chain == "pallas.tpu"):
+                self.flag(node, "pallas-tpu-outside-compat",
+                          f"attribute chain {chain} outside compat.py")
+            elif (node.attr == "tpu" and isinstance(node.value, ast.Name)
+                  and node.value.id in self.pallas_aliases):
+                self.flag(node, "pallas-tpu-outside-compat",
+                          f"{node.value.id}.tpu (pallas.tpu through alias) "
+                          f"outside compat.py")
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        fn = node.func
+        chain = _dotted(fn)
+
+        # version-gate probing on jax outside compat
+        if (isinstance(fn, ast.Name) and fn.id in ("getattr", "hasattr")
+                and node.args and not _is_compat(self.path)):
+            target = _dotted(node.args[0])
+            if target == "jax" or (target or "").startswith("jax."):
+                self.flag(node, "sharding-version-gate",
+                          f"{fn.id}({target}, ...) version gate outside "
+                          f"compat.py — add a compat shim")
+
+        # unseeded randomness
+        if chain:
+            head, _, tail = chain.rpartition(".")
+            if tail in NP_GLOBAL_SAMPLERS and head and (
+                    head in self.np_random_aliases
+                    or any(head == f"{np}.random" for np in self.numpy_aliases)):
+                self.flag(node, "unseeded-randomness",
+                          f"{chain}() uses the numpy global RNG — use a "
+                          f"seeded default_rng(seed)")
+            if head and (head in self.random_aliases):
+                self.flag(node, "unseeded-randomness",
+                          f"stdlib {chain}() — use a seeded numpy "
+                          f"default_rng(seed)")
+        if isinstance(fn, ast.Name) and fn.id in self.random_fn_names:
+            self.flag(node, "unseeded-randomness",
+                      f"stdlib random.{fn.id}() — use a seeded numpy "
+                      f"default_rng(seed)")
+        is_default_rng = (
+            (chain and chain.split(".")[-1] == "default_rng")
+            or (isinstance(fn, ast.Name) and fn.id in self.default_rng_names))
+        if is_default_rng and not node.args and not node.keywords:
+            self.flag(node, "unseeded-randomness",
+                      "default_rng() without a seed draws OS entropy — pass "
+                      "an explicit seed")
+
+        # wall clock
+        if not _wallclock_ok(self.path):
+            if chain:
+                head, _, tail = chain.rpartition(".")
+                if head in self.time_aliases and tail in WALLCLOCK_TIME_FNS:
+                    self.flag(node, "wall-clock",
+                              f"{chain}() outside the measurement/trace "
+                              f"allow-list")
+                elif (tail in ("now", "utcnow", "today")
+                      and head and head.split(".")[-1] in self.datetime_names):
+                    self.flag(node, "wall-clock",
+                              f"{chain}() outside the measurement/trace "
+                              f"allow-list")
+            if isinstance(fn, ast.Name) and fn.id in self.time_fn_names:
+                self.flag(node, "wall-clock",
+                          f"{fn.id}() outside the measurement/trace "
+                          f"allow-list")
+        self.generic_visit(node)
+
+    def visit_ExceptHandler(self, node: ast.ExceptHandler) -> None:
+        if node.type is None:
+            self.flag(node, "broad-except",
+                      "bare except: — name the exception types")
+        else:
+            broad = sorted({
+                n.id if isinstance(n, ast.Name) else n.attr
+                for n in ast.walk(node.type)
+                if (isinstance(n, ast.Name)
+                    and n.id in ("Exception", "BaseException"))
+                or (isinstance(n, ast.Attribute)
+                    and n.attr in ("Exception", "BaseException"))})
+            if broad:
+                self.flag(node, "broad-except",
+                          f"except {'/'.join(broad)} — narrow to the "
+                          f"exception types this block can actually handle")
+        self.generic_visit(node)
+
+
+# --------------------------------------------------------------------------
+# span balance (module-level pass: needs begin/end pairing across functions)
+# --------------------------------------------------------------------------
+
+def _span_balance(tree: ast.Module, path: str) -> List[Finding]:
+    findings: List[Finding] = []
+
+    begins: List[Tuple[str, int]] = []
+    ends: Set[str] = set()
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)):
+            continue
+        if node.func.attr in ("async_begin", "async_end"):
+            if node.args and isinstance(node.args[0], ast.Constant) \
+                    and isinstance(node.args[0].value, str):
+                name = node.args[0].value
+                if node.func.attr == "async_begin":
+                    begins.append((name, node.lineno))
+                else:
+                    ends.add(name)
+    for name, line in begins:
+        if name not in ends:
+            findings.append(Finding(
+                path, line, "span-balance",
+                f'async_begin("{name}") has no matching async_end in this '
+                f"module"))
+
+    def _is_span_call(value: ast.expr) -> bool:
+        return (isinstance(value, ast.Call)
+                and isinstance(value.func, ast.Attribute)
+                and value.func.attr == "span")
+
+    scopes: List[ast.AST] = [tree]
+    scopes += [n for n in ast.walk(tree)
+               if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+    for scope in scopes:
+        assigned: List[Tuple[str, int]] = []
+        entered: Set[str] = set()
+        for node in ast.walk(scope if not isinstance(scope, ast.Module)
+                             else tree):
+            if isinstance(node, ast.Assign) and _is_span_call(node.value) \
+                    and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                assigned.append((node.targets[0].id, node.lineno))
+            elif isinstance(node, (ast.With, ast.AsyncWith)):
+                for item in node.items:
+                    if isinstance(item.context_expr, ast.Name):
+                        entered.add(item.context_expr.id)
+            elif isinstance(node, ast.Expr) and _is_span_call(node.value):
+                findings.append(Finding(
+                    path, node.lineno, "span-balance",
+                    "span created and discarded — enter it with `with` or "
+                    "keep the handle and close it"))
+            elif (isinstance(node, ast.Call)
+                  and isinstance(node.func, ast.Attribute)
+                  and node.func.attr in ("__enter__", "__exit__")
+                  and isinstance(node.func.value, ast.Name)):
+                entered.add(node.func.value.id)
+        if isinstance(scope, ast.Module):
+            # module scope: only statements directly at top level
+            assigned = [(n, l) for n, l in assigned
+                        if any(isinstance(s, ast.Assign) and s.lineno == l
+                               for s in tree.body)]
+        for name, line in assigned:
+            if name not in entered:
+                findings.append(Finding(
+                    path, line, "span-balance",
+                    f"span handle {name!r} assigned but never entered "
+                    f"(`with {name}:`)"))
+    # deduplicate: nested function scopes are walked twice (module + self)
+    return sorted(set(findings))
+
+
+def lint_file(path: str) -> List[Finding]:
+    path = norm_path(path)
+    try:
+        with open(path) as f:
+            source = f.read()
+    except OSError as e:
+        return [Finding(path, 1, "parse-error", f"unreadable: {e}")]
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [Finding(path, e.lineno or 1, "parse-error",
+                        f"syntax error: {e.msg}")]
+    linter = _Linter(path)
+    linter.visit(tree)
+    return sorted(set(linter.findings + _span_balance(tree, path)))

@@ -1,0 +1,549 @@
+"""Pallas kernel safety checker: static analysis of ``pl.pallas_call`` sites.
+
+Registry-driven: :func:`check_registered_families` walks every family in
+``repro.kernels.dispatch``, parses the kernel module's AST, reconstructs the
+grid / BlockSpec / index-map structure of each ``pl.pallas_call`` (including
+sites routed through a ``compat.prefetch_scalar_grid_spec`` local), and runs
+three checks — a new family registered in dispatch gets all of them with
+zero analyzer changes:
+
+(a) **write races** (``kernel-write-race``): every out-spec index map is
+    enumerated over a small concrete grid.  Two grid points that differ on
+    a *parallel* grid dimension but land on the same output block race; grid
+    points differing only on sequential ("arbitrary") dimensions are the
+    legal accumulate-in-scratch pattern and do not fire.
+
+(b) **VMEM footprint** (``kernel-vmem-budget``): for every launch config in
+    the family's registered ``Option`` domains, a static footprint
+    — 2x double-buffered in/out blocks at bf16 plus fp32 scratch — is
+    cross-checked against the :class:`repro.utils.hardware.HardwareSpec`
+    budget and the analytic feasibility gate
+    (:class:`repro.envs.measure.LaunchGeometry`).  A config the analytic
+    gate would admit but whose static footprint exceeds hardware VMEM is a
+    gate miss: ``dispatch.launch_space()`` bounds must never allow it.
+
+(c) **signature contracts** (``kernel-signature`` / ``kernel-option-unused``):
+    pallas and ref entry points (variants included) must agree on required
+    positional names and return annotations, the pallas impl must accept
+    ``interpret``, and every registered launch ``Option`` must land on a
+    real parameter of some implementation.
+
+Index maps and block shapes are evaluated by compiling the lambda / shape
+expression with every free name pre-bound: closure shape variables default
+to :data:`DEFAULT_DIM` (block shapes) or a small constant (index maps), and
+scalar-prefetch table refs are stubbed so subscripts like ``tbl[ib, ip]``
+resolve.  Anything that still defeats evaluation degrades to the
+non-gating ``kernel-unanalyzable`` warning rather than a false positive.
+"""
+
+from __future__ import annotations
+
+import ast
+import importlib.util
+import inspect
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.analysis.engine import ERROR, WARNING, Finding, norm_path
+
+DEFAULT_DIM = 128     # free shape variables (head_dim, d_model slices, ...)
+DEFAULT_INDEX = 2     # free closure scalars inside index maps (GQA group, ...)
+GRID_POINTS_PER_DIM = 3
+BF16_BYTES = 2        # serving activations/KV are bf16-class
+DOUBLE_BUFFER = 2     # pallas pipelines in/out blocks double-buffered
+
+DTYPE_BYTES = {
+    "float64": 8, "int64": 8, "uint64": 8,
+    "float32": 4, "int32": 4, "uint32": 4,
+    "bfloat16": 2, "float16": 2, "int16": 2, "uint16": 2,
+    "int8": 1, "uint8": 1, "bool_": 1, "bool": 1,
+}
+
+
+class _FakeRef:
+    """Stands in for scalar-prefetch refs inside index maps: any subscript
+    (``tbl[ib, ip]``) resolves to block 0, which is what the race check
+    wants — a table-driven map aliases maximally when the table is
+    constant."""
+
+    def __getitem__(self, _key: Any) -> int:
+        return 0
+
+
+@dataclass
+class BlockSpecInfo:
+    shape: Optional[ast.expr]          # block_shape tuple expression
+    index_map: Optional[ast.Lambda]    # index map lambda (None = identity)
+    line: int
+
+
+@dataclass
+class PallasCallSite:
+    """One reconstructed ``pl.pallas_call`` launch."""
+
+    path: str
+    line: int
+    grid: Optional[Tuple[ast.expr, ...]]         # one expr per grid dim
+    in_specs: List[BlockSpecInfo] = field(default_factory=list)
+    out_specs: List[BlockSpecInfo] = field(default_factory=list)
+    scratch: List[Tuple[ast.expr, str]] = field(default_factory=list)
+    dimension_semantics: Optional[Tuple[str, ...]] = None
+    num_scalar_prefetch: int = 0
+
+
+# --------------------------------------------------------------------------
+# AST reconstruction
+# --------------------------------------------------------------------------
+
+def _call_name(call: ast.Call) -> str:
+    fn = call.func
+    if isinstance(fn, ast.Attribute):
+        return fn.attr
+    if isinstance(fn, ast.Name):
+        return fn.id
+    return ""
+
+
+def _kwarg(call: ast.Call, name: str) -> Optional[ast.expr]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def _resolve(node: Optional[ast.expr],
+             assigns: Dict[str, List[ast.expr]]) -> List[ast.expr]:
+    """A value expression, following one level of local ``name = expr``
+    assignment; multiple assignments (branchy code) yield every
+    alternative."""
+    if node is None:
+        return []
+    if isinstance(node, ast.Name) and node.id in assigns:
+        return list(assigns[node.id])
+    return [node]
+
+
+def _block_spec(call: ast.expr) -> Optional[BlockSpecInfo]:
+    if not (isinstance(call, ast.Call)
+            and _call_name(call).endswith("BlockSpec")):
+        return None
+    shape = call.args[0] if call.args else _kwarg(call, "block_shape")
+    imap = call.args[1] if len(call.args) > 1 else _kwarg(call, "index_map")
+    return BlockSpecInfo(
+        shape=shape,
+        index_map=imap if isinstance(imap, ast.Lambda) else None,
+        line=call.lineno)
+
+
+def _spec_list(node: Optional[ast.expr],
+               assigns: Dict[str, List[ast.expr]]) -> List[BlockSpecInfo]:
+    out: List[BlockSpecInfo] = []
+    for alt in _resolve(node, assigns):
+        elts = alt.elts if isinstance(alt, (ast.List, ast.Tuple)) else [alt]
+        for e in elts:
+            spec = _block_spec(e)
+            if spec is not None:
+                out.append(spec)
+    return out
+
+
+def _scratch_list(node: Optional[ast.expr],
+                  assigns: Dict[str, List[ast.expr]]
+                  ) -> List[Tuple[ast.expr, str]]:
+    out: List[Tuple[ast.expr, str]] = []
+    for alt in _resolve(node, assigns):
+        elts = alt.elts if isinstance(alt, (ast.List, ast.Tuple)) else [alt]
+        for e in elts:
+            if isinstance(e, ast.Call) and e.args:
+                dtype = "float32"
+                if len(e.args) > 1:
+                    d = e.args[1]
+                    dtype = d.attr if isinstance(d, ast.Attribute) else (
+                        d.id if isinstance(d, ast.Name) else "float32")
+                out.append((e.args[0], dtype))
+    return out
+
+
+def _grid_tuple(node: Optional[ast.expr],
+                assigns: Dict[str, List[ast.expr]]
+                ) -> Optional[Tuple[ast.expr, ...]]:
+    for alt in _resolve(node, assigns):
+        if isinstance(alt, (ast.Tuple, ast.List)):
+            return tuple(alt.elts)
+    return None
+
+
+def _semantics(call: ast.Call,
+               assigns: Dict[str, List[ast.expr]]
+               ) -> Optional[Tuple[str, ...]]:
+    node = _kwarg(call, "compiler_params")
+    for alt in _resolve(node, assigns):
+        if not isinstance(alt, ast.Call):
+            continue
+        sem = _kwarg(alt, "dimension_semantics")
+        for s in _resolve(sem, assigns):
+            if isinstance(s, (ast.Tuple, ast.List)):
+                vals = [e.value for e in s.elts
+                        if isinstance(e, ast.Constant)]
+                if len(vals) == len(s.elts):
+                    return tuple(vals)
+    return None
+
+
+def parse_kernel_source(source: str, path: str) -> List[PallasCallSite]:
+    """Every ``pallas_call`` launch in a kernel module's source."""
+    tree = ast.parse(source, filename=path)
+    sites: List[PallasCallSite] = []
+    seen_lines: set = set()
+    funcs = [n for n in ast.walk(tree)
+             if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+    for fn in funcs:
+        assigns: Dict[str, List[ast.expr]] = {}
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                assigns.setdefault(node.targets[0].id, []).append(node.value)
+        for node in ast.walk(fn):
+            if not (isinstance(node, ast.Call)
+                    and _call_name(node) == "pallas_call"):
+                continue
+            if node.lineno in seen_lines:  # nested scopes walk nodes twice
+                continue
+            seen_lines.add(node.lineno)
+            site = PallasCallSite(path=path, line=node.lineno, grid=None)
+            containers: List[ast.Call] = [node]
+            # grid_spec= routes grid/specs/scratch through a
+            # prefetch_scalar_grid_spec (possibly a local assignment)
+            for gs in _resolve(_kwarg(node, "grid_spec"), assigns):
+                if isinstance(gs, ast.Call):
+                    containers.append(gs)
+                    nsp = _kwarg(gs, "num_scalar_prefetch")
+                    if isinstance(nsp, ast.Constant):
+                        site.num_scalar_prefetch = int(nsp.value)
+            for c in containers:
+                if site.grid is None:
+                    site.grid = _grid_tuple(_kwarg(c, "grid"), assigns)
+                site.in_specs += _spec_list(_kwarg(c, "in_specs"), assigns)
+                site.out_specs += _spec_list(_kwarg(c, "out_specs"), assigns)
+                site.scratch += _scratch_list(_kwarg(c, "scratch_shapes"),
+                                              assigns)
+            site.dimension_semantics = _semantics(node, assigns)
+            sites.append(site)
+    return sites
+
+
+# --------------------------------------------------------------------------
+# expression evaluation with defaulted free names
+# --------------------------------------------------------------------------
+
+def _free_names(node: ast.expr) -> List[str]:
+    return sorted({n.id for n in ast.walk(node) if isinstance(n, ast.Name)})
+
+
+def _eval_expr(node: ast.expr, bindings: Dict[str, Any], default: Any) -> Any:
+    expr = ast.Expression(body=node)
+    ast.fix_missing_locations(expr)
+    env: Dict[str, Any] = {"__builtins__": {}}
+    for name in _free_names(node):
+        env[name] = bindings.get(name, default)
+    return eval(compile(expr, "<repro.analysis>", "eval"), env)
+
+
+def _compile_index_map(lam: ast.Lambda, bindings: Dict[str, Any]):
+    """The index-map lambda as a callable; free closure names pre-bound."""
+    params = {a.arg for a in lam.args.args}
+    expr = ast.Expression(body=lam)
+    ast.fix_missing_locations(expr)
+    env: Dict[str, Any] = {"__builtins__": {}}
+    for name in _free_names(lam.body):
+        if name not in params:
+            env[name] = bindings.get(name, DEFAULT_INDEX)
+    return eval(compile(expr, "<repro.analysis>", "eval"), env), len(params)
+
+
+# --------------------------------------------------------------------------
+# (a) write races
+# --------------------------------------------------------------------------
+
+def race_findings(site: PallasCallSite,
+                  bindings: Optional[Dict[str, Any]] = None) -> List[Finding]:
+    """Enumerate every out-spec index map over a small concrete grid and
+    flag output blocks reached from more than one parallel-dim
+    coordinate."""
+    if site.grid is None:
+        return [Finding(site.path, site.line, "kernel-unanalyzable",
+                        "grid could not be reconstructed statically",
+                        WARNING)]
+    ndim = len(site.grid)
+    sem = site.dimension_semantics or ("parallel",) * ndim
+    par_dims = [i for i in range(ndim)
+                if i >= len(sem) or sem[i] == "parallel"]
+    findings: List[Finding] = []
+    for spec in site.out_specs:
+        if spec.index_map is None:
+            continue  # identity map: block i <- grid point i, race-free
+        try:
+            fn, arity = _compile_index_map(spec.index_map, bindings or {})
+        except Exception:  # repro: ignore[broad-except] -- defensive eval wrapper: any failure degrades to the non-gating unanalyzable warning
+            findings.append(Finding(
+                site.path, spec.line, "kernel-unanalyzable",
+                "out-spec index map could not be compiled", WARNING))
+            continue
+        extra = max(arity - ndim, 0)
+        blocks: Dict[Tuple[Any, ...], set] = {}
+        ok = True
+        for pt in itertools.product(range(GRID_POINTS_PER_DIM), repeat=ndim):
+            args = pt + tuple(_FakeRef() for _ in range(extra))
+            try:
+                block = fn(*args)
+            except Exception:  # repro: ignore[broad-except] -- defensive eval wrapper: any failure degrades to the non-gating unanalyzable warning
+                findings.append(Finding(
+                    site.path, spec.line, "kernel-unanalyzable",
+                    "out-spec index map evaluation failed", WARNING))
+                ok = False
+                break
+            key = tuple(block) if isinstance(block, (tuple, list)) else (block,)
+            proj = tuple(pt[i] for i in par_dims)
+            blocks.setdefault(key, set()).add(proj)
+        if not ok:
+            continue
+        raced = sorted(k for k, projs in blocks.items() if len(projs) > 1)
+        if raced:
+            findings.append(Finding(
+                site.path, spec.line, "kernel-write-race",
+                f"out-spec index map sends {len(raced)} distinct parallel "
+                f"grid coordinates to the same output block (first: "
+                f"{raced[0]}) — make the aliasing dimension sequential "
+                f"('arbitrary') or fix the map"))
+    return findings
+
+
+# --------------------------------------------------------------------------
+# (b) static VMEM footprint
+# --------------------------------------------------------------------------
+
+def _shape_bytes(shape_node: ast.expr, bindings: Dict[str, Any],
+                 elem_bytes: int) -> int:
+    dims = _eval_expr(shape_node, bindings, DEFAULT_DIM)
+    if not isinstance(dims, (tuple, list)):
+        dims = (dims,)
+    total = elem_bytes
+    for d in dims:
+        total *= max(int(d), 1)
+    return total
+
+
+def static_vmem_bytes(site: PallasCallSite,
+                      params: Optional[Dict[str, Any]] = None) -> int:
+    """Conservative static VMEM estimate for one launch under ``params``:
+    double-buffered bf16 in/out blocks plus scratch at its declared
+    dtype.  Free shape names (data-dependent dims) default to
+    :data:`DEFAULT_DIM`."""
+    bindings = dict(params or {})
+    total = 0
+    for spec in site.in_specs + site.out_specs:
+        if spec.shape is not None:
+            total += DOUBLE_BUFFER * _shape_bytes(spec.shape, bindings,
+                                                  BF16_BYTES)
+    for shape_node, dtype in site.scratch:
+        total += _shape_bytes(shape_node, bindings,
+                              DTYPE_BYTES.get(dtype, 4))
+    return total
+
+
+def vmem_findings(sites: Sequence[PallasCallSite], family: str,
+                  configs: Iterable[Dict[str, Any]], *,
+                  vmem_budget: Optional[int] = None) -> Tuple[List[Finding], int]:
+    """Cross-check every candidate launch config against the hardware VMEM
+    budget AND the analytic feasibility gate.  Fires when the static
+    footprint exceeds hardware VMEM for a config the analytic gate admits
+    (or cannot see) — the gate-miss ``launch_space()`` must never allow."""
+    from repro.utils.hardware import TPU_V5E
+    budget = int(vmem_budget if vmem_budget is not None else
+                 TPU_V5E.vmem_bytes)
+    geometry = None
+    try:
+        from repro.envs.measure import KernelWorkload, LaunchGeometry
+        if family in LaunchGeometry.MODELS:
+            geometry = LaunchGeometry(KernelWorkload())
+    except ImportError:
+        pass
+    findings: List[Finding] = []
+    checked = 0
+    for params in configs:
+        checked += 1
+        try:
+            static = max((static_vmem_bytes(s, params) for s in sites),
+                         default=0)
+        except Exception:  # repro: ignore[broad-except] -- defensive eval wrapper: any failure degrades to the non-gating unanalyzable warning
+            findings.append(Finding(
+                sites[0].path if sites else f"<{family}>",
+                sites[0].line if sites else 1, "kernel-unanalyzable",
+                f"block shapes could not be evaluated for config {params}",
+                WARNING))
+            continue
+        if static <= budget:
+            continue
+        gate_rejects = False
+        if geometry is not None:
+            vmem_analytic = geometry.family_cost(family, params)[2]
+            gate_rejects = vmem_analytic > geometry.workload.vmem_limit
+        if not gate_rejects:
+            site = sites[0]
+            findings.append(Finding(
+                site.path, site.line, "kernel-vmem-budget",
+                f"{family} config {dict(sorted(params.items()))}: static "
+                f"VMEM footprint {static / 2**20:.1f} MiB exceeds the "
+                f"{budget / 2**20:.0f} MiB hardware budget and the analytic "
+                f"feasibility gate does not reject it — tighten the Option "
+                f"domains in dispatch.py"))
+    return sorted(set(findings)), checked
+
+
+# --------------------------------------------------------------------------
+# (c) signature contracts
+# --------------------------------------------------------------------------
+
+def _required_positional(fn) -> List[str]:
+    sig = inspect.signature(fn)
+    return [p.name for p in sig.parameters.values()
+            if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD)
+            and p.default is p.empty]
+
+
+def _fn_anchor(fn) -> Tuple[str, int]:
+    code = getattr(fn, "__wrapped__", fn).__code__
+    return norm_path(code.co_filename), code.co_firstlineno
+
+
+def signature_findings(family: str) -> List[Finding]:
+    from repro.kernels import dispatch
+    fam = dispatch.get_family(family)
+    findings: List[Finding] = []
+    entries = [(family, fam.pallas, fam.ref)]
+    entries += [(f"{family}:{vname}", p, r)
+                for vname, (p, r) in fam.variants]
+    accepted: set = set()
+    for label, pref, rref in entries:
+        pfn, rfn = dispatch._load(pref), dispatch._load(rref)
+        ppath, pline = _fn_anchor(pfn)
+        psig, rsig = inspect.signature(pfn), inspect.signature(rfn)
+        accepted |= set(psig.parameters) | set(rsig.parameters)
+        preq, rreq = _required_positional(pfn), _required_positional(rfn)
+        if preq != rreq:
+            findings.append(Finding(
+                ppath, pline, "kernel-signature",
+                f"{label}: pallas required positionals {preq} != ref "
+                f"required positionals {rreq} — dispatch passes one "
+                f"argument list to both"))
+        if "interpret" not in psig.parameters:
+            findings.append(Finding(
+                ppath, pline, "kernel-signature",
+                f"{label}: pallas impl does not accept interpret= — the "
+                f"pallas_interpret mode cannot route through it"))
+        pret, rret = psig.return_annotation, rsig.return_annotation
+        if (pret is not inspect.Signature.empty
+                and rret is not inspect.Signature.empty and pret != rret):
+            findings.append(Finding(
+                ppath, pline, "kernel-signature",
+                f"{label}: return annotation {pret} != ref's {rret}"))
+    unused = [o.name for o in fam.launch_options if o.name not in accepted]
+    if unused:
+        path, line = _registration_anchor(family)
+        findings.append(Finding(
+            path, line, "kernel-option-unused",
+            f"{family}: launch Option(s) {unused} are not parameters of any "
+            f"pallas/ref implementation"))
+    return findings
+
+
+def _registration_anchor(family: str) -> Tuple[str, int]:
+    from repro.kernels import dispatch
+    path = norm_path(dispatch.__file__)
+    try:
+        with open(path) as f:
+            for i, text in enumerate(f, 1):
+                if f'name="{family}"' in text:
+                    return path, i
+    except OSError:
+        pass
+    return path, 1
+
+
+# --------------------------------------------------------------------------
+# registry-driven entry points
+# --------------------------------------------------------------------------
+
+def _family_sites(family: str) -> Tuple[List[PallasCallSite], List[Finding]]:
+    from repro.kernels import dispatch
+    fam = dispatch.get_family(family)
+    module = fam.pallas.split(":")[0]
+    spec = importlib.util.find_spec(module)
+    if spec is None or not spec.origin:
+        return [], [Finding(f"<{family}>", 1, "kernel-unanalyzable",
+                            f"pallas module {module} not found", WARNING)]
+    path = norm_path(spec.origin)
+    try:
+        with open(spec.origin) as f:
+            source = f.read()
+        return parse_kernel_source(source, path), []
+    except (OSError, SyntaxError) as e:
+        return [], [Finding(path, 1, "kernel-unanalyzable",
+                            f"kernel module unparseable: {e}", WARNING)]
+
+
+def option_configs(family: str) -> List[Dict[str, Any]]:
+    """The full cartesian product of the family's registered Option
+    domains — exactly the set ``dispatch.launch_space()`` can emit."""
+    from repro.kernels import dispatch
+    fam = dispatch.get_family(family)
+    names = [o.name for o in fam.launch_options]
+    domains = [o.values for o in fam.launch_options]
+    return [dict(zip(names, combo))
+            for combo in itertools.product(*domains)] if names else [{}]
+
+
+def check_family(family: str, *,
+                 vmem_budget: Optional[int] = None
+                 ) -> Tuple[List[Finding], int]:
+    """All three safety checks for one registered family."""
+    sites, findings = _family_sites(family)
+    for site in sites:
+        findings.extend(race_findings(site))
+    vfindings, checked = vmem_findings(sites, family, option_configs(family),
+                                       vmem_budget=vmem_budget)
+    findings.extend(vfindings)
+    findings.extend(signature_findings(family))
+    return sorted(set(findings)), checked
+
+
+def check_registered_families() -> Tuple[List[Finding], int]:
+    """Every family in the dispatch registry; returns (findings, total
+    launch configs VMEM-validated)."""
+    from repro.kernels import dispatch
+    findings: List[Finding] = []
+    checked = 0
+    for family in dispatch.families():
+        f, n = check_family(family)
+        findings.extend(f)
+        checked += n
+    return findings, checked
+
+
+def analyze_kernel_source(source: str, path: str = "<fixture>", *,
+                          configs: Optional[Iterable[Dict[str, Any]]] = None,
+                          family: str = "<fixture>",
+                          vmem_budget: Optional[int] = None
+                          ) -> List[Finding]:
+    """Fixture-friendly: race + (optional) VMEM checks over raw kernel
+    source, no registry required."""
+    sites = parse_kernel_source(source, path)
+    findings: List[Finding] = []
+    for site in sites:
+        findings.extend(race_findings(site))
+    if configs is not None:
+        vfindings, _ = vmem_findings(sites, family, configs,
+                                     vmem_budget=vmem_budget)
+        findings.extend(vfindings)
+    return sorted(set(findings))

@@ -86,6 +86,7 @@ class CheckpointManager:
                     shutil.rmtree(final)
                 os.rename(tmp, final)  # the atomic commit point
                 self._gc()
+            # repro: ignore[broad-except] -- async writer thread: failure is stored and re-raised on the next wait()/save()
             except BaseException as e:  # surfaced on next wait()/save()
                 self._error = e
                 shutil.rmtree(tmp, ignore_errors=True)

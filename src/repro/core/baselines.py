@@ -165,6 +165,7 @@ class BaseTuner:
         while spent < budget:
             k = min(max(int(query_batch), 1),
                     max(int(math.ceil(budget - spent)), 1))
+            # repro: ignore[wall-clock] -- per-round wall_s telemetry only; never feeds seeded decisions
             t0 = time.perf_counter()
             cfgs = self.ask(k)
             if len(cfgs) > 1 and hasattr(env, "intervene_batch"):
@@ -180,6 +181,7 @@ class BaseTuner:
                 round_log.append({
                     "size": len(cfgs),
                     "actions": ["intervene"] * len(cfgs),
+                    # repro: ignore[wall-clock] -- per-round wall_s telemetry only; never feeds seeded decisions
                     "wall_s": round(time.perf_counter() - t0, 4)})
         return self.best
 
@@ -292,6 +294,7 @@ class Cello(ResTuneWoML):
             return super().run(env, budget, query_batch, round_log)
         spent = 0.0
         while spent < budget:
+            # repro: ignore[wall-clock] -- per-round wall_s telemetry only; never feeds seeded decisions
             t0 = time.perf_counter()
             cfg = self.propose()
             cost = 1.0
@@ -314,6 +317,7 @@ class Cello(ResTuneWoML):
                     if round_log is not None:
                         round_log.append({
                             "size": 1, "actions": ["intervene"],
+                            # repro: ignore[wall-clock] -- per-round wall_s telemetry only; never feeds seeded decisions
                             "wall_s": round(time.perf_counter() - t0, 4)})
                     continue
             counters, yy = env.intervene(cfg)
@@ -324,6 +328,7 @@ class Cello(ResTuneWoML):
             if round_log is not None:
                 round_log.append({
                     "size": 1, "actions": ["intervene"],
+                    # repro: ignore[wall-clock] -- per-round wall_s telemetry only; never feeds seeded decisions
                     "wall_s": round(time.perf_counter() - t0, 4)})
         return self.best
 

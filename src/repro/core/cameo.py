@@ -145,6 +145,7 @@ class Cameo:
         self._sign = -1.0 if query.maximize else 1.0  # internal: minimize
 
         # -- knowledge extraction phase (offline, lines 1-3) ---------------
+        # repro: ignore[wall-clock] -- tuner-phase wall_s telemetry only; never feeds seeded decisions
         t0 = time.perf_counter()
         data_s, names_s = self.d_s.matrix(space, self.counter_names,
                                           maximize=query.maximize)
@@ -161,6 +162,7 @@ class Cameo:
         if not self.reduced_names:
             self.reduced_names = [n for n, _ in ranked_opts[:max(self.k, 2)]]
         self.g_t: Optional[CausalGraph] = None
+        # repro: ignore[wall-clock] -- tuner-phase wall_s telemetry only; never feeds seeded decisions
         self.extraction_s = time.perf_counter() - t0
 
         self._warm: Optional[CausalGP] = None
@@ -204,11 +206,13 @@ class Cameo:
         spent = 0
         while spent < budget:
             k = min(max(int(query_batch), 1), budget - spent)
+            # repro: ignore[wall-clock] -- tuner-phase wall_s telemetry only; never feeds seeded decisions
             t0 = time.perf_counter()
             actions = self._round(env, k, share_dims=share_dims)
             if round_log is not None:
                 round_log.append({"size": len(actions),
                                   "actions": list(actions),
+                                  # repro: ignore[wall-clock] -- tuner-phase wall_s telemetry only; never feeds seeded decisions
                                   "wall_s": round(time.perf_counter() - t0,
                                                   4)})
             spent += len(actions)
@@ -292,9 +296,11 @@ class Cameo:
                                   cold_start=True)
             return props
 
+        # repro: ignore[wall-clock] -- tuner-phase wall_s telemetry only; never feeds seeded decisions
         t0 = time.perf_counter()
         if self._warm is None or self._fitted_at != len(self.d_t):
             self._fit_surrogates()
+        # repro: ignore[wall-clock] -- tuner-phase wall_s telemetry only; never feeds seeded decisions
         self.trace.model_update_s.append(time.perf_counter() - t0)
 
         # -- ε-greedy observation / intervention (eq. 8), per slot ----------
@@ -316,6 +322,7 @@ class Cameo:
             return [Proposal("observe") for _ in kinds]
 
         # -- intervention via the λ-combined acquisition -------------------
+        # repro: ignore[wall-clock] -- tuner-phase wall_s telemetry only; never feeds seeded decisions
         t1 = time.perf_counter()
         cands = self.space.sample(self.rng, self.cand_n)
         best_cfg, _ = self.best
@@ -341,6 +348,7 @@ class Cameo:
         self.trace.lam_fraction.append(float(lam.mean()))
         picks = self._select_batch(cands, alpha, n_int,
                                    measured | infeasible, share_dims)
+        # repro: ignore[wall-clock] -- tuner-phase wall_s telemetry only; never feeds seeded decisions
         self.trace.recommend_s.append(time.perf_counter() - t1)
 
         # introspection only: reads already-computed state, draws no RNG —

@@ -469,6 +469,7 @@ register_family(KernelFamily(
 # contract — every kernel-family knob joins ``launch_space()`` — while the
 # kernel itself reads the geometry off the pool arrays it is handed.
 register_family(KernelFamily(
+    # repro: ignore[kernel-option-unused] -- consumed by the serving stack (pool geometry / chunked admission), not the kernel signature; see comment above
     name="paged_attention",
     pallas="repro.kernels.paged_attention.kernel:paged_decode_attention_pallas",
     ref="repro.kernels.paged_attention.ref:paged_decode_attention_ref",

@@ -152,7 +152,13 @@ def main() -> int:
                 try:
                     dryrun_cell(arch, shape, multi_pod=args.multi_pod,
                                 par_kv=args.parallel, tag=args.tag)
-                except Exception as e:
+                except (ValueError, KeyError, TypeError,
+                        RuntimeError) as e:
+                    # RuntimeError covers jax's XlaRuntimeError (compile /
+                    # lowering failures); the rest are config-cell bugs.
+                    # Recorded on the report and surfaced via exit code —
+                    # anything else (KeyboardInterrupt, MemoryError)
+                    # propagates and kills the sweep.
                     failures.append((arch, shape, repr(e)))
                     print(f"[dryrun] {arch} x {shape}: FAIL {e}")
                     traceback.print_exc()

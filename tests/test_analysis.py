@@ -1,0 +1,527 @@
+"""Tests for the static-analysis subsystem (``repro.analysis``).
+
+Fixture-driven: one known-bad snippet per lint rule (asserting the rule
+fires at the right location), a deliberately aliased paged-attention-style
+index map the race detector must flag, an over-VMEM launch config the
+footprint check must reject, suppression/baseline hygiene, and a clean-tree
+run asserting zero unsuppressed findings.
+"""
+
+import json
+import os
+import textwrap
+
+import pytest
+
+from repro.analysis import engine
+from repro.analysis.__main__ import main as cli_main
+from repro.analysis import audits, contracts, kernels
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _lint(tmp_path, source, name="snippet.py"):
+    path = tmp_path / name
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(textwrap.dedent(source))
+    return contracts.lint_file(str(path))
+
+
+def _lines(findings, rule):
+    return sorted(f.line for f in findings if f.rule == rule)
+
+
+# --------------------------------------------------------------------------
+# lint rules: one bad snippet per rule, with location
+# --------------------------------------------------------------------------
+
+def test_pallas_tpu_outside_compat(tmp_path):
+    findings = _lint(tmp_path, """\
+        from jax.experimental.pallas import tpu as pltpu
+        import jax.experimental.pallas.tpu as other
+    """)
+    assert _lines(findings, "pallas-tpu-outside-compat") == [1, 2]
+
+
+def test_pallas_tpu_attribute_chain(tmp_path):
+    findings = _lint(tmp_path, """\
+        from jax.experimental import pallas as pl
+
+        def f():
+            return pl.tpu.VMEM
+    """)
+    assert 4 in _lines(findings, "pallas-tpu-outside-compat")
+
+
+def test_pallas_import_location(tmp_path):
+    findings = _lint(tmp_path, """\
+        from jax.experimental import pallas as pl
+    """)
+    assert _lines(findings, "pallas-import-location") == [1]
+
+
+def test_pallas_import_legal_in_kernel_file(tmp_path):
+    findings = _lint(tmp_path / "repro" / "kernels" / "fam", """\
+        from jax.experimental import pallas as pl
+    """, name="kernel.py")
+    assert _lines(findings, "pallas-import-location") == []
+
+
+def test_sharding_version_gate(tmp_path):
+    findings = _lint(tmp_path, """\
+        import jax
+
+        def probe():
+            m = getattr(jax.sharding, "get_abstract_mesh", None)
+            return hasattr(jax, "set_mesh") or m
+    """)
+    assert _lines(findings, "sharding-version-gate") == [4, 5]
+
+
+def test_unseeded_randomness(tmp_path):
+    findings = _lint(tmp_path, """\
+        import numpy as np
+        import random
+
+        def f():
+            a = np.random.rand(3)
+            rng = np.random.default_rng()
+            b = random.random()
+            return a, rng, b
+    """)
+    lines = _lines(findings, "unseeded-randomness")
+    assert 2 in lines    # stdlib random import
+    assert 5 in lines    # np.random.rand
+    assert 6 in lines    # argless default_rng()
+    assert 7 in lines    # random.random()
+
+
+def test_seeded_randomness_is_clean(tmp_path):
+    findings = _lint(tmp_path, """\
+        import numpy as np
+
+        def f(seed):
+            return np.random.default_rng(seed).normal(size=3)
+    """)
+    assert _lines(findings, "unseeded-randomness") == []
+
+
+def test_wall_clock(tmp_path):
+    findings = _lint(tmp_path, """\
+        import time
+        from time import perf_counter
+
+        def f():
+            return time.time() + perf_counter()
+    """)
+    assert _lines(findings, "wall-clock") == [5, 5]
+
+
+def test_wall_clock_allow_list():
+    # a real allow-listed module lints clean despite perf_counter use
+    findings = contracts.lint_file(
+        os.path.join(REPO_ROOT, "src", "repro", "serving", "replay.py"))
+    assert _lines(findings, "wall-clock") == []
+
+
+def test_broad_except(tmp_path):
+    findings = _lint(tmp_path, """\
+        def f():
+            try:
+                return 1
+            except Exception:
+                pass
+            try:
+                return 2
+            except:
+                pass
+    """)
+    assert _lines(findings, "broad-except") == [4, 8]
+
+
+def test_span_balance_async(tmp_path):
+    findings = _lint(tmp_path, """\
+        from repro.obs import trace as obs_trace
+
+        def f(uid):
+            obs_trace.active().async_begin("request", uid)
+
+        def g(uid):
+            tr = obs_trace.active()
+            tr.async_begin("step", uid)
+            tr.async_end("step", uid)
+    """)
+    assert _lines(findings, "span-balance") == [4]   # "request" never ends
+
+
+def test_span_balance_unentered_handle(tmp_path):
+    findings = _lint(tmp_path, """\
+        from repro.obs import trace as obs_trace
+
+        def bad():
+            s = obs_trace.span("work")
+            return 1
+
+        def discarded():
+            obs_trace.span("dropped")
+
+        def good():
+            s = obs_trace.span("work")
+            with s:
+                return 1
+
+        def good_inline():
+            with obs_trace.span("work"):
+                return 1
+    """)
+    assert _lines(findings, "span-balance") == [4, 8]
+
+
+def test_parse_error(tmp_path):
+    findings = _lint(tmp_path, "def broken(:\n")
+    assert _lines(findings, "parse-error") == [1]
+
+
+# --------------------------------------------------------------------------
+# suppressions
+# --------------------------------------------------------------------------
+
+def test_suppression_silences_with_reason(tmp_path):
+    path = tmp_path / "s.py"
+    path.write_text(textwrap.dedent("""\
+        import time
+
+        def f():
+            # repro: ignore[wall-clock] -- boot banner only
+            return time.time()
+    """))
+    raw = contracts.lint_file(str(path))
+    rep = engine._apply_suppressions(raw, [str(path)], report_unused=True)
+    assert rep.findings == []
+    assert len(rep.suppressed) == 1
+    assert rep.suppressed[0][1] == "boot banner only"
+
+
+def test_suppression_requires_reason(tmp_path):
+    path = tmp_path / "s.py"
+    path.write_text(textwrap.dedent("""\
+        import time
+
+        def f():
+            return time.time()  # repro: ignore[wall-clock]
+    """))
+    raw = contracts.lint_file(str(path))
+    rep = engine._apply_suppressions(raw, [str(path)], report_unused=True)
+    rules = {f.rule for f in rep.findings}
+    assert "suppression-syntax" in rules   # missing -- reason
+    assert "wall-clock" in rules           # and it does NOT suppress
+
+
+def test_suppression_unknown_rule(tmp_path):
+    path = tmp_path / "s.py"
+    path.write_text("x = 1  # repro: ignore[no-such-rule] -- whatever\n")
+    raw = contracts.lint_file(str(path))
+    rep = engine._apply_suppressions(raw, [str(path)], report_unused=True)
+    assert [f.rule for f in rep.findings] == ["suppression-syntax"]
+
+
+def test_unused_suppression_flagged(tmp_path):
+    path = tmp_path / "s.py"
+    path.write_text("x = 1  # repro: ignore[wall-clock] -- stale excuse\n")
+    rep = engine._apply_suppressions([], [str(path)], report_unused=True)
+    assert [f.rule for f in rep.findings] == ["unused-suppression"]
+
+
+def test_suppression_in_string_literal_ignored(tmp_path):
+    path = tmp_path / "s.py"
+    path.write_text('PATTERN = "# repro: ignore[wall-clock] -- nope"\n')
+    supp, bad = engine.parse_suppressions(path.read_text(), str(path))
+    assert supp == {} and bad == []
+
+
+# --------------------------------------------------------------------------
+# race detector
+# --------------------------------------------------------------------------
+
+ALIASED_PAGED = """\
+import jax
+from jax.experimental import pallas as pl
+from repro import compat
+
+def launch(q, k_pages, v_pages, page_table, *, interpret=False):
+    b, hkv, n_pages, g, d = 2, 2, 4, 4, 64
+    grid_spec = compat.prefetch_scalar_grid_spec(
+        num_scalar_prefetch=1,
+        grid=(b, hkv, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda ib, ih, ip, tbl: (ib, 0, ih, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 64, 1, d), lambda ib, ih, ip, tbl: (tbl[ib, ip], 0, ih, 0)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(k_pages.shape, q.dtype),
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(page_table, q, k_pages, v_pages)
+"""
+
+
+def test_race_detector_flags_aliased_paged_index_map():
+    # a paged-attention-style *output* written through the page table: two
+    # slots whose tables collide write the same pool block from parallel
+    # grid points
+    findings = kernels.analyze_kernel_source(ALIASED_PAGED)
+    races = [f for f in findings if f.rule == "kernel-write-race"]
+    assert races, findings
+    assert races[0].line == 13   # the out_specs BlockSpec line
+
+
+def test_race_detector_simple_alias():
+    src = """\
+import jax
+from jax.experimental import pallas as pl
+
+def launch(x, interpret=False):
+    return pl.pallas_call(
+        kernel,
+        grid=(4, 4),
+        in_specs=[pl.BlockSpec((8, 8), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((8, 8), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x)
+"""
+    findings = kernels.analyze_kernel_source(src)
+    assert [f.rule for f in findings] == ["kernel-write-race"]
+
+
+def test_race_detector_sequential_accumulation_legal():
+    src = """\
+import jax
+from jax.experimental import pallas as pl
+from repro import compat
+
+def launch(x, interpret=False):
+    return pl.pallas_call(
+        kernel,
+        grid=(4, 4),
+        in_specs=[pl.BlockSpec((8, 8), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((8, 8), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(x)
+"""
+    findings = kernels.analyze_kernel_source(src)
+    assert [f.rule for f in findings] == []
+
+
+def test_race_detector_passes_all_registered_families():
+    from repro.kernels import dispatch
+    assert len(dispatch.families()) >= 5
+    for family in dispatch.families():
+        sites, parse_findings = kernels._family_sites(family)
+        assert sites, family
+        race = [f for s in sites for f in kernels.race_findings(s)
+                if f.rule == "kernel-write-race"]
+        assert race == [], (family, race)
+        assert parse_findings == []
+
+
+# --------------------------------------------------------------------------
+# VMEM footprint
+# --------------------------------------------------------------------------
+
+VMEM_FIXTURE = """\
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from repro import compat
+
+def launch(x, block=128, interpret=False):
+    r, d = x.shape
+    return pl.pallas_call(
+        kernel,
+        grid=(r // block,),
+        in_specs=[pl.BlockSpec((block, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        scratch_shapes=[compat.vmem((block, d), jnp.float32)],
+        interpret=interpret,
+    )(x)
+"""
+
+
+def test_vmem_check_rejects_oversized_config():
+    budget = 4 * 2 ** 20
+    findings = kernels.analyze_kernel_source(
+        VMEM_FIXTURE, configs=[{"block": 4096}], vmem_budget=budget)
+    assert [f.rule for f in findings] == ["kernel-vmem-budget"]
+    assert "4096" in findings[0].message
+
+
+def test_vmem_check_passes_small_config():
+    budget = 4 * 2 ** 20
+    findings = kernels.analyze_kernel_source(
+        VMEM_FIXTURE, configs=[{"block": 64}], vmem_budget=budget)
+    assert findings == []
+
+
+def test_vmem_cross_check_covers_every_launch_space_config():
+    from repro.kernels import dispatch
+    kfindings, checked = kernels.check_registered_families()
+    errors = [f for f in kfindings if f.severity == engine.ERROR
+              and f.rule != "kernel-option-unused"]
+    assert errors == []
+    expected = 0
+    for family in dispatch.families():
+        n = 1
+        for o in dispatch.get_family(family).launch_options:
+            n *= len(o.values)
+        expected += n
+    assert checked == expected >= 100
+
+
+def test_static_vmem_monotone_in_block():
+    sites = kernels.parse_kernel_source(VMEM_FIXTURE, "<f>")
+    assert len(sites) == 1
+    small = kernels.static_vmem_bytes(sites[0], {"block": 64})
+    big = kernels.static_vmem_bytes(sites[0], {"block": 4096})
+    assert 0 < small < big
+
+
+# --------------------------------------------------------------------------
+# registry audits
+# --------------------------------------------------------------------------
+
+def test_audits_clean_on_tree():
+    assert audits.run_audits() == []
+
+
+def test_audit_catches_default_outside_domain():
+    from repro.core.spaces import ConfigSpace, Option
+    space = ConfigSpace([Option("serving.bad", (1, 2), default=1)])
+    object.__setattr__(space.options[0], "default", 99)
+    findings = audits._audit_space(space, "fixture", audits)
+    assert [f.rule for f in findings] == ["audit-option-space"]
+
+
+def test_audit_registry_names_reject_malformed():
+    from repro.envs import measure
+    measure.SHIFT_KINDS["Bad Kind!"] = ()
+    try:
+        findings = audits.audit_registry_names()
+        rules = [f.rule for f in findings]
+        # ill-formed kind + empty shift tuple (+ the shifted:<kind> backend
+        # name derived from it)
+        assert rules.count("audit-registry-names") >= 2
+    finally:
+        del measure.SHIFT_KINDS["Bad Kind!"]
+    assert audits.audit_registry_names() == []
+
+
+# --------------------------------------------------------------------------
+# baseline hygiene
+# --------------------------------------------------------------------------
+
+def test_baseline_grandfathers_then_goes_stale(tmp_path):
+    bad = tmp_path / "legacy.py"
+    bad.write_text("import time\nT0 = time.time()\n")
+    baseline = tmp_path / "baseline.json"
+
+    rep = engine.run_analysis([str(bad)], kernels=False, audits=False,
+                              baseline_path=None)
+    assert [f.rule for f in rep.findings] == ["wall-clock"]
+    engine.write_baseline(rep.findings, str(baseline))
+
+    # grandfathered: finding still present, baseline absorbs it
+    rep2 = engine.run_analysis([str(bad)], kernels=False, audits=False,
+                               baseline_path=str(baseline))
+    assert rep2.findings == [] and len(rep2.grandfathered) == 1
+    assert rep2.gate_ok
+
+    # the violation gets fixed but the baseline is not regenerated: the
+    # stale entry is itself a gate failure
+    bad.write_text("T0 = 0.0\n")
+    rep3 = engine.run_analysis([str(bad)], kernels=False, audits=False,
+                               baseline_path=str(baseline))
+    assert [f.rule for f in rep3.findings] == ["stale-baseline"]
+    assert not rep3.gate_ok
+
+
+def test_checked_in_baseline_is_empty():
+    baseline = engine.load_baseline(
+        os.path.join(REPO_ROOT, "analysis_baseline.json"))
+    assert baseline == []
+
+
+# --------------------------------------------------------------------------
+# CLI
+# --------------------------------------------------------------------------
+
+def test_cli_gate_exit_codes(tmp_path, capsys):
+    bad = tmp_path / "bad.py"
+    bad.write_text("import time\nT0 = time.time()\n")
+    missing = str(tmp_path / "no_baseline.json")
+    rc = cli_main([str(bad), "--gate", "--no-kernels", "--no-audits",
+                   "--baseline", missing])
+    assert rc == 1
+    out = capsys.readouterr().out
+    assert "[wall-clock]" in out
+
+    good = tmp_path / "good.py"
+    good.write_text("x = 1\n")
+    rc = cli_main([str(good), "--gate", "--no-kernels", "--no-audits",
+                   "--baseline", missing])
+    assert rc == 0
+
+
+def test_cli_json_and_github_formats(tmp_path, capsys):
+    bad = tmp_path / "bad.py"
+    bad.write_text("import random\n")
+    missing = str(tmp_path / "no_baseline.json")
+    rc = cli_main([str(bad), "--format", "json", "--no-kernels",
+                   "--no-audits", "--baseline", missing])
+    assert rc == 0  # no --gate: report only
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["summary"]["errors"] == 1
+    assert doc["findings"][0]["rule"] == "unseeded-randomness"
+
+    cli_main([str(bad), "--format", "github", "--gate", "--no-kernels",
+              "--no-audits", "--baseline", missing])
+    out = capsys.readouterr().out
+    assert "::error file=" in out and "title=unseeded-randomness" in out
+
+
+def test_cli_list_rules(capsys):
+    assert cli_main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for rule in ("kernel-write-race", "kernel-vmem-budget", "wall-clock",
+                 "broad-except", "stale-baseline"):
+        assert rule in out
+
+
+# --------------------------------------------------------------------------
+# the tree itself is clean
+# --------------------------------------------------------------------------
+
+@pytest.fixture()
+def repo_cwd(monkeypatch):
+    monkeypatch.chdir(REPO_ROOT)
+
+
+def test_clean_tree_zero_unsuppressed_findings(repo_cwd):
+    rep = engine.run_analysis(
+        ["src"], baseline_path=os.path.join(REPO_ROOT,
+                                            "analysis_baseline.json"))
+    assert rep.errors == [], [f"{f.path}:{f.line} [{f.rule}] {f.message}"
+                              for f in rep.errors]
+    assert rep.files_scanned > 100
+    assert rep.configs_checked >= 100
+    # every inline suppression carries its justification
+    assert all(reason for _, reason in rep.suppressed)
